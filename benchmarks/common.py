@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing, CSV emission, tiny-model helpers.
+
+CPU-timing caveat: these harnesses time the pure-JAX ("xla") execution
+path on the host CPU — meaningful for RELATIVE comparisons (binary vs
+float engine, layer by layer), which is what the paper's tables report.
+Absolute TPU numbers come from the dry-run roofline (benchmarks/roofline).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (after compile warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(rows: list[dict], title: str) -> None:
+    if not rows:
+        print(f"# {title}: (no rows)")
+        return
+    cols = list(rows[0].keys())
+    print(f"# {title}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r[c]) for c in cols))
+    print()
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

@@ -1,0 +1,77 @@
+"""VPU-popcount vs MXU-±1 crossover (DESIGN.md §3 beyond-paper analysis).
+
+The paper's xor+popcount algorithm is optimal on wide-bitwise-SIMD
+hardware; the TPU's MXU is ~50× stronger at matmuls than the VPU is at
+int32 ops, so there is a crossover where unpacking to ±1 and feeding the
+systolic array wins despite the 32× data expansion (expansion happens
+HBM→VMEM once per tile, HBM traffic stays packed).
+
+Analytic model per (M, N, K-bit) binary matmul on v5e:
+
+  VPU path:   words = K/32;  t_vpu = M·N·words · c_vpu
+              (c_vpu: xor+popcount+acc ≈ 3 int32 lane-ops at ~2.5e12
+              lane-ops/s ⇒ 1.2e-12 s/word-op)
+  MXU path:   t_mxu = 2·M·N·K / 197e12  (bf16 FLOPs at peak)
+
+  Both read the same packed HBM bytes (M·K/8 + N·K/8).
+
+Host-CPU wall times for the two pure-JAX impls are printed alongside as
+directional evidence (CPU exposes the GEMM engine but not the bitwise
+SIMD, so the measured crossover favors pm1 earlier than the TPU model).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import binary_ops, packing
+
+_VPU_LANE_OPS = 2.5e12     # int32 lane-ops/s (8x128 lanes @ ~940 MHz ·ops)
+_MXU_FLOPS = 197e12
+
+
+def analytic_crossover(m: int, n: int, k_bits: int) -> dict:
+    words = k_bits / 32.0
+    t_vpu = m * n * words * 3.0 / _VPU_LANE_OPS
+    t_mxu = 2.0 * m * n * k_bits / _MXU_FLOPS
+    return dict(t_vpu_us=t_vpu * 1e6, t_mxu_us=t_mxu * 1e6,
+                mxu_wins=bool(t_mxu < t_vpu))
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    m = n = 256
+    for k_bits in (256, 1024, 4096, 16384):
+        a = rng.choice([-1.0, 1.0], size=(m, k_bits)).astype(np.float32)
+        b = rng.choice([-1.0, 1.0], size=(n, k_bits)).astype(np.float32)
+        ap = packing.pack_signs(jnp.asarray(a))
+        bp = packing.pack_signs(jnp.asarray(b))
+
+        t_xor = time_fn(jax.jit(
+            lambda x, y: binary_ops.packed_matmul_counts(x, y,
+                                                         impl="xor")),
+            ap, bp)
+        t_pm1 = time_fn(jax.jit(
+            lambda x, y: binary_ops.packed_matmul_counts(x, y,
+                                                         impl="pm1")),
+            ap, bp)
+        model = analytic_crossover(m, n, k_bits)
+        rows.append(dict(
+            m=m, n=n, k_bits=k_bits,
+            host_xor_ms=round(t_xor * 1e3, 3),
+            host_pm1_ms=round(t_pm1 * 1e3, 3),
+            tpu_model_vpu_us=round(model["t_vpu_us"], 2),
+            tpu_model_mxu_us=round(model["t_mxu_us"], 2),
+            tpu_model_winner="mxu" if model["mxu_wins"] else "vpu",
+        ))
+    emit(rows, "Crossover — paper's VPU popcount vs beyond-paper MXU ±1 "
+               "(host wall + TPU analytic model)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

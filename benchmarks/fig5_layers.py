@@ -1,0 +1,121 @@
+"""Paper Fig 5: per-layer speedup on YOLOv2-Tiny.
+
+The paper measures each conv layer of YOLOv2-Tiny under PhoneBit vs
+CNNdroid-GPU: conv1 ~23× (bit-plane split overhead), conv2-conv8 ~45×
+(up to 62×), conv9 ~3× (stays float).  We time each layer of the SAME
+network on both engines — the packed integer path vs the float conv path —
+at layer-appropriate shapes, reproducing the *shape* of Fig 5: first layer
+< middle binary layers >> float conv9.
+
+Each layer is timed standalone: conv1 through the bit-plane path, middle
+convs as packed binary conv on packed ±1 input, conv9 as the float head.
+The host CPU rides the pm1 (matmul-engine) mode — see table3's docstring
+for the xor-mode caveat.  The analytic ops-bound column (32× middle, 4×
+conv1 = 32/8 planes, 1× conv9) is the hardware-transferable shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from benchmarks.common import emit, time_fn
+from repro.core import binary_conv, layer_integration, packing
+from repro.core.bnn_model import BConv, FloatConv
+from repro.kernels import ops as kops
+from repro.models import paper_nets
+
+PAPER_SPEEDUP = {  # digitized from Fig 5
+    "conv1": 23.0, "conv2": 45.0, "conv3": 45.0, "conv4": 45.0,
+    "conv5": 45.0, "conv6": 45.0, "conv7": 45.0, "conv8": 62.0,
+    "conv9": 3.0,
+}
+
+# Spatial grid entering each conv at full 416 res, scaled by 1/4 to keep
+# the CPU float baselines tractable (channel dims stay exact).
+_SIZES = [416, 208, 104, 52, 26, 13, 13, 13, 13]
+_SCALE = 4
+
+
+def _float_conv_ms(x_float, w, stride, pad):
+    f = jax.jit(lambda xx, ww: lax.conv_general_dilated(
+        xx, ww, (stride, stride), [(pad, pad)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC")))
+    return time_fn(f, x_float, w) * 1e3
+
+
+def run() -> list[dict]:
+    spec, _ = paper_nets.get("yolov2-tiny")
+    convs = [l for l in spec if isinstance(l, (BConv, FloatConv))]
+    rows = []
+    rng = np.random.default_rng(0)
+    key = jax.random.key(0)
+    for i, (layer, size) in enumerate(zip(convs, _SIZES), start=1):
+        h = max(size // _SCALE, 4)
+        lname = f"conv{i}"
+        c_in, c_out = layer.c_in, layer.c_out
+        kk = layer.kernel
+        w = jax.random.normal(key, (kk, kk, c_in, c_out), jnp.float32)
+        x_pm1 = jnp.asarray(rng.choice([-1.0, 1.0],
+                                       (1, h, h, c_in)).astype(np.float32))
+
+        t_float = _float_conv_ms(x_pm1, w, layer.stride, layer.pad)
+
+        if isinstance(layer, BConv) and layer.first:
+            # bit-plane path on uint8 input
+            x_u8 = jnp.asarray(rng.integers(0, 256, (1, h, h, c_in),
+                                            dtype=np.uint8))
+            planes = jax.jit(kops.bitplane_pack)
+            wp = binary_conv.pack_conv_weights(w)  # packed per-plane below
+            cw = packing.num_words(c_in)
+            ww = jnp.tile(jnp.repeat(
+                jnp.left_shift(jnp.int32(1), jnp.arange(8)), cw), kk * kk)
+
+            def first_fwd(x):
+                import repro.core.bitplanes as bp
+                pl = bp.pack_bitplanes(x)
+                n, hh, wwd, np_, cw_ = pl.shape
+                flat = pl.reshape(n, hh, wwd, np_ * cw_)
+                wpp = jnp.repeat(
+                    packing.pack_signs(w, axis=2)[:, :, None], 8, axis=2)
+                wpp = jnp.transpose(wpp, (4, 0, 1, 2, 3)).reshape(c_out, -1)
+                return binary_conv.binary_conv2d_counts(
+                    flat, wpp, kk, kk, layer.stride, layer.pad,
+                    word_weights=ww)
+
+            t_bnn = time_fn(jax.jit(first_fwd), x_u8) * 1e3
+            ops_bound = 32.0 / 8.0
+        elif isinstance(layer, BConv):
+            xp = packing.pack_signs(x_pm1, axis=-1)
+            wp = binary_conv.pack_conv_weights(w)
+            thr = layer_integration.IntegratedParams(
+                jnp.full((c_out,), kk * kk * c_in // 2, jnp.int32),
+                jnp.zeros((c_out,), bool))
+
+            def mid_fwd(xx, wpp):
+                return binary_conv.binary_conv2d_fused(
+                    xx, wpp, thr, kk, kk, layer.stride, layer.pad,
+                    impl="pm1")
+
+            t_bnn = time_fn(jax.jit(mid_fwd), xp, wp) * 1e3
+            ops_bound = 32.0
+        else:  # conv9: stays float in both engines (SIMD dot, paper ~3x)
+            t_bnn = t_float
+            ops_bound = 1.0
+
+        rows.append(dict(
+            layer=lname, grid=h, c_in=c_in, c_out=c_out,
+            float_ms=round(t_float, 3), bnn_ms=round(t_bnn, 3),
+            host_speedup=round(t_float / max(t_bnn, 1e-9), 2),
+            ops_bound_speedup=ops_bound,
+            paper_speedup=PAPER_SPEEDUP[lname],
+        ))
+    emit(rows, "Fig 5 — per-layer speedup, YOLOv2-Tiny "
+               "(host wall + ops-bound shape)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

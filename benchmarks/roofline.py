@@ -1,0 +1,70 @@
+"""§Roofline: three-term analysis from the cached dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and prints
+per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs_per_device / 197 TF/s   (bf16 peak, v5e)
+    memory     = HLO_bytes_per_device / 819 GB/s   (HBM)
+    collective = wire_bytes_per_device / 50 GB/s   (ICI link)
+
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), the
+roofline fraction (score), and a one-line "what would move the bound"
+note derived from the dominant term.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+ADVICE = {
+    "compute": "more useful-FLOPs fraction: cut remat recompute / masked "
+               "attention waste, or grow per-device batch",
+    "memory": "cut bytes/FLOP: fuse attention chain (Pallas flash "
+              "kernel), fewer f32 staging buffers, larger matmul tiles",
+    "collective": "cut wire bytes: reshard weights (FSDP gather in bf16), "
+                  "overlap collectives with compute, 2D weight layouts",
+}
+
+
+def load(out_dir: str = "artifacts/dryrun") -> list[dict]:
+    rows = []
+    for f in sorted(pathlib.Path(out_dir).glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def run(out_dir: str = "artifacts/dryrun") -> list[dict]:
+    rows = load(out_dir)
+    ok = [r for r in rows if not r.get("skipped") and not r.get("failed")]
+    print("# §Roofline — per-cell three-term analysis (TPU v5e: "
+          f"{PEAK_FLOPS / 1e12:.0f} TF bf16, {HBM_BW / 1e9:.0f} GB/s HBM, "
+          f"{ICI_BW / 1e9:.0f} GB/s ICI)")
+    hdr = (f"{'arch':24} {'shape':12} {'mesh':8} {'t_comp_s':>9} "
+           f"{'t_mem_s':>9} {'t_coll_s':>9} {'bound':>10} {'useful':>7} "
+           f"{'roofline':>8}")
+    print(hdr)
+    for r in ok:
+        print(f"{r['arch']:24} {r['shape']:12} {r['mesh']:8} "
+              f"{r['t_compute']:9.4f} {r['t_memory']:9.4f} "
+              f"{r['t_collective']:9.4f} {r['bottleneck']:>10} "
+              f"{r['useful_flops_ratio']:7.3f} "
+              f"{r['roofline_fraction']:8.3f}")
+    skipped = [r for r in rows if r.get("skipped")]
+    failed = [r for r in rows if r.get("failed")]
+    print(f"\n{len(ok)} cells analyzed, {len(skipped)} skipped "
+          f"(long_500k on full-attention archs), {len(failed)} failed")
+    for r in failed:
+        print("  FAILED:", r["arch"], r["shape"], r.get("mesh"))
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        print(f"\nworst roofline fraction: {worst['arch']} "
+              f"{worst['shape']} ({worst['roofline_fraction']:.3f}) — "
+              f"{ADVICE[worst['bottleneck']]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

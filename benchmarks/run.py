@@ -1,0 +1,51 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One harness per paper table/figure + the roofline reader (which consumes
+cached dry-run artifacts if present).  Each prints a CSV block.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (crossover, fig5_layers, roofline,
+                            table2_model_size, table3_runtime,
+                            table4_energy)
+
+    t3_rows = None
+    for name, fn in (
+            ("table2_model_size", table2_model_size.run),
+            ("table3_runtime", table3_runtime.run),
+            ("fig5_layers", fig5_layers.run),
+            ("crossover", crossover.run),
+    ):
+        try:
+            out = fn()
+            if name == "table3_runtime":
+                t3_rows = out
+        except Exception:
+            print(f"!! {name} failed:")
+            traceback.print_exc()
+
+    try:
+        table4_energy.run(t3_rows)
+    except Exception:
+        print("!! table4_energy failed:")
+        traceback.print_exc()
+
+    if pathlib.Path("artifacts/dryrun").exists():
+        try:
+            roofline.run()
+        except Exception:
+            print("!! roofline failed:")
+            traceback.print_exc()
+    else:
+        print("# §Roofline: no artifacts/dryrun cache — run "
+              "`python -m repro.launch.dryrun --all` first")
+
+
+if __name__ == "__main__":
+    main()

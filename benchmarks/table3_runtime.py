@@ -1,0 +1,111 @@
+"""Paper Tab III: end-to-end inference runtime, BNN engine vs float CNN.
+
+The paper compares PhoneBit against CNNdroid / TFLite float executions on
+two phones.  The reproducible core of that table is the *engine-level*
+speedup: the same network executed (a) by the packed binary engine and
+(b) as a full-precision CNN — both through identical JAX/XLA plumbing, so
+the ratio isolates the PhoneBit technique (1-bit packed ops + integrated
+layers) exactly as Tab III isolates it from framework overheads.
+
+Networks run at reduced spatial resolution on CPU (the full 224/416
+float CNNs take minutes/frame on this host); both engines see the SAME
+input, so the ratio is preserved.  ``--full`` runs paper-size inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import bnn_model
+from repro.models import paper_nets
+from repro.serving import PhoneBitEngine
+
+PAPER_SD855_MS = {  # (TFLite CPU, TFLite CPU-quant, PhoneBit) ms
+    "alexnet": (87, 24, 9.8),
+    "yolov2-tiny": (306, 88, 22.6),
+    "vgg16": (932, 252, 73.8),
+}
+
+# Reduced benchmark inputs (same nets, smaller spatial extent).
+REDUCED_HW = {"alexnet": 67, "vgg16": 64, "yolov2-tiny": 96}
+# AlexNet's 6x6x256 fc6 input requires specific sizes: 67 -> conv1 15
+# -> pool 7 -> ... we instead cut the nets at the conv stack for the
+# reduced run (the conv stack is >95% of both engines' time).
+
+
+def _conv_stack(spec):
+    """Strip dense layers: benchmark the convolutional body."""
+    return [l for l in spec
+            if not isinstance(l, (bnn_model.BDense, bnn_model.FloatDense))]
+
+
+def run(full: bool = False) -> list[dict]:
+    """Times three executions of each net:
+
+    * float CNN (the Tab III baseline frameworks' path),
+    * BNN engine, ``xor`` mode — the paper's Eqn-1 algorithm.  On a host
+      CPU XLA lowers popcount to scalar bit arithmetic, so this mode is
+      SLOW here; its target hardware is wide-bitwise-SIMD (the paper's
+      mobile GPU / the TPU VPU via the Pallas kernels),
+    * BNN engine, ``pm1`` mode — the matmul-engine reformulation
+      (cnt = (bits − ±1·dot)/2), which rides the platform's optimized
+      GEMM and carries the 32× weight-bandwidth win everywhere.
+    """
+    rows = []
+    rng = np.random.default_rng(0)
+    for name in ("alexnet", "yolov2-tiny", "vgg16"):
+        spec, (h, w, c) = paper_nets.get(name)
+        if not full:
+            spec = _conv_stack(spec)
+            h = w = REDUCED_HW[name]
+        params = bnn_model.init_params(jax.random.key(0), spec)
+        x = jnp.asarray(rng.integers(0, 256, (1, h, w, c), dtype=np.uint8))
+
+        engine_xor = PhoneBitEngine.from_trained(params, spec, (h, w),
+                                                 matmul_mode="xla")
+        t_xor = time_fn(engine_xor, x)
+        engine_pm1 = PhoneBitEngine.from_trained(params, spec, (h, w),
+                                                 matmul_mode="xla_pm1")
+        t_pm1 = time_fn(engine_pm1, x)
+        float_fwd = jax.jit(
+            lambda p, xx: paper_nets.cnn_float_forward(p, spec, xx))
+        t_float = time_fn(float_fwd, params, x)
+
+        tfl_cpu, tfl_q, pb = PAPER_SD855_MS[name]
+        # Hardware-transferable bounds: the technique's win is 32× fewer
+        # weight/activation bytes and 32× fewer reduction ops per SIMD
+        # lane (one int32 word = 32 MACs).  Wall-clock follows whichever
+        # bound the platform exposes; this host CPU exposes neither
+        # (XLA popcount = scalar bit math, see module docstring), the
+        # paper's mobile GPU and the TPU VPU kernels expose both.
+        from repro.core import converter
+        packed = converter.convert(params, spec, (h, w))
+        wb_float = converter.float_model_bytes(params)
+        wb_bnn = converter.model_bytes(packed)
+        rows.append(dict(
+            network=name, input=f"{h}x{w}",
+            float_ms=round(t_float * 1e3, 2),
+            bnn_xor_ms=round(t_xor * 1e3, 2),
+            bnn_pm1_ms=round(t_pm1 * 1e3, 2),
+            host_speedup_pm1=round(t_float / t_pm1, 2),
+            host_speedup_xor=round(t_float / t_xor, 2),
+            bw_bound_speedup=round(wb_float / wb_bnn, 1),
+            ops_bound_speedup=32.0,
+            paper_speedup_vs_tflite=round(tfl_cpu / pb, 2),
+            paper_speedup_vs_tflite_quant=round(tfl_q / pb, 2),
+        ))
+    emit(rows, "Table III — runtime (ms/frame), float CNN vs BNN engine "
+               "(xor = paper Eqn 1, pm1 = matmul reformulation; *_bound = "
+               "hardware-transferable roofline ratios)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(full=ap.parse_args().full)

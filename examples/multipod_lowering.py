@@ -1,0 +1,36 @@
+"""Inspect one multi-pod lowering: mesh, shardings, collectives.
+
+    PYTHONPATH=src python examples/multipod_lowering.py [arch] [shape]
+
+Builds the 2×16×16 (512-chip) production mesh out of placeholder host
+devices, lowers one (arch × shape) training/serving step against it, and
+prints the memory analysis plus the collective-op census — the same
+machinery the full dry-run sweep runs over all 40 cells.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_DRYRUN_F32"] = "1"
+
+import sys
+
+from repro.distributed.sharding import rules_for_mesh
+from repro.launch import analysis, cells
+from repro.launch.mesh import make_production_mesh
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "vit-l16"
+shape = sys.argv[2] if len(sys.argv) > 2 else "serve_b128"
+
+mesh = make_production_mesh(multi_pod=True)
+print(f"mesh: {dict(mesh.shape)} = {mesh.size} chips")
+rules = rules_for_mesh(mesh)
+build = cells.build_cell(arch, shape, rules)
+with mesh:
+    lowered = build.lower()
+    compiled = lowered.compile()
+print(compiled.memory_analysis())
+m = analysis.collect(compiled, mesh.size)
+print(f"per-device: {m['flops'] / 1e9:.2f} GFLOP, "
+      f"{m['bytes'] / 2**30:.2f} GiB accessed, "
+      f"{m['wire'] / 2**20:.1f} MiB wire")
+print("collectives:", m["counts"])

@@ -1,0 +1,48 @@
+"""Quickstart: the PhoneBit deployment flow in ~40 lines (paper Fig 2/3).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. define a small BNN (conv/pool/dense spec, first layer bit-plane),
+2. convert trained (here: random) float params to the packed artifact,
+3. save + reload the compressed artifact,
+4. run packed integer inference and check it against the float oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bnn_model
+from repro.core.bnn_model import BConv, BDense, FloatDense, Pool
+from repro.serving import PhoneBitEngine
+
+# (1) network spec — the Fig 3 conv/pool/dense calls, declaratively
+spec = [
+    BConv(3, 64, kernel=3, stride=1, pad=1, first=True),   # bit-plane input
+    Pool(2, 2),
+    BConv(64, 128, kernel=3, stride=1, pad=1),             # xor+popcount
+    Pool(2, 2),
+    BDense(8 * 8 * 128, 256),                              # binary dense
+    FloatDense(256, 10),                                   # float head
+]
+params = bnn_model.init_params(jax.random.key(0), spec)
+
+# (2) offline conversion: fold BN -> integer thresholds, bit-pack weights
+engine = PhoneBitEngine.from_trained(params, spec, input_hw=(32, 32))
+print(f"packed model: {engine.model_bytes / 2**10:.1f} KiB "
+      f"(float would be {sum(np.asarray(v).size * 4 for p in params for v in p.values()) / 2**10:.1f} KiB)")
+
+# (3) the compressed artifact round-trips
+engine.save_artifact("/tmp/quickstart_bnn.npz")
+engine2 = PhoneBitEngine.from_artifact("/tmp/quickstart_bnn.npz", spec,
+                                       (32, 32))
+
+# (4) packed integer inference == float sign oracle
+x = jnp.asarray(np.random.default_rng(0).integers(
+    0, 256, (4, 32, 32, 3), dtype=np.uint8))
+logits = engine2(x)
+oracle = bnn_model.float_forward(params, spec, x)
+np.testing.assert_allclose(np.asarray(logits), np.asarray(oracle),
+                           rtol=1e-4, atol=1e-4)
+print("packed engine matches float oracle ✓")
+print("logits[0]:", np.asarray(logits[0]).round(2))

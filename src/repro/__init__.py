@@ -1,0 +1,20 @@
+"""repro: PhoneBit (DATE'19) on TPU — a JAX/Pallas BNN serving + training
+framework with multi-pod distribution.
+
+Layers (bottom-up):
+  core          the paper's contribution: packing, xor-popcount ops,
+                layer integration, bit-planes, converter, BNN engine model
+  kernels       Pallas TPU kernels (+ pure-jnp oracles)
+  models        model zoo: LM transformers (dense/MoE), DiT, ViT,
+                ConvNeXt, EfficientNet, and the paper's own networks
+  configs       --arch registry: 10 assigned architectures × shapes
+  distributed   sharding rules, pipeline parallelism, grad compression,
+                straggler monitoring
+  optim         AdamW / SGD, schedules, STE-aware updates
+  data          deterministic shardable pipelines
+  checkpoint    atomic async checkpoints, elastic re-mesh restore
+  serving       PhoneBit engine, batch scheduler, KV-cache manager
+  launch        production mesh, dry-run driver, train/serve loops
+"""
+
+__version__ = "1.0.0"

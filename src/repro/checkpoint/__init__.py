@@ -1,0 +1,19 @@
+"""Checkpointing: atomic save/restore, async writer, elastic re-mesh.
+
+store     atomic npz-tree checkpoints (tmp + os.replace), retention,
+          async background writer so the train loop never blocks on disk
+elastic   restore onto a *different* mesh: arrays are saved as full host
+          arrays and re-placed with the new mesh's shardings, so a job can
+          restart with a different device count (survivor set after a node
+          failure) without format conversion
+
+At 1000+-node scale the npz host-array format would be replaced by a
+distributed array store (tensorstore/OCDBT) with per-host shards; the
+interface (save/restore/elastic_restore) is format-agnostic on purpose and
+DESIGN.md records the swap point.
+"""
+
+from repro.checkpoint.store import (CheckpointManager, latest_step,
+                                    restore, save)
+
+__all__ = ["CheckpointManager", "latest_step", "restore", "save"]

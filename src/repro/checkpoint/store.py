@@ -1,0 +1,145 @@
+"""Atomic, restart-safe checkpoint store (npz pytree format).
+
+Write protocol (crash-safe):
+  1. serialize the pytree to ``<dir>/tmp.<step>.npz`` (unique temp name),
+  2. ``os.replace`` to ``<dir>/step_<step>.npz`` — atomic on POSIX,
+  3. update retention (keep last N), never deleting the file just written.
+
+A checkpoint is therefore either fully present or absent; a job killed
+mid-write leaves only a tmp file that the next run ignores and overwrites.
+
+``CheckpointManager`` adds an async writer thread: ``save_async`` snapshots
+the pytree to host memory (device_get) on the caller's thread — cheap — and
+does the (slow) compression+disk work in the background, so the training
+loop never blocks on storage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import re
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(directory: str | os.PathLike, step: int, tree: Any) -> str:
+    """Atomically write one checkpoint.  Returns the final path."""
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    tmp = d / f"tmp.{step}.{os.getpid()}.npz"
+    final = d / f"step_{step}.npz"
+    np.savez_compressed(tmp, **_flatten(tree))
+    os.replace(tmp, final)
+    return str(final)
+
+
+def latest_step(directory: str | os.PathLike) -> int | None:
+    d = pathlib.Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(m.group(1)) for f in d.iterdir()
+             if (m := _STEP_RE.search(f.name))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str | os.PathLike, step: int, like: Any,
+            shardings: Any | None = None) -> Any:
+    """Restore into the structure of ``like``.
+
+    ``shardings``: optional pytree of NamedSharding — arrays are placed
+    with these shardings (elastic restore: the mesh may differ from the
+    one that saved; full host arrays reshard transparently).
+    """
+    path = pathlib.Path(directory) / f"step_{step}.npz"
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(flat))
+    out = []
+    for (p, leaf), sh in zip(flat, shard_leaves):
+        key = jax.tree_util.keystr(p)
+        arr = data[key]
+        expected = tuple(leaf.shape)
+        if tuple(arr.shape) != expected:
+            raise ValueError(f"checkpoint leaf {key} has shape "
+                             f"{arr.shape}, expected {expected}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # ---- sync ----------------------------------------------------------
+    def save(self, step: int, tree: Any) -> str:
+        path = save(self.directory, step, tree)
+        self._retain()
+        return path
+
+    # ---- async ---------------------------------------------------------
+    def save_async(self, step: int, tree: Any) -> None:
+        """Snapshot to host now, write in the background."""
+        self.wait()  # one in-flight write at a time
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
+
+        def work():
+            try:
+                save(self.directory, step, host_tree)
+                self._retain()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ---- restore ---------------------------------------------------------
+    def latest_step(self) -> int | None:
+        return latest_step(self.directory)
+
+    def restore_latest(self, like: Any, shardings: Any | None = None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, restore(self.directory, step, like, shardings)
+
+    def _retain(self) -> None:
+        d = pathlib.Path(self.directory)
+        files = sorted(
+            ((int(m.group(1)), f) for f in d.iterdir()
+             if (m := _STEP_RE.search(f.name))))
+        for _, f in files[:-self.keep] if self.keep else []:
+            f.unlink(missing_ok=True)

@@ -1,0 +1,67 @@
+"""Architecture registry: ``--arch <id>`` resolution for every assigned
+architecture (plus the paper's own BNN workloads in ``paper_bnn``).
+
+Each arch module exports FULL (exact published config), SMOKE (reduced
+same-family config for CPU tests), FAMILY and SHAPES.  ``get(arch_id)``
+returns the record; ``all_cells()`` enumerates the 40 (arch × shape)
+dry-run cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+from repro.configs.shapes import FAMILY_SHAPES, Shape
+
+ARCH_IDS = (
+    "granite-moe-3b-a800m",
+    "qwen3-moe-30b-a3b",
+    "minitron-8b",
+    "command-r-35b",
+    "dit-l2",
+    "dit-xl2",
+    "efficientnet-b7",
+    "convnext-b",
+    "vit-l16",
+    "vit-h14",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchRecord:
+    arch_id: str
+    family: str
+    full: Any
+    smoke: Any
+    shapes: tuple[Shape, ...]
+
+    def shape(self, name: str) -> Shape:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.arch_id} has no shape {name!r}; "
+                       f"have {[s.name for s in self.shapes]}")
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_")
+
+
+def get(arch_id: str) -> ArchRecord:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(_module_name(arch_id))
+    return ArchRecord(arch_id=arch_id, family=mod.FAMILY, full=mod.FULL,
+                      smoke=mod.SMOKE, shapes=tuple(mod.SHAPES))
+
+
+def all_cells() -> list[tuple[str, Shape]]:
+    """All 40 (arch, shape) dry-run cells, skips included."""
+    cells = []
+    for arch_id in ARCH_IDS:
+        rec = get(arch_id)
+        for shape in rec.shapes:
+            cells.append((arch_id, shape))
+    return cells

@@ -1,0 +1,23 @@
+"""dit-l2 [arXiv:2212.09748; paper] — DiT-L/2.
+
+img_res=256 (latent 32²×4), patch=2, 24L d_model=1024 16H.
+"""
+
+from repro.configs.shapes import DIFFUSION_SHAPES
+from repro.models.dit import DiTConfig
+
+FAMILY = "diffusion"
+SHAPES = DIFFUSION_SHAPES
+
+# Production defaults carry the hillclimbed settings (EXPERIMENTS §Perf
+# H1: Megatron-SP residual + dots remat, +54% roofline); the baseline
+# artifacts in artifacts/dryrun/ were measured with both off.
+FULL = DiTConfig(
+    name="dit-l2", img_res=256, patch=2, n_layers=24, d_model=1024,
+    n_heads=16, seq_shard=True, remat_policy="dots",
+)
+
+SMOKE = DiTConfig(
+    name="dit-smoke", img_res=64, patch=2, n_layers=2, d_model=64,
+    n_heads=4, n_classes=10,
+)

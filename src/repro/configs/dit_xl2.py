@@ -1,0 +1,22 @@
+"""dit-xl2 [arXiv:2212.09748; paper] — DiT-XL/2.
+
+img_res=256 (latent 32²×4), patch=2, 28L d_model=1152 16H.
+"""
+
+from repro.configs.shapes import DIFFUSION_SHAPES
+from repro.models.dit import DiTConfig
+
+FAMILY = "diffusion"
+SHAPES = DIFFUSION_SHAPES
+
+# Production defaults carry the hillclimbed settings (EXPERIMENTS §Perf
+# H1); baseline artifacts were measured with both off.
+FULL = DiTConfig(
+    name="dit-xl2", img_res=256, patch=2, n_layers=28, d_model=1152,
+    n_heads=16, seq_shard=True, remat_policy="dots",
+)
+
+SMOKE = DiTConfig(
+    name="dit-xl-smoke", img_res=64, patch=2, n_layers=2, d_model=48,
+    n_heads=4, n_classes=10,
+)

@@ -1,0 +1,20 @@
+"""vit-h14 [arXiv:2010.11929; paper] — ViT-H/14.
+
+img_res=224 patch=14 32L d_model=1280 16H d_ff=5120.
+"""
+
+from repro.configs.shapes import VISION_SHAPES
+from repro.models.vit import ViTConfig
+
+FAMILY = "vision"
+SHAPES = VISION_SHAPES
+
+FULL = ViTConfig(
+    name="vit-h14", img_res=224, patch=14, n_layers=32, d_model=1280,
+    n_heads=16, d_ff=5120, pos_grid=16,
+)
+
+SMOKE = ViTConfig(
+    name="vit-h-smoke", img_res=28, patch=7, n_layers=2, d_model=32,
+    n_heads=4, d_ff=64, n_classes=10, pos_grid=4,
+)

@@ -1,0 +1,19 @@
+"""PhoneBit core: the paper's contribution as composable JAX modules.
+
+C1  binary_ops          xor+popcount dot/matmul (Eqn 1)
+C2  packing             channel compression, NHWC packed layout
+C4  layer_integration   conv+BN+sign folded to integer thresholds (Eqns 3-9)
+C6  binary_conv         packed conv / dense / OR-pool with in-register packing
+C8  bitplanes           first-layer bit-plane decomposition (Eqn 2)
+C9  converter           trained params -> compressed PhoneBit artifact (Fig 2)
+     bnn_model          spec -> training forward / packed inference forward
+     binarize           sign + straight-through estimator (training substrate)
+"""
+
+from repro.core import (binarize, binary_conv, binary_ops, bitplanes,
+                        bnn_model, converter, layer_integration, packing)
+
+__all__ = [
+    "binarize", "binary_conv", "binary_ops", "bitplanes", "bnn_model",
+    "converter", "layer_integration", "packing",
+]

@@ -1,0 +1,39 @@
+"""Sign binarization + straight-through estimator (training substrate).
+
+The paper is inference-only; training binarized networks (to produce the
+models the engine serves) follows Courbariaux et al. [3]: forward pass uses
+sign(x) in {-1, +1}, backward pass passes gradients through where |x| <= 1
+(the "hard tanh" STE).  Latent weights stay float and are clipped to [-1, 1].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def ste_sign(x: jnp.ndarray) -> jnp.ndarray:
+    """sign(x) in {-1, +1} with straight-through gradient (|x| <= 1 window)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _ste_fwd(x):
+    return ste_sign(x), x
+
+
+def _ste_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_sign.defvjp(_ste_fwd, _ste_bwd)
+
+
+def clip_latent(w: jnp.ndarray) -> jnp.ndarray:
+    """Clip latent float weights to [-1, 1] after each optimizer step."""
+    return jnp.clip(w, -1.0, 1.0)
+
+
+def binarize01(x: jnp.ndarray) -> jnp.ndarray:
+    """{0,1}-bit view of sign(x) (bit 1 <-> +1), int32."""
+    return (x >= 0).astype(jnp.int32)

@@ -1,0 +1,147 @@
+"""Packed binary convolution + pooling on the NHWC channel-compressed layout.
+
+The convolution is im2col over *packed* words: spatial patches are gathered
+with static strided slices (the packed channel words stay contiguous,
+preserving the locality-friendly layout of §V-A), then a single
+xor-popcount matmul produces counts for all output positions x filters.
+
+Padding semantics: spatial padding inserts 0-words == 64 channels of -1,
+i.e. the -1-padding convention of the reference BNN implementations (see
+DESIGN.md §3.2).  The float oracles use the identical convention, so packed
+results are bit-exact against them.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import binary_ops, layer_integration, packing
+
+
+def conv_out_size(size: int, k: int, stride: int, pad: int) -> int:
+    return (size + 2 * pad - k) // stride + 1
+
+
+def extract_patches_packed(x: jnp.ndarray, kh: int, kw: int,
+                           stride: int = 1, pad: int = 0) -> jnp.ndarray:
+    """im2col on packed input.
+
+    x: (N, H, W, Cw) int32 (Cw may itself be 8*Cw for bit-plane input that
+       was reshaped to a flat word dim — the function is agnostic).
+    Returns (N, OH, OW, kh*kw*Cw) int32; patch words ordered (kh, kw, Cw)
+    major-to-minor so filter packing must match (`pack_conv_weights`).
+    """
+    n, h, w, cw = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = conv_out_size(h, kh, stride, pad)
+    ow = conv_out_size(w, kw, stride, pad)
+    slices = []
+    for i in range(kh):
+        for j in range(kw):
+            s = lax.slice(
+                x,
+                (0, i, j, 0),
+                (n, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, cw),
+                (1, stride, stride, 1),
+            )
+            slices.append(s)
+    return jnp.concatenate(slices, axis=-1)
+
+
+def pack_conv_weights(w: jnp.ndarray) -> jnp.ndarray:
+    """(KH, KW, C, O) +-1/float weights -> (O, KH*KW*Cw) packed filters.
+
+    Word order matches extract_patches_packed: (kh, kw, word) major->minor.
+    """
+    kh, kw, c, o = w.shape
+    packed = packing.pack_signs(w, axis=2)          # (KH, KW, Cw, O)
+    packed = jnp.transpose(packed, (3, 0, 1, 2))    # (O, KH, KW, Cw)
+    return packed.reshape(o, kh * kw * packed.shape[-1])
+
+
+def binary_conv2d_counts(x_packed: jnp.ndarray, w_packed: jnp.ndarray,
+                         kh: int, kw: int, stride: int = 1, pad: int = 0,
+                         word_weights: jnp.ndarray | None = None,
+                         impl: str = "xor") -> jnp.ndarray:
+    """Counts cnt[n,oh,ow,o] = sum_w ww[w] * popcount(patch ^ filter).
+
+    x_packed: (N, H, W, Cw); w_packed: (O, kh*kw*Cw).
+    """
+    patches = extract_patches_packed(x_packed, kh, kw, stride, pad)
+    n, oh, ow, pw = patches.shape
+    flat = patches.reshape(n * oh * ow, pw)
+    cnt = binary_ops.packed_matmul_counts(flat, w_packed,
+                                          word_weights=word_weights,
+                                          impl=impl)
+    return cnt.reshape(n, oh, ow, w_packed.shape[0])
+
+
+def binary_conv2d_dot(x_packed, w_packed, k_valid: int, kh: int, kw: int,
+                      stride: int = 1, pad: int = 0) -> jnp.ndarray:
+    """+-1 dot products: K - 2*cnt (paper Eqn 1), int32 NHWO."""
+    cnt = binary_conv2d_counts(x_packed, w_packed, kh, kw, stride, pad)
+    return k_valid - 2 * cnt
+
+
+def binary_conv2d_fused(x_packed: jnp.ndarray, w_packed: jnp.ndarray,
+                        p: layer_integration.IntegratedParams,
+                        kh: int, kw: int, stride: int = 1, pad: int = 0,
+                        word_weights: jnp.ndarray | None = None,
+                        impl: str = "xor") -> jnp.ndarray:
+    """Integrated conv+BN+binarize producing *packed* output (paper C4+C6).
+
+    Output: (N, OH, OW, Ow) int32 — output filters binarized against the
+    integer thresholds and bit-packed along the output-channel dim, the
+    TPU analogue of Fig 4's 8-filters-per-thread byte packing.
+    """
+    cnt = binary_conv2d_counts(x_packed, w_packed, kh, kw, stride, pad,
+                               word_weights=word_weights, impl=impl)
+    bits = layer_integration.apply_threshold(cnt, p)
+    return packing.pack_bits(bits, axis=-1)
+
+
+def binary_or_maxpool(x_packed: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
+    """Max-pool on packed binary maps = bitwise OR over the window.
+
+    sign() is monotone, so maxpool-then-binarize == binarize-then-OR-pool;
+    pooling never leaves the packed domain (no unpack round-trip).
+    """
+    n, h, w, cw = x_packed.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    out = None
+    for i in range(window):
+        for j in range(window):
+            s = lax.slice(
+                x_packed,
+                (0, i, j, 0),
+                (n, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, cw),
+                (1, stride, stride, 1),
+            )
+            out = s if out is None else (out | s)
+    return out
+
+
+def binary_dense_fused(x_packed: jnp.ndarray, w_packed: jnp.ndarray,
+                       p: layer_integration.IntegratedParams,
+                       impl: str = "xor") -> jnp.ndarray:
+    """Integrated dense+BN+binarize with packed output (..., Ow)."""
+    cnt = binary_ops.binary_dense_counts(x_packed, w_packed, impl=impl)
+    bits = layer_integration.apply_threshold(cnt, p)
+    return packing.pack_bits(bits, axis=-1)
+
+
+def final_float_dense(x_packed: jnp.ndarray, w: jnp.ndarray,
+                      b: jnp.ndarray | None, channels: int,
+                      dtype=jnp.float32) -> jnp.ndarray:
+    """Paper's final full-precision layer: unpack +-1 acts, float matmul."""
+    xv = packing.unpack_to_pm1(x_packed, channels, dtype=dtype)
+    out = xv @ w.astype(dtype)
+    if b is not None:
+        out = out + b.astype(dtype)
+    return out

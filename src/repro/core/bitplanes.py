@@ -1,0 +1,48 @@
+"""First-layer bit-plane decomposition (paper §III-B, Eqn 2).
+
+8-bit input images are split into 8 bit-planes I_n in {0,1}; binary
+convolution runs on each plane against the same binary weights and the
+results are recombined as s = sum_n 2^(n-1) <I_n . W>.
+
+Layout: planes are packed along the channel dimension per plane —
+(N, H, W, C) uint8  ->  (N, H, W, 8, Cw) int32 — so a patch flattens to
+KH*KW*8*Cw words and a *single* weighted-popcount matmul (word weight
+2^(n-1) per plane) produces the whole Eqn-2 sum.  See
+``layer_integration.fold_bn_first_layer`` for how the weighted count folds
+into the integer threshold.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+
+NUM_PLANES = 8
+
+
+def split_bitplanes(x: jnp.ndarray) -> jnp.ndarray:
+    """(..., C) uint8/int -> (..., 8, C) int32 bits, plane n at index n-1."""
+    x = jnp.asarray(x).astype(jnp.int32)
+    shifts = jnp.arange(NUM_PLANES, dtype=jnp.int32)
+    return (x[..., None, :] >> shifts[:, None]) & 1
+
+
+def pack_bitplanes(x: jnp.ndarray) -> jnp.ndarray:
+    """(N, H, W, C) uint8 -> (N, H, W, 8, Cw) packed int32 planes."""
+    return packing.pack_bits(split_bitplanes(x), axis=-1)
+
+
+def plane_word_weights(c_words: int) -> jnp.ndarray:
+    """(8*Cw,) int32 word-weight vector: 2^(n-1) for every word of plane n."""
+    w = jnp.left_shift(jnp.int32(1), jnp.arange(NUM_PLANES, dtype=jnp.int32))
+    return jnp.repeat(w, c_words)
+
+
+def recombine_planes(dots: jnp.ndarray, axis: int = -2) -> jnp.ndarray:
+    """Reference Eqn 2: sum_n 2^(n-1) * dots_n along ``axis`` (plane dim)."""
+    n = dots.shape[axis]
+    w = jnp.left_shift(jnp.int32(1), jnp.arange(n, dtype=jnp.int32))
+    shape = [1] * dots.ndim
+    shape[axis] = n
+    return jnp.sum(dots * w.reshape(shape), axis=axis)

@@ -1,0 +1,255 @@
+"""BNN network assembly: spec -> (training forward | packed inference engine).
+
+This is the heart of the PhoneBit engine.  A network is a sequence of layer
+specs (Fig 3's conv/pool/dense calls).  Two execution paths share one set of
+trained parameters:
+
+* ``float_forward`` — the training path (STE sign, float BN), also the
+  end-to-end oracle for the packed engine.
+* ``packed_forward`` — the deployed path: everything between the 8-bit input
+  and the final full-precision layer is integer xor/popcount/compare on
+  channel-packed words (paper §V, §VI).  Produced from trained params by
+  :mod:`repro.core.converter` (Fig 2's offline transform).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import (binarize, binary_conv, binary_ops, bitplanes,
+                        layer_integration, packing)
+
+
+# --------------------------------------------------------------------------
+# Layer specs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BConv:
+    """Integrated binary conv + BN + binarize (first=True: bit-plane input)."""
+    c_in: int
+    c_out: int
+    kernel: int = 3
+    stride: int = 1
+    pad: int = 1
+    first: bool = False
+
+    @property
+    def k_valid(self) -> int:
+        return self.kernel * self.kernel * self.c_in
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    """Max pool.  pad = (lo, hi) on both spatial dims; pad values are -1
+    (float path) / 0-words (packed path), which agree in the +-1 domain so
+    OR-pooling stays the exact oracle (YOLOv2-Tiny's stride-1 pool6 pads
+    (0, 1) to keep 13x13, darknet-style)."""
+    window: int = 2
+    stride: int = 2
+    pad: tuple[int, int] = (0, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class BDense:
+    """Integrated binary dense + BN + binarize; input is flattened NHWC."""
+    d_in: int
+    d_out: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatDense:
+    """Paper's final full-precision layer (kept float, like conv9 in Fig 5)."""
+    d_in: int
+    d_out: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatConv:
+    """Full-precision conv (YOLOv2-Tiny's conv9: 1x1, float in/out)."""
+    c_in: int
+    c_out: int
+    kernel: int = 1
+    stride: int = 1
+    pad: int = 0
+
+
+LayerSpec = Any  # BConv | Pool | BDense | FloatDense | FloatConv
+
+
+# --------------------------------------------------------------------------
+# Parameter init (latent float weights for training)
+# --------------------------------------------------------------------------
+
+def init_params(key: jax.Array, spec: Sequence[LayerSpec]) -> list[dict]:
+    params: list[dict] = []
+    for layer in spec:
+        if isinstance(layer, BConv):
+            key, k1 = jax.random.split(key)
+            w = jax.random.uniform(k1, (layer.kernel, layer.kernel,
+                                        layer.c_in, layer.c_out),
+                                   minval=-1.0, maxval=1.0, dtype=jnp.float32)
+            params.append(dict(
+                w=w,
+                gamma=jnp.ones((layer.c_out,), jnp.float32),
+                beta=jnp.zeros((layer.c_out,), jnp.float32),
+                mu=jnp.zeros((layer.c_out,), jnp.float32),
+                var=jnp.ones((layer.c_out,), jnp.float32),
+            ))
+        elif isinstance(layer, BDense):
+            key, k1 = jax.random.split(key)
+            w = jax.random.uniform(k1, (layer.d_in, layer.d_out),
+                                   minval=-1.0, maxval=1.0, dtype=jnp.float32)
+            params.append(dict(
+                w=w,
+                gamma=jnp.ones((layer.d_out,), jnp.float32),
+                beta=jnp.zeros((layer.d_out,), jnp.float32),
+                mu=jnp.zeros((layer.d_out,), jnp.float32),
+                var=jnp.ones((layer.d_out,), jnp.float32),
+            ))
+        elif isinstance(layer, FloatDense):
+            key, k1 = jax.random.split(key)
+            scale = 1.0 / jnp.sqrt(jnp.float32(layer.d_in))
+            params.append(dict(
+                w=jax.random.normal(k1, (layer.d_in, layer.d_out),
+                                    jnp.float32) * scale,
+                b=jnp.zeros((layer.d_out,), jnp.float32),
+            ))
+        elif isinstance(layer, FloatConv):
+            key, k1 = jax.random.split(key)
+            fan = layer.kernel * layer.kernel * layer.c_in
+            params.append(dict(
+                w=jax.random.normal(
+                    k1, (layer.kernel, layer.kernel, layer.c_in,
+                         layer.c_out), jnp.float32) / jnp.sqrt(
+                             jnp.float32(fan)),
+                b=jnp.zeros((layer.c_out,), jnp.float32),
+            ))
+        else:
+            params.append({})
+    return params
+
+
+# --------------------------------------------------------------------------
+# Training / oracle path (float, STE)
+# --------------------------------------------------------------------------
+
+_BN_EPS = 1e-4
+
+
+def _bn(x, p):
+    sigma = jnp.sqrt(p["var"] + _BN_EPS)
+    return p["gamma"] * (x - p["mu"]) / sigma + p["beta"]
+
+
+def float_forward(params: Sequence[dict], spec: Sequence[LayerSpec],
+                  x_uint8: jnp.ndarray, *, train: bool = False) -> jnp.ndarray:
+    """Float path.  x_uint8: (N, H, W, C) uint8.  Returns final float logits.
+
+    Uses -1 padding for SAME-padded binary convs so it is the exact oracle
+    of the packed engine (DESIGN.md §3.2).  With train=True, sign() uses the
+    straight-through estimator so the whole net is differentiable w.r.t. the
+    latent float weights.
+    """
+    sign = binarize.ste_sign if train else (
+        lambda v: jnp.where(v >= 0, 1.0, -1.0).astype(v.dtype))
+    x = x_uint8.astype(jnp.float32)
+    for layer, p in zip(spec, params):
+        if isinstance(layer, BConv):
+            wb = sign(p["w"])
+            if layer.first:
+                # Integer-valued input conv; padding with 0 (a real 0 pixel).
+                x = lax.conv_general_dilated(
+                    x, wb, (layer.stride, layer.stride),
+                    [(layer.pad, layer.pad)] * 2,
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            else:
+                # +-1 activations, -1 padding == pad the float map with -1.
+                xp = jnp.pad(x, ((0, 0), (layer.pad, layer.pad),
+                                 (layer.pad, layer.pad), (0, 0)),
+                             constant_values=-1.0)
+                x = lax.conv_general_dilated(
+                    xp, wb, (layer.stride, layer.stride), "VALID",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = sign(_bn(x, p))
+        elif isinstance(layer, Pool):
+            if layer.pad != (0, 0):
+                x = jnp.pad(x, ((0, 0), layer.pad, layer.pad, (0, 0)),
+                            constant_values=-1.0)
+            x = lax.reduce_window(
+                x, -jnp.inf, lax.max,
+                (1, layer.window, layer.window, 1),
+                (1, layer.stride, layer.stride, 1), "VALID")
+        elif isinstance(layer, BDense):
+            x = x.reshape(x.shape[0], -1)
+            x = x @ sign(p["w"])
+            x = sign(_bn(x, p))
+        elif isinstance(layer, FloatDense):
+            x = x.reshape(x.shape[0], -1)
+            x = x @ p["w"] + p["b"]
+        elif isinstance(layer, FloatConv):
+            x = lax.conv_general_dilated(
+                x, p["w"], (layer.stride, layer.stride),
+                [(layer.pad, layer.pad)] * 2,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+    return x
+
+
+# --------------------------------------------------------------------------
+# Packed inference path (the engine)
+# --------------------------------------------------------------------------
+
+def packed_forward(packed: Sequence[dict], spec: Sequence[LayerSpec],
+                   x_uint8: jnp.ndarray, impl: str = "xor") -> jnp.ndarray:
+    """Deployed path on channel-packed int32 words (paper §V/§VI).
+
+    ``packed`` comes from :func:`repro.core.converter.convert`.  All hidden
+    layers are integer ops; only the final FloatDense touches floats.
+    ``impl`` selects the count algorithm ("xor" = paper Eqn 1, "pm1" =
+    matmul-engine reformulation — see binary_ops.packed_matmul_counts).
+    """
+    x = None
+    for layer, p in zip(spec, packed):
+        if isinstance(layer, BConv):
+            if layer.first:
+                planes = bitplanes.pack_bitplanes(x_uint8)      # (N,H,W,8,Cw)
+                n, h, w, np_, cw = planes.shape
+                flat = planes.reshape(n, h, w, np_ * cw)
+                x = binary_conv.binary_conv2d_fused(
+                    flat, p["w_packed"], p["thresh"],
+                    layer.kernel, layer.kernel, layer.stride, layer.pad,
+                    word_weights=p["word_weights"])
+            else:
+                x = binary_conv.binary_conv2d_fused(
+                    x, p["w_packed"], p["thresh"],
+                    layer.kernel, layer.kernel, layer.stride, layer.pad,
+                    impl=impl)
+        elif isinstance(layer, Pool):
+            if layer.pad != (0, 0):
+                # 0-words == all -1 channels: identity under OR-pooling.
+                x = jnp.pad(x, ((0, 0), layer.pad, layer.pad, (0, 0)))
+            x = binary_conv.binary_or_maxpool(x, layer.window, layer.stride)
+        elif isinstance(layer, BDense):
+            flat = x.reshape(x.shape[0], -1)
+            x = binary_conv.binary_dense_fused(flat, p["w_packed"],
+                                               p["thresh"], impl=impl)
+        elif isinstance(layer, FloatDense):
+            # Unpack per position *before* flattening so per-word channel
+            # padding never leaks into the float matmul.
+            xv = packing.unpack_to_pm1(x, p["c_per_pos"], dtype=jnp.float32)
+            xv = xv.reshape(xv.shape[0], -1)
+            x = xv @ p["w"] + p["b"]
+        elif isinstance(layer, FloatConv):
+            # Final float conv (paper conv9): unpack the +-1 activations
+            # and run a plain float conv, same as the paper's SIMD `dot`.
+            xv = packing.unpack_to_pm1(x, p["c_per_pos"], dtype=jnp.float32)
+            x = lax.conv_general_dilated(
+                xv, p["w"], (layer.stride, layer.stride),
+                [(layer.pad, layer.pad)] * 2,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+    return x

@@ -1,0 +1,167 @@
+"""Offline model transform (paper Fig 2): trained params -> packed engine.
+
+Takes the latent float parameters of a trained BNN (``bnn_model.init_params``
+format) and produces the compressed PhoneBit artifact:
+
+* binary conv/dense weights bit-packed along the channel dim (C2),
+* BN folded into integer popcount thresholds (C4, Eqns 5-9),
+* first-layer bit-plane word weights + w_sum constants (C8, Eqn 2),
+* the final full-precision layer kept in float (paper Fig 5, conv9).
+
+Also provides ``save_artifact``/``load_artifact`` (.npz) — the "compressed
+PhoneBit format" that gets shipped to the device — and ``model_bytes`` for
+the Tab-II model-size comparison.
+"""
+
+from __future__ import annotations
+
+import io
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplanes, binary_conv, layer_integration, packing
+from repro.core.bnn_model import (BConv, BDense, FloatConv, FloatDense,
+                                  LayerSpec, Pool, _BN_EPS)
+
+
+def _sigma(var):
+    return jnp.sqrt(var + _BN_EPS)
+
+
+def convert(params: Sequence[dict], spec: Sequence[LayerSpec],
+            input_hw: tuple[int, int]) -> list[dict]:
+    """Fold + pack trained float params into the deployable packed pytree."""
+    packed: list[dict] = []
+    h, w = input_hw
+    c = None  # current channel count; None until the first conv sets it
+    flat_d = None  # set once the activation is flattened (after BDense)
+
+    for layer, p in zip(spec, params):
+        if isinstance(layer, BConv):
+            if layer.first:
+                cw = packing.num_words(layer.c_in)
+                wp = packing.pack_signs(p["w"], axis=2)            # KH,KW,Cw,O
+                wp = jnp.repeat(wp[:, :, None, :, :], bitplanes.NUM_PLANES,
+                                axis=2)                            # KH,KW,8,Cw,O
+                wp = jnp.transpose(wp, (4, 0, 1, 2, 3)).reshape(
+                    layer.c_out, -1)                               # O, K*8*Cw
+                word_weights = jnp.tile(bitplanes.plane_word_weights(cw),
+                                        layer.kernel * layer.kernel)
+                wb = jnp.where(p["w"] >= 0, 1.0, -1.0)
+                w_sum = jnp.sum(wb, axis=(0, 1, 2))                # (O,)
+                thresh = layer_integration.fold_bn_first_layer(
+                    layer.k_valid, w_sum, p["gamma"], p["beta"], p["mu"],
+                    _sigma(p["var"]), bias=p.get("b", 0.0))
+                packed.append(dict(w_packed=wp, word_weights=word_weights,
+                                   thresh=thresh))
+            else:
+                wp = binary_conv.pack_conv_weights(p["w"])
+                thresh = layer_integration.fold_bn(
+                    layer.k_valid, p["gamma"], p["beta"], p["mu"],
+                    _sigma(p["var"]), bias=p.get("b", 0.0))
+                packed.append(dict(w_packed=wp, thresh=thresh))
+            h = binary_conv.conv_out_size(h, layer.kernel, layer.stride,
+                                          layer.pad)
+            w = binary_conv.conv_out_size(w, layer.kernel, layer.stride,
+                                          layer.pad)
+            c = layer.c_out
+        elif isinstance(layer, Pool):
+            h = (h + sum(layer.pad) - layer.window) // layer.stride + 1
+            w = (w + sum(layer.pad) - layer.window) // layer.stride + 1
+            packed.append({})
+        elif isinstance(layer, BDense):
+            if flat_d is None:
+                # Flattening a spatial map: pack per position to match the
+                # engine's flatten of (N, H, W, Cw) words.
+                assert h * w * c == layer.d_in, (
+                    f"BDense d_in={layer.d_in} != {h}x{w}x{c}")
+                w4 = p["w"].reshape(h, w, c, layer.d_out)
+                wp = binary_conv.pack_conv_weights(w4)             # O, H*W*Cw
+            else:
+                assert flat_d == layer.d_in
+                wp = packing.pack_signs(p["w"], axis=0)            # Dw, O
+                wp = jnp.transpose(wp, (1, 0))                     # O, Dw
+            thresh = layer_integration.fold_bn(
+                layer.d_in, p["gamma"], p["beta"], p["mu"],
+                _sigma(p["var"]), bias=p.get("b", 0.0))
+            packed.append(dict(w_packed=wp, thresh=thresh))
+            flat_d = layer.d_out
+            c = layer.d_out
+        elif isinstance(layer, FloatDense):
+            c_per_pos = flat_d if flat_d is not None else c
+            if flat_d is None:
+                assert h * w * c == layer.d_in
+            packed.append(dict(w=p["w"].astype(jnp.float32),
+                               b=p["b"].astype(jnp.float32),
+                               c_per_pos=c_per_pos))
+        elif isinstance(layer, FloatConv):
+            assert c == layer.c_in, (c, layer.c_in)
+            packed.append(dict(w=p["w"].astype(jnp.float32),
+                               b=p["b"].astype(jnp.float32),
+                               c_per_pos=c))
+            h = binary_conv.conv_out_size(h, layer.kernel, layer.stride,
+                                          layer.pad)
+            w = binary_conv.conv_out_size(w, layer.kernel, layer.stride,
+                                          layer.pad)
+            c = layer.c_out
+        else:
+            packed.append({})
+    return packed
+
+
+# --------------------------------------------------------------------------
+# Serialized artifact ("compressed PhoneBit format")
+# --------------------------------------------------------------------------
+
+def save_artifact(path: str, packed: Sequence[dict]) -> None:
+    flat: dict[str, np.ndarray] = {}
+    for i, layer in enumerate(packed):
+        for k, v in layer.items():
+            if isinstance(v, layer_integration.IntegratedParams):
+                flat[f"{i}.{k}.threshold"] = np.asarray(v.threshold)
+                flat[f"{i}.{k}.sign_flip"] = np.asarray(v.sign_flip)
+            else:
+                flat[f"{i}.{k}"] = np.asarray(v)
+    np.savez_compressed(path, **flat)
+
+
+def load_artifact(path: str) -> list[dict]:
+    data = np.load(path)
+    n_layers = 1 + max(int(k.split(".")[0]) for k in data.files)
+    packed: list[dict] = [dict() for _ in range(n_layers)]
+    pending: dict[tuple[int, str], dict] = {}
+    for k in data.files:
+        parts = k.split(".")
+        i = int(parts[0])
+        if len(parts) == 3:  # IntegratedParams field
+            pending.setdefault((i, parts[1]), {})[parts[2]] = jnp.asarray(data[k])
+        else:
+            packed[i][parts[1]] = jnp.asarray(data[k])
+    for (i, name), fields in pending.items():
+        packed[i][name] = layer_integration.IntegratedParams(
+            fields["threshold"], fields["sign_flip"])
+    return packed
+
+
+def model_bytes(packed: Sequence[dict]) -> int:
+    """Size of the deployable packed model (Tab II 'BNN' column)."""
+    total = 0
+    for layer in packed:
+        for k, v in layer.items():
+            if isinstance(v, layer_integration.IntegratedParams):
+                total += v.threshold.size * 4 + v.sign_flip.size  # bool = 1B
+            elif k not in ("word_weights", "c_per_pos"):
+                # word weights / layout metadata are code, not model
+                total += np.asarray(v).size * np.asarray(v).dtype.itemsize
+    return total
+
+
+def float_model_bytes(params: Sequence[dict]) -> int:
+    """Size of the full-precision counterpart (Tab II 'CNN' column, fp32)."""
+    total = 0
+    for layer in params:
+        for v in layer.values():
+            total += np.asarray(v).size * 4
+    return total

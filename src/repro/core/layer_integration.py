@@ -1,0 +1,94 @@
+"""Layer integration (paper §V-B + §VI-C, Eqns 3-9).
+
+Conv + batch-norm + binarization are folded into a single operator.  The
+paper computes, offline,
+
+    xi = mu - beta * sigma / gamma - b                      (Eqn 6)
+
+and evaluates Eqn (8) at runtime with the branch-free logic form
+``x4 = (A xor B) or C`` (Eqn 9).
+
+On TPU we take this one step further ("integer-threshold strengthening",
+DESIGN.md §3.4).  The binary-conv pre-activation is x1 = K - 2*cnt where cnt
+is the xor-popcount, so the float comparison against xi becomes an *integer*
+comparison against a per-channel threshold t on cnt itself:
+
+    gamma > 0:  x4 = 1  iff  x1 >= xi  iff  cnt <= floor((K - xi)/2)
+    gamma < 0:  x4 = 1  iff  x1 <= xi  iff  cnt >= ceil((K - xi)/2)
+
+Precomputing (t, s) with s = [gamma < 0] gives the runtime epilogue
+
+    x4 = (cnt <= t) xor s
+
+two integer VPU ops, no float math, no divergence — Eqn (9) in its
+TPU-native form.  The equality cases match Eqn (8) exactly (x1 == xi maps to
+x4 = 1 for either sign of gamma).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class IntegratedParams(NamedTuple):
+    """Offline-folded parameters of one integrated conv+BN+sign layer."""
+    threshold: jnp.ndarray  # (O,) int32 — compare against popcount
+    sign_flip: jnp.ndarray  # (O,) bool  — xor after the compare ([gamma < 0])
+
+
+def fold_bn(k_valid: int | jnp.ndarray,
+            gamma: jnp.ndarray, beta: jnp.ndarray,
+            mu: jnp.ndarray, sigma: jnp.ndarray,
+            bias: jnp.ndarray | float = 0.0) -> IntegratedParams:
+    """Fold BN(+bias) into an integer popcount threshold (offline, Eqn 6).
+
+    k_valid: number of valid bits per output (K = KH*KW*C_in), scalar or (O,).
+    sigma: sqrt(running_var + eps) — the paper's sigma.
+    """
+    xi = mu - beta * sigma / gamma - bias                       # Eqn 6
+    half = (jnp.asarray(k_valid, jnp.float32) - xi) / 2.0
+    t_pos = jnp.floor(half)                                     # gamma > 0
+    t_neg = jnp.ceil(half) - 1.0                                # gamma < 0
+    s = gamma < 0
+    t = jnp.where(s, t_neg, t_pos)
+    return IntegratedParams(t.astype(jnp.int32), s)
+
+
+def fold_bn_first_layer(k_valid: int, w_sum: jnp.ndarray,
+                        gamma: jnp.ndarray, beta: jnp.ndarray,
+                        mu: jnp.ndarray, sigma: jnp.ndarray,
+                        bias: jnp.ndarray | float = 0.0) -> IntegratedParams:
+    """Fold BN into a threshold on the *bit-plane-weighted* popcount (Eqn 2).
+
+    The first layer consumes 8-bit inputs split into bit-planes I_n in {0,1}.
+    With b in {0,1} and w in {-1,+1}:  b.w = ((2b-1).w + sum(w)) / 2, so
+        dot_n = (K - 2*cnt_n + w_sum) / 2
+        s     = sum_n 2^(n-1) dot_n = 255*(K + w_sum)/2 - wcnt,
+        wcnt  = sum_n 2^(n-1) cnt_n   (the weighted popcount the kernel emits)
+    (K + w_sum is always even, so the constant is an exact integer.)
+    Thresholding s >= xi then becomes wcnt <= C1 - xi with
+    C1 = 255*(K + w_sum)/2, handled with the same floor/ceil split as fold_bn.
+
+    w_sum: (O,) sum of the +-1 weights of each filter (2*popcount(w) - K).
+    """
+    xi = mu - beta * sigma / gamma - bias
+    c1 = 255.0 * (jnp.asarray(k_valid, jnp.float32) + w_sum.astype(jnp.float32)) / 2.0
+    lim = c1 - xi
+    t_pos = jnp.floor(lim)        # gamma > 0: bit = wcnt <= t_pos
+    t_neg = jnp.ceil(lim) - 1.0   # gamma < 0: bit = wcnt >= ceil(lim)
+    s = gamma < 0
+    t = jnp.where(s, t_neg, t_pos)
+    return IntegratedParams(t.astype(jnp.int32), s)
+
+
+def apply_threshold(cnt: jnp.ndarray, p: IntegratedParams) -> jnp.ndarray:
+    """Runtime epilogue: {0,1} bits, x4 = (cnt <= t) xor s  (Eqn 9, int form)."""
+    return (jnp.less_equal(cnt, p.threshold) ^ p.sign_flip).astype(jnp.int32)
+
+
+def bn_reference(x1: jnp.ndarray, gamma, beta, mu, sigma, bias=0.0) -> jnp.ndarray:
+    """Float oracle of Eqns (3)-(7): binarize(BN(x1 + bias)) in {0,1}."""
+    x3 = gamma * ((x1 + bias) - mu) / sigma + beta
+    return (x3 >= 0).astype(jnp.int32)

@@ -1,0 +1,83 @@
+"""Channel compression (paper §V-A): bit-packing along the channel dimension.
+
+PhoneBit packs binary activations/weights along the channel dimension of an
+NHWC tensor so that the packed words are minor-most (contiguous) in memory —
+the "locality-friendly data layout".  On TPU the natural word is ``int32``
+(one VPU lane element); a 128-lane VREG row then holds 4096 binary channels.
+
+Encoding convention (used consistently across the whole framework):
+    bit 1  <->  +1
+    bit 0  <->  -1
+Packing is LSB-first within each 32-bit word.  Channels that do not fill the
+last word are padded with 0-bits in *both* operands of any xor-popcount, so
+they contribute nothing to the popcount and the valid-length correction
+``dot = K_valid - 2*cnt`` stays exact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def num_words(channels: int) -> int:
+    """Number of int32 words needed to hold ``channels`` bits."""
+    return -(-channels // WORD_BITS)
+
+
+def _bit_weights() -> jnp.ndarray:
+    return jnp.left_shift(
+        jnp.uint32(1), jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    )
+
+
+def pack_bits(bits: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Pack an array of {0,1} values into int32 words along ``axis``.
+
+    ``bits`` may be bool or any integer/float dtype containing 0/1 values.
+    Returns an int32 array whose ``axis`` dim is ``num_words(C)``.
+    """
+    bits = jnp.asarray(bits)
+    axis = axis % bits.ndim
+    c = bits.shape[axis]
+    w = num_words(c)
+    pad = w * WORD_BITS - c
+    if pad:
+        cfg = [(0, 0)] * bits.ndim
+        cfg[axis] = (0, pad)
+        bits = jnp.pad(bits, cfg)
+    bits = jnp.moveaxis(bits, axis, -1)
+    bits = bits.reshape(bits.shape[:-1] + (w, WORD_BITS)).astype(jnp.uint32)
+    words = jnp.sum(bits * _bit_weights(), axis=-1, dtype=jnp.uint32)
+    words = jax.lax.bitcast_convert_type(words, jnp.int32)
+    return jnp.moveaxis(words, -1, axis)
+
+
+def unpack_bits(words: jnp.ndarray, channels: int, axis: int = -1) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`; returns int32 {0,1} array."""
+    words = jnp.moveaxis(jnp.asarray(words), axis % words.ndim, -1)
+    u = jax.lax.bitcast_convert_type(words, jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (u[..., :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(bits.shape[:-2] + (bits.shape[-2] * WORD_BITS,))
+    bits = bits[..., :channels].astype(jnp.int32)
+    return jnp.moveaxis(bits, -1, axis % (bits.ndim))
+
+
+def pack_signs(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Binarize a float array by sign (>= 0 -> bit 1) and pack along ``axis``."""
+    return pack_bits((x >= 0), axis=axis)
+
+
+def unpack_to_pm1(words: jnp.ndarray, channels: int, axis: int = -1,
+                  dtype: jnp.dtype = jnp.bfloat16) -> jnp.ndarray:
+    """Unpack words to a +-1-valued array of ``dtype`` (for MXU / float paths)."""
+    bits = unpack_bits(words, channels, axis=axis)
+    return (2 * bits - 1).astype(dtype)
+
+
+def popcount(words: jnp.ndarray) -> jnp.ndarray:
+    """Number of set bits per int32 word (int32 result)."""
+    return jax.lax.population_count(words)

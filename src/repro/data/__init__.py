@@ -1,0 +1,14 @@
+"""Data pipelines: deterministic, shardable, restart-safe synthetic sources.
+
+No dataset downloads exist in this environment, so the pipelines generate
+synthetic batches — but through the same interface a real loader would use:
+host-local generation of each host's shard, ``jax.make_array_from_process_
+local_data``-style assembly (single-host here: device_put with the batch
+sharding), and a step-indexed PRNG so a restarted job resumes the exact
+batch sequence (checkpoint stores only the step counter).
+"""
+
+from repro.data.pipeline import (ImagePipeline, LatentPipeline,
+                                 TokenPipeline)
+
+__all__ = ["ImagePipeline", "LatentPipeline", "TokenPipeline"]

@@ -1,0 +1,12 @@
+"""Distributed runtime: sharding rules, pipeline parallelism, compression,
+straggler monitoring, elastic re-meshing.
+
+sharding      mesh-aware PartitionSpec rules per model family (DP/TP/SP/EP)
+pipeline      optional gpipe-style pipeline parallelism over the pod axis
+compression   int8 gradient compression with error feedback (slow links)
+straggler     step-time outlier detection + mitigation hooks
+"""
+
+from repro.distributed import compression, pipeline, sharding, straggler
+
+__all__ = ["compression", "pipeline", "sharding", "straggler"]

@@ -1,0 +1,124 @@
+"""Mesh-aware sharding rules (DP / FSDP / TP / SP / EP).
+
+One :class:`Rules` object describes how a mesh's axes are used:
+
+* ``batch`` axes — data parallelism.  ``("pod", "data")`` on the multi-pod
+  mesh (pods are DP replicas for the dry-run), ``("data",)`` single-pod.
+* ``model`` axis — tensor/sequence/expert parallelism, context-dependent:
+  - LM activations: the *sequence* dim of the residual stream (SP), so every
+    matmul parallelizes over tokens regardless of head-count divisibility;
+  - attention: Q-head sharding when ``n_heads % model == 0`` (Megatron TP,
+    enables the triangular causal schedule), else sequence-sharded Q;
+  - MoE: the expert dim (EP) with explicit all_to_all (see models.moe);
+  - decode KV caches: the sequence dim (flash-decoding SP);
+  - vision/diffusion: channel / head dims.
+* FSDP — parameters are additionally sharded over the ``data`` axis
+  (ZeRO-3 style); with scan-over-layers the per-layer all-gather happens
+  once per scan step, overlapped by XLA with the previous layer's compute.
+
+All helpers are divisibility-safe: a dim that does not divide the axis size
+falls back to replication (GSPMD/pjit reject non-divisible input shardings),
+and the fallback is recorded so the dry-run can report it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Axis-usage rules for one mesh."""
+    mesh: Mesh
+    batch: tuple[str, ...] = ("data",)
+    model: str = "model"
+    fsdp: str = "data"
+
+    # ---- axis sizes -------------------------------------------------------
+    def axis_size(self, name: str | tuple[str, ...] | None) -> int:
+        if name is None:
+            return 1
+        if isinstance(name, tuple):
+            size = 1
+            for n in name:
+                size *= self.mesh.shape[n]
+            return size
+        return self.mesh.shape[name]
+
+    @property
+    def dp(self) -> int:
+        return self.axis_size(self.batch)
+
+    @property
+    def tp(self) -> int:
+        return self.axis_size(self.model)
+
+    @property
+    def n_devices(self) -> int:
+        return self.dp * self.tp
+
+    # ---- divisibility-safe spec atoms --------------------------------------
+    def shard_if(self, dim: int, axes: str | tuple[str, ...] | None):
+        """Return ``axes`` if ``dim`` divides their product, else None."""
+        if axes is None:
+            return None
+        if dim % self.axis_size(axes) == 0:
+            return axes
+        return None
+
+    def batch_spec(self, batch_size: int):
+        """Best batch-dim sharding: all batch axes, progressively fewer."""
+        axes = self.batch
+        while axes:
+            if batch_size % self.axis_size(axes) == 0:
+                return axes if len(axes) > 1 else axes[0]
+            axes = axes[1:]
+        return None
+
+    def tokens_spec(self, n_tokens: int):
+        """Token dim over batch axes + model axis (flattened (B*S, D))."""
+        full = (*self.batch, self.model)
+        if n_tokens % self.axis_size(full) == 0:
+            return full
+        return self.batch_spec(n_tokens)
+
+    # ---- shardings ----------------------------------------------------------
+    def sharding(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def tree_shardings(self, spec_tree: Any) -> Any:
+        # None is a structural empty node (e.g. SGD's nu=None), not a spec.
+        return jax.tree.map(
+            self.named, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+    def constrain(self, x, *spec):
+        return jax.lax.with_sharding_constraint(x, self.sharding(*spec))
+
+
+def single_pod_rules(mesh: Mesh) -> Rules:
+    return Rules(mesh=mesh, batch=("data",))
+
+
+def multi_pod_rules(mesh: Mesh) -> Rules:
+    return Rules(mesh=mesh, batch=("pod", "data"))
+
+
+def rules_for_mesh(mesh: Mesh) -> Rules:
+    """Infer rules from the mesh's axis names."""
+    if "pod" in mesh.axis_names:
+        return multi_pod_rules(mesh)
+    return single_pod_rules(mesh)
+
+
+def spec_tree_like(params: Any, fn) -> Any:
+    """Build a PartitionSpec pytree by mapping ``fn(path, leaf)``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [fn(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

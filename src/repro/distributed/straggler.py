@@ -1,0 +1,85 @@
+"""Straggler detection + mitigation hooks (host-side, framework layer).
+
+At thousand-node scale, slow hosts (thermal throttling, failing HBM, noisy
+neighbors) silently gate every synchronous collective.  The monitor keeps an
+EWMA + variance of step wall-times and flags steps whose duration exceeds
+``mean + k * std`` (k=3 default).  Mitigation is pluggable:
+
+* ``on_warn`` — log/telemetry (default),
+* ``on_persistent`` — called after N consecutive outliers: the launcher's
+  hook can demote the host, trigger an elastic re-mesh (checkpoint ->
+  restart with the survivor set; see checkpoint.elastic), or re-balance
+  microbatches.
+
+The monitor is deliberately dependency-free and unit-testable by injecting
+synthetic step times (tests/test_distributed.py simulates a degrading host).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold_sigma: float = 3.0
+    # Relative guard: a step must ALSO be min_ratio slower than the mean.
+    # Near-constant step times make sigma microscopic; without the guard
+    # normal jitter (mean + 4 sigma = mean + 0.1%) would flag.
+    min_ratio: float = 0.3
+    min_samples: int = 10
+    persistent_after: int = 5
+    ewma_alpha: float = 0.05
+    on_warn: Callable[[int, float, float], None] | None = None
+    on_persistent: Callable[[int], None] | None = None
+
+    _mean: float = 0.0
+    _var: float = 0.0
+    _n: int = 0
+    _consecutive: int = 0
+    _t0: float | None = None
+    flagged_steps: list = dataclasses.field(default_factory=list)
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self, step: int) -> bool:
+        assert self._t0 is not None, "start() not called"
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        return self.observe(step, dt)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Record one step duration.  Returns True if flagged as outlier."""
+        flagged = False
+        if self._n >= self.min_samples:
+            std = math.sqrt(max(self._var, 1e-12))
+            if (dt > self._mean + self.threshold_sigma * std
+                    and dt > self._mean * (1 + self.min_ratio)):
+                flagged = True
+                self.flagged_steps.append((step, dt))
+                self._consecutive += 1
+                if self.on_warn:
+                    self.on_warn(step, dt, self._mean)
+                if (self._consecutive >= self.persistent_after
+                        and self.on_persistent):
+                    self.on_persistent(step)
+                    self._consecutive = 0
+            else:
+                self._consecutive = 0
+        # EWMA update only with non-outlier samples so one bad host does
+        # not poison the baseline.
+        if not flagged:
+            a = self.ewma_alpha if self._n else 1.0
+            delta = dt - self._mean
+            self._mean += a * delta
+            self._var = (1 - a) * (self._var + a * delta * delta)
+        self._n += 1
+        return flagged
+
+    @property
+    def mean_step_time(self) -> float:
+        return self._mean

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for PhoneBit's compute hot-spots.
+
+xnor_popcount_matmul     paper-faithful binary matmul (VPU, Eqn 1)
+fused_conv_bn_binarize   integrated conv+BN+sign+pack (C4/C6, Eqns 5-9)
+bitplane_pack            first-layer bit-plane split+pack (C8, Eqn 2)
+mxu_pm1_matmul           beyond-paper MXU path (unpack-to-bf16 in VMEM)
+flash_attention          fused attention (score chain never leaves VMEM —
+                         the LM/DiT/ViT hot-spot; custom_vjp bwd)
+ops                      jit'd wrappers + mode dispatch
+ref                      pure-jnp oracles
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

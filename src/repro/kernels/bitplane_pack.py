@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: first-layer bit-plane split + channel packing (C8).
+
+(N, H, W, C) 8-bit input -> (N, H, W, 8*Cw) int32: 8 bit-planes (Eqn 2),
+each packed along the channel dim (C2).  Pure data movement + bit twiddling;
+one pass over the image, packed words written once.  The output word layout
+is plane-major per pixel — plane n occupies words [n*Cw, (n+1)*Cw) — matching
+``bitplanes.plane_word_weights`` and the first-layer filter packing in
+``converter.convert``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bitplanes import NUM_PLANES
+from repro.core.packing import WORD_BITS, num_words
+
+def _pack_w(width: int) -> jnp.ndarray:
+    """(1, 1, 1, width) int32 weights bit i -> 1<<i, built in-kernel.
+
+    Iota + shift keeps the kernel free of captured constants; bit 31 wraps
+    to INT32_MIN (correct modular int32 packing).
+    """
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, width), 3)
+    return jax.lax.shift_left(jnp.int32(1), shifts)
+
+
+def _kernel(x_ref, o_ref, *, channels: int):
+    x = x_ref[...].astype(jnp.int32)          # (1, bh, bw, C)
+    cw = num_words(channels)
+    words = []
+    for n in range(NUM_PLANES):
+        bits = (x >> n) & 1                   # (1, bh, bw, C)
+        for wi in range(cw):
+            lo = wi * WORD_BITS
+            hi = min(lo + WORD_BITS, channels)
+            chunk = bits[..., lo:hi]
+            words.append(jnp.sum(chunk * _pack_w(hi - lo), axis=-1,
+                                 dtype=jnp.int32))
+    o_ref[...] = jnp.stack(words, axis=-1)    # (1, bh, bw, 8*Cw)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def bitplane_pack(x: jnp.ndarray, *, block_h: int = 32,
+                  interpret: bool = False) -> jnp.ndarray:
+    """x: (N, H, W, C) uint8/int -> (N, H, W, 8*Cw) int32 packed planes."""
+    n, h, w, c = x.shape
+    x = x.astype(jnp.int32)  # widen on entry; kernel works on int32 lanes
+    bh = min(block_h, h)
+    gh = pl.cdiv(h, bh)
+    pad_h = gh * bh - h
+    if pad_h:
+        x = jnp.pad(x, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
+    cw = num_words(c)
+    out = pl.pallas_call(
+        functools.partial(_kernel, channels=c),
+        grid=(n, gh),
+        in_specs=[pl.BlockSpec((1, bh, w, c), lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, bh, w, NUM_PLANES * cw),
+                               lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, gh * bh, w, NUM_PLANES * cw),
+                                       jnp.int32),
+        interpret=interpret,
+    )(x)
+    return out[:, :h]

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: integrated binary-conv + BN + binarize + bit-pack (C4+C6).
+
+The flagship PhoneBit kernel.  One output tile:
+
+  1. accumulates xor-popcounts over the packed reduction dim (Eqn 1),
+  2. applies the offline-folded integer threshold  bit = (cnt <= t) xor s
+     (Eqns 5-9, integer-strengthened form, branch-free on the VPU),
+  3. bit-packs 32 output channels per int32 word *in-register* and performs a
+     single packed store — the TPU analogue of Fig 4's "one thread computes
+     8 filters, binarizes 8 results and packs into one byte".
+
+No float op and no unpacked intermediate ever reaches VMEM/HBM, which is
+exactly the paper's layer-integration claim (§V-B): intermediate results
+between conv/BN/binarization layers are never materialized in memory.
+
+Operands are im2col patches (matmul-shaped); the conv wrapper lives in
+``repro.kernels.ops.fused_binary_conv2d``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import WORD_BITS
+
+
+def _pack_weights3d() -> jnp.ndarray:
+    """(1, 1, 32) int32 modular weights: bit i -> 1<<i, computed in-kernel.
+
+    Built from a broadcasted iota + shift so the kernel body has no captured
+    constants (Pallas requires all operands to be explicit inputs).  Bit 31
+    wraps to INT32_MIN — the correct two's-complement pattern for modular
+    int32 accumulation.
+    """
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, WORD_BITS), 2)
+    return jax.lax.shift_left(jnp.int32(1), shifts)
+
+
+def _kernel(a_ref, b_ref, ww_ref, t_ref, s_ref, o_ref, acc_ref,
+            *, n_k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]            # (bm, bk) int32 packed patches
+    b = b_ref[...]            # (bn, bk) int32 packed filters
+    ww = ww_ref[...]          # (bk,)    int32 word weights (Eqn 2 powers)
+
+    def body(w, acc):
+        aw = jax.lax.dynamic_slice_in_dim(a, w, 1, axis=1)
+        bw = jax.lax.dynamic_slice_in_dim(b, w, 1, axis=1)
+        www = jax.lax.dynamic_slice_in_dim(ww, w, 1, axis=0)
+        x = jax.lax.bitwise_xor(aw, jnp.transpose(bw))
+        return acc + jax.lax.population_count(x) * www[0]
+
+    acc_ref[...] += jax.lax.fori_loop(0, a.shape[1], body,
+                                      jnp.zeros_like(acc_ref))
+
+    @pl.when(k == n_k_steps - 1)
+    def _epilogue():
+        cnt = acc_ref[...]                                # (bm, bn)
+        t = t_ref[...]                                    # (bn,)
+        s = s_ref[...]                                    # (bn,) int32 0/1
+        bits = (jnp.less_equal(cnt, t[None, :]).astype(jnp.int32)
+                ^ s[None, :])                             # Eqn 9, int form
+        bm, bn = bits.shape
+        words = bits.reshape(bm, bn // WORD_BITS, WORD_BITS)
+        o_ref[...] = jnp.sum(words * _pack_weights3d(), axis=-1,
+                             dtype=jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def fused_matmul_bn_binarize(a: jnp.ndarray, b: jnp.ndarray,
+                             threshold: jnp.ndarray, sign_flip: jnp.ndarray,
+                             word_weights: jnp.ndarray | None = None,
+                             *, block_m: int = 128, block_n: int = 256,
+                             block_k: int = 128,
+                             interpret: bool = False) -> jnp.ndarray:
+    """a: (M, W) patches, b: (N, W) filters -> packed bits (M, ceil(N/32)).
+
+    threshold: (N,) int32; sign_flip: (N,) bool.  Output channel padding
+    (N -> block multiple) uses threshold=-1 / sign=0 so pad bits are 0,
+    matching ``packing.pack_bits`` semantics.
+    """
+    m, w = a.shape
+    n, wb = b.shape
+    assert w == wb
+    if word_weights is None:
+        word_weights = jnp.ones((w,), jnp.int32)
+
+    bm, bk = min(block_m, m), min(block_k, w)
+    bn = min(block_n, max(WORD_BITS, n))
+    bn = max(WORD_BITS, (bn // WORD_BITS) * WORD_BITS)
+    gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(w, bk)
+
+    a = jnp.pad(a, ((0, gm * bm - m), (0, gk * bk - w)))
+    b = jnp.pad(b, ((0, gn * bn - n), (0, gk * bk - w)))
+    word_weights = jnp.pad(word_weights.astype(jnp.int32), (0, gk * bk - w))
+    threshold = jnp.pad(threshold.astype(jnp.int32), (0, gn * bn - n),
+                        constant_values=-1)
+    sign_flip = jnp.pad(sign_flip.astype(jnp.int32), (0, gn * bn - n))
+
+    kwargs = {}
+    if not interpret:
+        params = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+        if params is not None:
+            kwargs["compiler_params"] = params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    nw = bn // WORD_BITS
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k_steps=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bk,), lambda i, j, k: (k,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, nw), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * nw), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        **kwargs,
+    )(a, b, word_weights, threshold, sign_flip)
+    return out[:m, : -(-n // WORD_BITS)]

@@ -1,0 +1,93 @@
+"""Jit'd wrappers + execution-path dispatch for the PhoneBit kernels.
+
+``matmul_mode`` selects the engine for binary matmuls:
+
+* ``"vpu_popcount"``  — paper-faithful xor+popcount Pallas kernel (C1).
+* ``"mxu_pm1"``       — beyond-paper MXU kernel (unpack-to-bf16 in VMEM).
+* ``"xla"``           — pure-JAX fallback (always available; what benchmarks
+                        time on CPU and what models use under jit on any
+                        backend).
+
+On CPU the Pallas kernels run with ``interpret=True`` (bit-exact, slow) —
+the TPU is the compile target, CPU interpret mode is the validator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binary_ops, layer_integration, packing
+from repro.kernels import (bitplane_pack as _bitplane_pack_mod,
+                           fused_conv_bn_binarize as _fused_mod,
+                           mxu_pm1_matmul as _mxu_mod,
+                           xnor_popcount_matmul as _xnor_mod)
+from repro.core.binary_conv import conv_out_size, extract_patches_packed
+
+VALID_MODES = ("vpu_popcount", "mxu_pm1", "xla")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def binary_matmul_dot(a: jnp.ndarray, b: jnp.ndarray, k_valid: int,
+                      mode: str = "vpu_popcount", **block_kw) -> jnp.ndarray:
+    """Binary +-1 dots (M, N) int32; dispatches on execution path."""
+    if mode == "vpu_popcount":
+        cnt = _xnor_mod.xnor_popcount_matmul(
+            a, b, interpret=_interpret(), **block_kw)
+        return k_valid - 2 * cnt
+    if mode == "mxu_pm1":
+        return _mxu_mod.mxu_pm1_matmul(
+            a, b, k_valid=k_valid, interpret=_interpret(), **block_kw)
+    if mode == "xla":
+        return binary_ops.packed_matmul_dot(a, b, k_valid)
+    raise ValueError(f"unknown matmul mode {mode!r}; want one of {VALID_MODES}")
+
+
+def matmul_counts(a: jnp.ndarray, b: jnp.ndarray,
+                  word_weights: jnp.ndarray | None = None,
+                  mode: str = "vpu_popcount", **block_kw) -> jnp.ndarray:
+    if mode == "vpu_popcount":
+        return _xnor_mod.xnor_popcount_matmul(
+            a, b, word_weights, interpret=_interpret(), **block_kw)
+    if mode == "xla":
+        return binary_ops.packed_matmul_counts(a, b, word_weights=word_weights)
+    raise ValueError(f"counts not supported for mode {mode!r}")
+
+
+def fused_matmul_bn_binarize(a, b, p: layer_integration.IntegratedParams,
+                             word_weights=None, mode: str = "vpu_popcount",
+                             **block_kw) -> jnp.ndarray:
+    """Integrated matmul+BN+sign+pack: (M, ceil(N/32)) int32."""
+    if mode == "vpu_popcount":
+        return _fused_mod.fused_matmul_bn_binarize(
+            a, b, p.threshold, p.sign_flip, word_weights,
+            interpret=_interpret(), **block_kw)
+    if mode == "xla":
+        cnt = binary_ops.packed_matmul_counts(a, b, word_weights=word_weights)
+        bits = layer_integration.apply_threshold(cnt, p)
+        return packing.pack_bits(bits, axis=-1)
+    raise ValueError(f"fused path not supported for mode {mode!r}")
+
+
+def fused_binary_conv2d(x_packed: jnp.ndarray, w_packed: jnp.ndarray,
+                        p: layer_integration.IntegratedParams,
+                        kh: int, kw: int, stride: int = 1, pad: int = 0,
+                        word_weights=None, mode: str = "vpu_popcount",
+                        **block_kw) -> jnp.ndarray:
+    """Conv wrapper: im2col on packed words + the fused kernel (C4+C6)."""
+    patches = extract_patches_packed(x_packed, kh, kw, stride, pad)
+    n, oh, ow, pw = patches.shape
+    out = fused_matmul_bn_binarize(
+        patches.reshape(n * oh * ow, pw), w_packed, p,
+        word_weights=word_weights, mode=mode, **block_kw)
+    return out.reshape(n, oh, ow, out.shape[-1])
+
+
+def bitplane_pack(x: jnp.ndarray, **kw) -> jnp.ndarray:
+    """(N,H,W,C) uint8 -> (N,H,W,8*Cw) packed planes via the Pallas kernel."""
+    return _bitplane_pack_mod.bitplane_pack(x, interpret=_interpret(), **kw)

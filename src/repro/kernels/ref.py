@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binary_ops, bitplanes, layer_integration, packing
+
+
+def xnor_popcount_matmul(a: jnp.ndarray, b: jnp.ndarray,
+                         word_weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """cnt (M, N) int32 — oracle for kernels.xnor_popcount_matmul."""
+    return binary_ops.packed_matmul_counts(a, b, word_weights=word_weights)
+
+
+def fused_matmul_bn_binarize(a, b, threshold, sign_flip,
+                             word_weights=None) -> jnp.ndarray:
+    """Packed (M, ceil(N/32)) — oracle for kernels.fused_conv_bn_binarize."""
+    cnt = binary_ops.packed_matmul_counts(a, b, word_weights=word_weights)
+    p = layer_integration.IntegratedParams(threshold, sign_flip)
+    bits = layer_integration.apply_threshold(cnt, p)
+    return packing.pack_bits(bits, axis=-1)
+
+
+def bitplane_pack(x: jnp.ndarray) -> jnp.ndarray:
+    """(N,H,W,8*Cw) int32 — oracle for kernels.bitplane_pack."""
+    p = bitplanes.pack_bitplanes(x)           # (N, H, W, 8, Cw)
+    n, h, w, planes, cw = p.shape
+    return p.reshape(n, h, w, planes * cw)
+
+
+def mxu_pm1_matmul(a, b, *, k_valid: int) -> jnp.ndarray:
+    """+-1 dots (M, N) int32 — oracle for kernels.mxu_pm1_matmul."""
+    return k_valid - 2 * binary_ops.packed_matmul_counts(a, b)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: xor+popcount matmul on channel-packed words (Eqn 1).
+
+Computes cnt[m, n] = sum_w ww[w] * popcount(a[m, w] ^ b[n, w]) for packed
+int32 operands.  This is the paper's binary-convolution inner loop (C1/C3):
+the reduction dim W is the packed channel dim — minor-most in memory, so an
+HBM->VMEM block copy streams contiguous words (C7, coalesced access), and
+the xor/popcount runs on the VPU's 8x128 int32 lanes.
+
+Tiling: grid (M/bm, N/bn, W/bk).  The (bm, bn) int32 accumulator lives in a
+VMEM scratch buffer across the sequential k steps (the TPU grid's innermost
+dim), which is the Pallas analogue of the paper's private-memory per-thread
+accumulation (C6); Pallas double-buffers the a/b block DMAs against compute
+(C7, latency hiding).
+
+The optional per-word weight vector ``ww`` implements Eqn 2's bit-plane
+powers 2^(n-1) so the first layer reuses this same kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, ww_ref, o_ref, acc_ref, *, n_k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]            # (bm, bk) int32
+    b = b_ref[...]            # (bn, bk) int32
+    ww = ww_ref[...]          # (bk,)    int32
+    bk = a.shape[1]
+
+    def body(w, acc):
+        aw = jax.lax.dynamic_slice_in_dim(a, w, 1, axis=1)       # (bm, 1)
+        bw = jax.lax.dynamic_slice_in_dim(b, w, 1, axis=1)       # (bn, 1)
+        www = jax.lax.dynamic_slice_in_dim(ww, w, 1, axis=0)     # (1,)
+        x = jax.lax.bitwise_xor(aw, jnp.transpose(bw))           # (bm, bn)
+        return acc + jax.lax.population_count(x) * www[0]
+
+    acc_ref[...] += jax.lax.fori_loop(0, bk, body, jnp.zeros_like(acc_ref))
+
+    @pl.when(k == n_k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def xnor_popcount_matmul(a: jnp.ndarray, b: jnp.ndarray,
+                         word_weights: jnp.ndarray | None = None,
+                         *, block_m: int = 128, block_n: int = 128,
+                         block_k: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """a: (M, W) int32, b: (N, W) int32 -> counts (M, N) int32."""
+    m, w = a.shape
+    n, wb = b.shape
+    assert w == wb, (a.shape, b.shape)
+    if word_weights is None:
+        word_weights = jnp.ones((w,), jnp.int32)
+
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, w)
+    gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(w, bk)
+    # Pad to block multiples; pad words are 0 in both operands and weight 0,
+    # so they contribute nothing.
+    a = jnp.pad(a, ((0, gm * bm - m), (0, gk * bk - w)))
+    b = jnp.pad(b, ((0, gn * bn - n), (0, gk * bk - w)))
+    word_weights = jnp.pad(word_weights.astype(jnp.int32),
+                           (0, gk * bk - w))
+
+    kwargs = {}
+    if not interpret:
+        params = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+        if params is not None:
+            kwargs["compiler_params"] = params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k_steps=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bk,), lambda i, j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        **kwargs,
+    )(a, b, word_weights)
+    return out[:m, :n]

@@ -1,0 +1,8 @@
+"""Launchers: production mesh, dry-run driver, training/serving loops.
+
+mesh      make_production_mesh() — (16,16) single-pod / (2,16,16) multi-pod
+cells     (arch × shape) -> step fn + abstract inputs + shardings
+dryrun    lower+compile every cell; memory/cost/collective analysis
+train     fault-tolerant training loop (checkpoint, straggler, elastic)
+serve     serving loop (batch scheduler + KV-cache / BNN engine)
+"""

@@ -1,0 +1,428 @@
+"""Compiled-artifact analysis: cost, memory, collective bytes, roofline.
+
+The dry-run compiles each (arch × shape × mesh) cell to a post-SPMD HLO
+module — the per-device program.  From it we derive the three roofline
+terms (TPU v5e targets):
+
+    compute    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16)
+    memory     = HLO_bytes_per_device / 819 GB/s (HBM)
+    collective = wire_bytes_per_device / 50 GB/s (ICI link)
+
+``cost_analysis`` provides FLOPs and bytes; collective bytes are NOT in
+cost_analysis, so we parse the optimized HLO text and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, converting to wire bytes with the standard ring-
+algorithm factors (all-reduce moves 2(N-1)/N × payload, gather/scatter
+(N-1)/N, permute 1×).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+# ---- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+CHIP_WATTS = 185.0           # ~TDP midpoint, used by the Tab-IV energy model
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\((.*)\)", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[shape] token in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += int(n * _DTYPE_BYTES[dt])
+    return total
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> list[dict]:
+    """Per-collective records from post-SPMD HLO text (per-device view)."""
+    out = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        out_shape, kind, operands = m.groups()
+        if "-done" in stripped.split("(")[0]:
+            continue  # the -start op carries the shapes
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            group = int(gm.group(2))
+        else:
+            gb = _GROUPS_BRACE_RE.search(line)
+            group = (len(gb.group(1).split(",")) if gb else default_group)
+        operand_bytes = shape_bytes(operands)
+        out_bytes = shape_bytes(out_shape)
+        out.append(dict(kind=kind, operand_bytes=operand_bytes,
+                        out_bytes=out_bytes, group=max(group, 1)))
+    return out
+
+
+def wire_bytes(rec: dict) -> float:
+    """Per-device wire bytes of one collective (ring-algorithm factors)."""
+    n = rec["group"]
+    if n <= 1:
+        return 0.0
+    frac = (n - 1) / n
+    k = rec["kind"]
+    if k == "all-reduce":
+        return 2.0 * rec["operand_bytes"] * frac
+    if k == "all-gather":
+        return rec["out_bytes"] * frac
+    if k == "reduce-scatter":
+        return rec["operand_bytes"] * frac
+    if k == "all-to-all":
+        return rec["operand_bytes"] * frac
+    if k == "collective-permute":
+        return float(rec["operand_bytes"])
+    return 0.0
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    kind: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float          # dtype-adjusted (see dtype_factor)
+    collective_wire_bytes: float     # dtype-adjusted
+    collective_operand_bytes: float
+    collective_counts: dict
+    peak_memory_bytes: int
+    argument_bytes: int
+    temp_bytes: int                  # raw (f32-mode activations = 2× bf16)
+    output_bytes: int
+    model_flops: float          # 6·N_active·tokens (train) / analytic fwd
+    # 0.5 when the dry-run compiled in f32 accounting mode: XLA:CPU
+    # legalizes bf16 dots to f32 (no native bf16 FMA), so a bf16 model's
+    # HLO is riddled with converts and f32 collectives a TPU lowering
+    # would not have.  The f32-mode module moves exactly 2× the bytes of
+    # the bf16 deployment on every activation/weight path.
+    dtype_factor: float = 1.0
+    bytes_raw: float = 0.0
+    wire_raw: float = 0.0
+    note: str = ""
+
+    # ---- roofline -----------------------------------------------------
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total_hlo = self.flops_per_device * self.n_devices
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-at-peak time / bound time (the score)."""
+        if self.t_bound <= 0:
+            return 0.0
+        t_model = self.model_flops / (self.n_devices * PEAK_FLOPS)
+        return t_model / self.t_bound
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def collect(compiled, n_dev: int) -> dict:
+    """Raw per-device metrics of one compiled module.
+
+    NOTE: XLA's HloCostAnalysis counts while-loop bodies ONCE regardless
+    of trip count, so for scan-over-layers models these raw numbers cover
+    one layer plus the non-scanned prologue/epilogue.  The dry-run
+    extrapolates with two probe compiles (L=1, L=2) — see
+    :func:`extrapolate`.
+    """
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text(), default_group=n_dev)
+    counts: dict[str, float] = {}
+    for c in colls:
+        counts[c["kind"]] = counts.get(c["kind"], 0) + 1
+    return dict(
+        flops=float(cost.get("flops", 0.0)),
+        bytes=float(cost.get("bytes accessed", 0.0)),
+        wire=float(sum(wire_bytes(c) for c in colls)),
+        operand=float(sum(c["operand_bytes"] for c in colls)),
+        counts=counts,
+    )
+
+
+def extrapolate(m1: dict, m2: dict, n_layers: int) -> dict:
+    """metrics(L) = metrics(1) + (L-1)·(metrics(2) - metrics(1)).
+
+    Exact for scan-over-layers models: the L=2/L=1 delta is one layer's
+    cost, the L=1 value carries the prologue/epilogue once.
+    """
+    out = {}
+    for k in ("flops", "bytes", "wire", "operand"):
+        out[k] = m1[k] + (n_layers - 1) * (m2[k] - m1[k])
+    counts = {}
+    for kind in set(m1["counts"]) | set(m2["counts"]):
+        c1 = m1["counts"].get(kind, 0)
+        c2 = m2["counts"].get(kind, 0)
+        counts[kind] = c1 + (n_layers - 1) * (c2 - c1)
+    out["counts"] = counts
+    return out
+
+
+def analyze(arch: str, shape: str, kind: str, mesh, compiled,
+            model_flops: float, metrics: dict | None = None,
+            note: str = "") -> CellReport:
+    """Build a CellReport.  ``metrics`` overrides the raw collect() of
+    ``compiled`` (used when probe-extrapolated numbers are available);
+    memory statistics always come from the full-depth ``compiled``."""
+    import os
+    n_dev = mesh.size
+    if metrics is None:
+        metrics = collect(compiled, n_dev)
+    mem = compiled.memory_analysis()
+    factor = 0.5 if os.environ.get("REPRO_DRYRUN_F32") else 1.0
+    return CellReport(
+        arch=arch, shape=shape, kind=kind,
+        mesh="x".join(str(s) for s in mesh.devices.shape),
+        n_devices=n_dev,
+        flops_per_device=metrics["flops"],
+        bytes_per_device=metrics["bytes"] * factor,
+        collective_wire_bytes=metrics["wire"] * factor,
+        collective_operand_bytes=metrics["operand"],
+        collective_counts=metrics["counts"],
+        peak_memory_bytes=int(getattr(mem, "peak_memory_in_bytes", 0)),
+        argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+        temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+        output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+        model_flops=model_flops, dtype_factor=factor,
+        bytes_raw=metrics["bytes"], wire_raw=metrics["wire"], note=note)
+
+
+# --------------------------------------------------------------------------
+# MODEL_FLOPS per cell (analytic "useful work")
+# --------------------------------------------------------------------------
+
+def model_flops_for(build) -> float:
+    """Analytic useful FLOPs for one step (the roofline numerator).
+
+    Counts matmul work only: per-token layer matmuls (2·params_matmul,
+    embeddings/norms excluded), the *ideal* attention FLOPs (causal
+    S²/2), and the logits head.  Backward = 2× forward.  HLO FLOPs above
+    this ratio are framework waste (remat recompute, masked attention,
+    dead expert slots, SPMD padding).
+    """
+    from repro.models.transformer import LMConfig
+    from repro.models.dit import DiTConfig
+    from repro.models.vit import ViTConfig
+    from repro.models.convnext import ConvNeXtConfig
+    from repro.models.efficientnet import EffNetConfig
+
+    cfg, kind = build.cfg, build.kind
+    args = build.abstract_args
+
+    if isinstance(cfg, LMConfig):
+        d, l = cfg.d_model, cfg.n_layers
+        attn_p = d * cfg.qkv_dim + 2 * d * cfg.kv_dim + cfg.qkv_dim * d
+        if cfg.moe:
+            mlp_p = d * cfg.n_experts + 3 * cfg.top_k * d * cfg.d_ff_expert
+        else:
+            n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+            mlp_p = n_mats * d * cfg.d_ff
+        per_tok_fwd = 2.0 * l * (attn_p + mlp_p)
+        head_fwd = 2.0 * d * cfg.vocab
+
+        def attn_fwd(b, s_q, s_kv, causal):
+            pairs = s_q * s_kv * (0.5 if causal else 1.0)
+            return 4.0 * b * cfg.n_heads * cfg.d_head * pairs
+
+        if kind == "train":
+            b, s = args[2]["tokens"].shape
+            fwd = (b * s * (per_tok_fwd + head_fwd)
+                   + l * attn_fwd(b, s, s, True))
+            return 3.0 * fwd
+        if kind == "prefill":
+            b, s = args[1].shape
+            return (b * s * per_tok_fwd + b * head_fwd
+                    + l * attn_fwd(b, s, s, True))
+        if kind == "decode":
+            b = args[2].shape[0]
+            s_cache = args[1]["k"].shape[3]
+            return (b * (per_tok_fwd + head_fwd)
+                    + l * attn_fwd(b, 1, s_cache, False))
+
+    if isinstance(cfg, DiTConfig):
+        d, l = cfg.d_model, cfg.n_layers
+        per_tok_fwd = 2.0 * l * (4 * d * d + 2 * d * cfg.d_ff)
+        if kind == "train":
+            b = args[2]["latents"].shape[0]
+            lat = args[2]["latents"].shape[1]
+        else:
+            b, lat = args[1].shape[0], args[1].shape[1]
+        n_tok = (lat // cfg.patch) ** 2
+        cond_fwd = 2.0 * b * l * d * 6 * d          # adaLN projections
+        attn = 4.0 * b * l * cfg.n_heads * cfg.d_head * n_tok * n_tok
+        fwd = b * n_tok * per_tok_fwd + cond_fwd + attn
+        return 3.0 * fwd if kind == "train" else fwd
+
+    if isinstance(cfg, ViTConfig):
+        d, l = cfg.d_model, cfg.n_layers
+        if kind == "train":
+            b, res = (args[2]["images"].shape[0],
+                      args[2]["images"].shape[1])
+        else:
+            b, res = args[1].shape[0], args[1].shape[1]
+        n_tok = (res // cfg.patch) ** 2 + 1
+        per_tok_fwd = 2.0 * l * (4 * d * d + 2 * d * cfg.d_ff)
+        patch_fwd = 2.0 * b * (n_tok - 1) * cfg.patch ** 2 * 3 * d
+        attn = 4.0 * b * l * cfg.n_heads * cfg.d_head * n_tok * n_tok
+        fwd = b * n_tok * per_tok_fwd + patch_fwd + attn
+        return 3.0 * fwd if kind == "train" else fwd
+
+    if isinstance(cfg, ConvNeXtConfig):
+        imgs = args[-1]["images"] if kind == "train" else args[-1]
+        b, res = imgs.shape[0], imgs.shape[1]
+        macs = _convnext_macs(cfg, res)
+        return (6.0 if kind == "train" else 2.0) * b * macs
+
+    if isinstance(cfg, EffNetConfig):
+        imgs = args[-1]["images"] if kind == "train" else args[-1]
+        b, res = imgs.shape[0], imgs.shape[1]
+        macs = _effnet_macs(cfg, res)
+        return (6.0 if kind == "train" else 2.0) * b * macs
+    return 0.0
+
+
+def model_flops_cell(arch_id: str, shape_name: str) -> float:
+    """Mesh-free analytic FLOPs for a cell (patches cached reports)."""
+    import types
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.models.transformer import LMConfig
+    from repro.models.dit import DiTConfig
+
+    rec = configs.get(arch_id)
+    shape = rec.shape(shape_name)
+    cfg = rec.full
+    kind = shape.kind
+
+    def sds(shp):
+        return jax.ShapeDtypeStruct(shp, jnp.float32)
+
+    if rec.family == "lm":
+        b, s = shape.global_batch, shape.seq_len
+        if kind == "train":
+            args = (None, None, {"tokens": sds((b, s))})
+        elif kind == "prefill":
+            args = (None, sds((b, s)))
+        else:
+            args = ({"k": sds((cfg.n_layers, b, cfg.n_kv_heads, s,
+                               cfg.d_head))}, None, sds((b, 1)))
+            args = (None, args[0], args[2])
+    elif rec.family == "diffusion":
+        lat = shape.img_res // cfg.vae_downsample
+        x = sds((shape.batch, lat, lat, cfg.latent_channels))
+        if kind == "train":
+            args = (None, None, {"latents": x})
+        else:
+            args = (None, x)
+    else:
+        x = sds((shape.batch, shape.img_res, shape.img_res, 3))
+        if kind == "train":
+            args = (None, None, None, {"images": x})
+        else:
+            args = (None, None, x)
+    build = types.SimpleNamespace(cfg=cfg, kind=kind, abstract_args=args)
+    return model_flops_for(build)
+
+
+def _convnext_macs(cfg, res: int) -> float:
+    """Per-image MACs of the ConvNeXt forward at input res."""
+    macs = (res // 4) ** 2 * 4 * 4 * 3 * cfg.dims[0]      # stem
+    hw = res // 4
+    prev = cfg.dims[0]
+    for depth, dim in zip(cfg.depths, cfg.dims):
+        if dim != prev:
+            hw //= 2
+            macs += hw * hw * 2 * 2 * prev * dim           # downsample
+        macs += depth * hw * hw * (7 * 7 * dim              # dw conv
+                                   + 2 * dim * 4 * dim)     # pw convs
+        prev = dim
+    macs += cfg.dims[-1] * cfg.n_classes
+    return float(macs)
+
+
+def _effnet_macs(cfg, res: int) -> float:
+    """Per-image MACs of the EfficientNet forward at input res."""
+    hw = res // 2
+    macs = hw * hw * 3 * 3 * 3 * cfg.stem_ch
+    for e, k, s, c_in, c_out, r in cfg.stages():
+        mid = c_in * e
+        for i in range(r):
+            cin_i = c_in if i == 0 else c_out
+            mid_i = cin_i * e
+            if s == 2 and i == 0:
+                hw //= 2
+            if e != 1:
+                macs += hw * hw * cin_i * mid_i            # expand 1x1
+            macs += hw * hw * k * k * mid_i                # depthwise
+            se = max(1, int(cin_i * cfg.se_ratio))
+            macs += 2 * mid_i * se                         # SE
+            macs += hw * hw * mid_i * c_out                # project 1x1
+    macs += hw * hw * cfg.stages()[-1][4] * cfg.head_ch
+    macs += cfg.head_ch * cfg.n_classes
+    return float(macs)
+
+
+def save_report(path: str, report: CellReport) -> None:
+    with open(path, "w") as f:
+        json.dump(report.to_json(), f, indent=2)

@@ -1,0 +1,296 @@
+"""Cell builders: (architecture × input shape × mesh) -> lowered step.
+
+For every dry-run cell this module produces
+
+* the step function (train / prefill / decode / sample / serve),
+* ``input_specs()``-style ShapeDtypeStruct stand-ins for all step inputs
+  (weak-type-correct, shardable, no device allocation),
+* the matching NamedSharding pytree for ``jax.jit(in_shardings=...)``.
+
+Smoke mode swaps the FULL config for the reduced SMOKE config and shrinks
+the input shapes so the same builder drives CPU tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import Shape
+from repro.distributed.sharding import Rules
+from repro.models import (convnext, dit, efficientnet, layers, transformer,
+                          vit)
+from repro.optim import OptState, adamw_init, sgdm_init
+
+
+@dataclasses.dataclass
+class CellBuild:
+    arch_id: str
+    shape_name: str
+    kind: str
+    step_fn: Callable
+    abstract_args: tuple
+    in_shardings: tuple
+    cfg: Any
+    note: str = ""
+
+    def lower(self):
+        jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings)
+        return jitted.lower(*self.abstract_args)
+
+
+class SkippedCell(Exception):
+    """Raised for cells the assignment marks skip (reason in args[0])."""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _opt_specs(pspecs):
+    return OptState(step=P(), mu=pspecs, nu=pspecs)
+
+
+def _sgd_specs(pspecs):
+    return OptState(step=P(), mu=pspecs, nu=None)
+
+
+# --------------------------------------------------------------------------
+# LM family
+# --------------------------------------------------------------------------
+
+def _lm_cell(rec, shape: Shape, rules: Rules, smoke: bool) -> CellBuild:
+    cfg = rec.smoke if smoke else rec.full
+    if shape.kind == "skip":
+        raise SkippedCell(shape.note)
+    b, s = shape.global_batch, shape.seq_len
+    if smoke:
+        b, s = max(2, rules.dp), 64 * max(1, rules.tp) // max(1, rules.tp)
+        s = 64
+    pspecs = transformer.param_specs(cfg, rules)
+    params = transformer.abstract_params(cfg, ep=rules.tp,
+                                          vocab_pad_to=rules.tp)
+    psh = rules.tree_shardings(pspecs)
+
+    if shape.kind == "train":
+        step = transformer.make_train_step(cfg, rules)
+        opt = jax.eval_shape(adamw_init, params)
+        osh = rules.tree_shardings(_opt_specs(pspecs))
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+        bsh = rules.tree_shardings(
+            {"tokens": P(rules.batch_spec(b), None),
+             "labels": P(rules.batch_spec(b), None)})
+        return CellBuild(rec.arch_id, shape.name, shape.kind, step,
+                         (params, opt, batch), (psh, osh, bsh), cfg)
+
+    if shape.kind == "prefill":
+        step = transformer.make_prefill_step(cfg, rules, max_seq=s)
+        tokens = _sds((b, s), jnp.int32)
+        tsh = rules.named(P(rules.batch_spec(b), None))
+        return CellBuild(rec.arch_id, shape.name, shape.kind, step,
+                         (params, tokens), (psh, tsh), cfg)
+
+    if shape.kind == "decode":
+        # Weights-stationary serving: FSDP sharding would re-gather the
+        # full parameter set (command-r: the 2.1 GB bf16 head alone)
+        # EVERY token.  Decode replicates params over the data axis
+        # (no optimizer states at serve time — they fit) and keeps only
+        # the TP sharding.
+        serve_rules = dataclasses.replace(rules, fsdp=None)
+        pspecs = transformer.param_specs(cfg, serve_rules)
+        psh = rules.tree_shardings(pspecs)
+        step = transformer.make_decode_step(cfg, rules, max_seq=s)
+        cache = transformer.abstract_cache(cfg, b, s)
+        csh = rules.tree_shardings(
+            transformer.cache_specs(cfg, rules, b, s))
+        tokens = _sds((b, 1), jnp.int32)
+        tsh = rules.named(P(rules.batch_spec(b), None))
+        pos = _sds((), jnp.int32)
+        return CellBuild(rec.arch_id, shape.name, shape.kind, step,
+                         (params, cache, tokens, pos),
+                         (psh, csh, tsh, rules.named(P())), cfg)
+
+    raise ValueError(shape.kind)
+
+
+# --------------------------------------------------------------------------
+# Diffusion family
+# --------------------------------------------------------------------------
+
+def _dit_cell(rec, shape: Shape, rules: Rules, smoke: bool) -> CellBuild:
+    cfg = rec.smoke if smoke else rec.full
+    b, res = shape.batch, shape.img_res
+    if smoke:
+        b, res = max(2, rules.dp), cfg.img_res
+    lat = res // cfg.vae_downsample
+    pspecs = dit.param_specs(cfg, rules)
+    params = dit.abstract_params(cfg)
+    psh = rules.tree_shardings(pspecs)
+    bspec = rules.batch_spec(b)
+
+    if shape.kind == "train":
+        step = dit.make_train_step(cfg, rules)
+        opt = jax.eval_shape(adamw_init, params)
+        osh = rules.tree_shardings(_opt_specs(pspecs))
+        batch = {"latents": _sds((b, lat, lat, cfg.latent_channels),
+                                 jnp.float32),
+                 "labels": _sds((b,), jnp.int32),
+                 "t": _sds((b,), jnp.int32),
+                 "noise": _sds((b, lat, lat, cfg.latent_channels),
+                               jnp.float32)}
+        bsh = rules.tree_shardings(
+            {"latents": P(bspec, None, None, None),
+             "labels": P(bspec), "t": P(bspec),
+             "noise": P(bspec, None, None, None)})
+        return CellBuild(rec.arch_id, shape.name, shape.kind, step,
+                         (params, opt, batch), (psh, osh, bsh), cfg,
+                         note=f"steps={shape.steps}")
+
+    if shape.kind == "sample":
+        step = dit.make_sample_step(cfg, rules)
+        x_t = _sds((b, lat, lat, cfg.latent_channels),
+                   layers.COMPUTE_DTYPE)
+        args = (params, x_t, _sds((b,), jnp.int32), _sds((b,), jnp.int32),
+                _sds((b,), jnp.int32))
+        shard = (psh, rules.named(P(bspec, None, None, None)),
+                 rules.named(P(bspec)), rules.named(P(bspec)),
+                 rules.named(P(bspec)))
+        return CellBuild(rec.arch_id, shape.name, shape.kind, step, args,
+                         shard, cfg, note=f"steps={shape.steps} (1 lowered)")
+
+    raise ValueError(shape.kind)
+
+
+# --------------------------------------------------------------------------
+# Vision family
+# --------------------------------------------------------------------------
+
+def _vision_common(rec, shape: Shape, rules: Rules, smoke: bool):
+    cfg = rec.smoke if smoke else rec.full
+    b, res = shape.batch, shape.img_res
+    if smoke:
+        b, res = max(2, rules.dp), cfg.img_res
+    return cfg, b, res
+
+
+def _vit_cell(rec, shape, rules, smoke) -> CellBuild:
+    cfg, b, res = _vision_common(rec, shape, rules, smoke)
+    pspecs = vit.param_specs(cfg, rules)
+    params = vit.abstract_params(cfg)
+    psh = rules.tree_shardings(pspecs)
+    bspec = rules.batch_spec(b)
+    images = _sds((b, res, res, 3), jnp.float32)
+    ish = rules.named(P(bspec, None, None, None))
+
+    if shape.kind == "train":
+        step = vit.make_train_step(cfg, rules)
+        opt = jax.eval_shape(adamw_init, params)
+        osh = rules.tree_shardings(_opt_specs(pspecs))
+        batch = {"images": images, "labels": _sds((b,), jnp.int32)}
+        bsh = rules.tree_shardings(
+            {"images": P(bspec, None, None, None), "labels": P(bspec)})
+        return CellBuild(rec.arch_id, shape.name, shape.kind, step,
+                         (params, opt, batch), (psh, osh, bsh), cfg)
+    step = functools.partial(
+        lambda p, x: vit.forward(p, x, cfg, rules))
+    return CellBuild(rec.arch_id, shape.name, shape.kind, step,
+                     (params, images), (psh, ish), cfg)
+
+
+def _convnext_cell(rec, shape, rules, smoke) -> CellBuild:
+    cfg, b, res = _vision_common(rec, shape, rules, smoke)
+    pspecs = convnext.param_specs(cfg, rules)
+    params = convnext.abstract_params(cfg)
+    psh = rules.tree_shardings(pspecs)
+    bspec = rules.batch_spec(b)
+    images = _sds((b, res, res, 3), jnp.float32)
+    ish = rules.named(P(bspec, None, None, None))
+
+    if shape.kind == "train":
+        step = convnext.make_train_step(cfg, rules)
+        opt = jax.eval_shape(adamw_init, params)
+        osh = rules.tree_shardings(_opt_specs(pspecs))
+        batch = {"images": images, "labels": _sds((b,), jnp.int32)}
+        bsh = rules.tree_shardings(
+            {"images": P(bspec, None, None, None), "labels": P(bspec)})
+        return CellBuild(rec.arch_id, shape.name, shape.kind, step,
+                         (params, opt, batch), (psh, osh, bsh), cfg)
+    step = functools.partial(
+        lambda p, x: convnext.forward(p, x, cfg, rules))
+    return CellBuild(rec.arch_id, shape.name, shape.kind, step,
+                     (params, images), (psh, ish), cfg)
+
+
+def _effnet_cell(rec, shape, rules, smoke) -> CellBuild:
+    cfg, b, res = _vision_common(rec, shape, rules, smoke)
+    pspecs, sspecs = efficientnet.param_specs(cfg, rules)
+    params, state = efficientnet.abstract_params(cfg)
+    psh = rules.tree_shardings(pspecs)
+    ssh = rules.tree_shardings(sspecs)
+    bspec = rules.batch_spec(b)
+    images = _sds((b, res, res, 3), jnp.float32)
+    ish = rules.named(P(bspec, None, None, None))
+
+    if shape.kind == "train":
+        step = efficientnet.make_train_step(cfg, rules)
+        opt = jax.eval_shape(sgdm_init, params)
+        osh = rules.tree_shardings(_sgd_specs(pspecs))
+        batch = {"images": images, "labels": _sds((b,), jnp.int32)}
+        bsh = rules.tree_shardings(
+            {"images": P(bspec, None, None, None), "labels": P(bspec)})
+        return CellBuild(rec.arch_id, shape.name, shape.kind, step,
+                         (params, state, opt, batch),
+                         (psh, ssh, osh, bsh), cfg)
+    step = functools.partial(
+        lambda p, s, x: efficientnet.apply(p, s, x, cfg, rules,
+                                           train=False)[0])
+    return CellBuild(rec.arch_id, shape.name, shape.kind, step,
+                     (params, state, images), (psh, ssh, ish), cfg)
+
+
+_VISION_BUILDERS = {
+    "vit-l16": _vit_cell,
+    "vit-h14": _vit_cell,
+    "convnext-b": _convnext_cell,
+    "efficientnet-b7": _effnet_cell,
+}
+
+
+# --------------------------------------------------------------------------
+# Entry point
+# --------------------------------------------------------------------------
+
+def input_specs(arch_id: str, shape_name: str, rules: Rules) -> tuple:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step
+    (weak-type-correct, shardable, no device allocation) — the tuple
+    passed to ``jax.jit(step).lower(*input_specs(...))``."""
+    return build_cell(arch_id, shape_name, rules).abstract_args
+
+
+def build_cell(arch_id: str, shape_name: str, rules: Rules,
+               smoke: bool = False,
+               overrides: dict | None = None) -> CellBuild:
+    """overrides: dataclasses.replace(...) fields applied to the config
+    (dry-run probes: n_layers=1/2; vision exact counting: unroll=True)."""
+    rec = configs.get(arch_id)
+    if overrides:
+        rec = dataclasses.replace(
+            rec, full=dataclasses.replace(rec.full, **overrides),
+            smoke=dataclasses.replace(rec.smoke, **overrides))
+    shape = rec.shape(shape_name)
+    if shape.kind == "skip":
+        raise SkippedCell(shape.note)
+    if rec.family == "lm":
+        return _lm_cell(rec, shape, rules, smoke)
+    if rec.family == "diffusion":
+        return _dit_cell(rec, shape, rules, smoke)
+    if rec.family == "vision":
+        return _VISION_BUILDERS[arch_id](rec, shape, rules, smoke)
+    raise ValueError(rec.family)

@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_DRYRUN_F32"] = "1"   # see models.layers.COMPUTE_DTYPE
+
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture × input shape) cell for the
+production meshes — 16×16 single-pod and 2×16×16 two-pod — and records
+memory / cost / collective analysis per cell.  The two lines above MUST
+precede any other import: jax locks the device count at first init, and the
+512 placeholder host devices exist only in dry-run processes (tests and
+benchmarks see 1 device).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-moe-30b-a3b --shape train_4k
+    python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+    python -m repro.launch.dryrun --all [--jobs 4] [--out artifacts/dryrun]
+    python -m repro.launch.dryrun --report [--out artifacts/dryrun]
+
+``--all`` fans cells out to subprocesses (compiles are independent and
+XLA's SPMD partitioner is single-threaded per module), caches per-cell
+JSON, and prints the aggregate table.  ``--report`` re-prints the table
+from cached JSON.
+"""
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+
+def _cell_id(arch: str, shape: str, multi_pod: bool, tag: str = "") -> str:
+    base = f"{arch}__{shape}__{'2x16x16' if multi_pod else '16x16'}"
+    return f"{base}__{tag}" if tag else base
+
+
+def _parse_overrides(pairs):
+    import ast
+    out = {}
+    for p in pairs or ():
+        k, v = p.split("=", 1)
+        try:
+            out[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            out[k] = v
+    return out
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, out_dir: str,
+            overrides: dict | None = None, tag: str = "") -> dict:
+    """Lower + compile one cell in THIS process; returns the report dict.
+
+    Cost-accounting protocol: XLA counts while-loop bodies once, so
+    scan-over-layers models compile two shallow probes (L=1, L=2) whose
+    delta is one layer's exact cost, extrapolated to full depth.  Vision
+    CNNs recompile with ``unroll=True`` instead (exact single compile).
+    The full-depth scanned module is ALWAYS compiled too — that is the
+    lowering proof and the source of the memory analysis.
+    """
+    import dataclasses as _dc
+    import jax
+    from repro.launch import analysis, cells
+    from repro.launch.mesh import make_production_mesh
+    from repro.distributed.sharding import rules_for_mesh
+    from repro.models.transformer import LMConfig
+    from repro.models.dit import DiTConfig
+    from repro.models.vit import ViTConfig
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for_mesh(mesh)
+    t0 = time.monotonic()
+    try:
+        build = cells.build_cell(arch, shape, rules, overrides=overrides)
+    except cells.SkippedCell as e:
+        rep = dict(arch=arch, shape=shape, skipped=True, reason=str(e),
+                   mesh="2x16x16" if multi_pod else "16x16")
+        _save(out_dir, arch, shape, multi_pod, rep, tag)
+        print(f"SKIP {arch} {shape}: {e}")
+        return rep
+
+    with mesh:
+        lowered = build.lower()
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+        print(compiled.memory_analysis())     # proves it fits
+        print({k: v for k, v in compiled.cost_analysis().items()
+               if "flops" in k or k == "bytes accessed"})
+
+        metrics = None
+        cfg = build.cfg
+        if isinstance(cfg, (LMConfig, DiTConfig, ViTConfig)):
+            # Unrolled shallow probes: L=1 / L=2 with python-loop layers;
+            # the delta is one layer's exact cost (incl. remat recompute
+            # and per-layer collectives), extrapolated to full depth.
+            probes = []
+            for l in (1, 2):
+                pb = cells.build_cell(
+                    arch, shape, rules,
+                    overrides=dict(overrides or {}, n_layers=l,
+                                   unroll=True))
+                probes.append(analysis.collect(pb.lower().compile(),
+                                               mesh.size))
+            metrics = analysis.extrapolate(probes[0], probes[1],
+                                           cfg.n_layers)
+        else:  # vision CNNs: exact unrolled compile
+            ub = cells.build_cell(arch, shape, rules,
+                                  overrides=dict(overrides or {},
+                                                 unroll=True))
+            metrics = analysis.collect(ub.lower().compile(), mesh.size)
+
+    report = analysis.analyze(
+        arch, shape, build.kind, mesh, compiled,
+        model_flops=analysis.model_flops_for(build), metrics=metrics,
+        note=build.note)
+    rep = report.to_json()
+    rep.update(skipped=False, t_lower_s=round(t_lower, 1),
+               t_compile_s=round(t_compile, 1),
+               t_total_s=round(time.monotonic() - t0, 1),
+               overrides=overrides or {}, tag=tag)
+    _save(out_dir, arch, shape, multi_pod, rep, tag)
+    print(f"OK {arch} {shape} mesh={rep['mesh']} "
+          f"bottleneck={rep['bottleneck']} "
+          f"t=(c {rep['t_compute']:.4f}s, m {rep['t_memory']:.4f}s, "
+          f"n {rep['t_collective']:.4f}s) "
+          f"roofline={rep['roofline_fraction']:.3f} "
+          f"[lower {t_lower:.0f}s compile {t_compile:.0f}s]")
+    return rep
+
+
+def _save(out_dir, arch, shape, multi_pod, rep, tag: str = ""):
+    p = pathlib.Path(out_dir)
+    p.mkdir(parents=True, exist_ok=True)
+    (p / (_cell_id(arch, shape, multi_pod, tag) + ".json")).write_text(
+        json.dumps(rep, indent=2))
+
+
+def run_all(out_dir: str, jobs: int, multi_pod_also: bool = True,
+            force: bool = False, timeout: int = 3600) -> None:
+    """Fan out every cell to subprocesses with caching."""
+    from repro import configs
+
+    work = []
+    for arch, shape in configs.all_cells():
+        meshes = [False, True] if multi_pod_also else [False]
+        for mp in meshes:
+            cache = pathlib.Path(out_dir) / (
+                _cell_id(arch, shape.name, mp) + ".json")
+            if cache.exists() and not force:
+                continue
+            work.append((arch, shape.name, mp))
+
+    def launch(item):
+        arch, shape, mp = item
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", out_dir]
+        if mp:
+            cmd.append("--multi-pod")
+        t0 = time.monotonic()
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=timeout)
+        dt = time.monotonic() - t0
+        tag = _cell_id(arch, shape, mp)
+        if r.returncode != 0:
+            err = (r.stderr or r.stdout).strip().splitlines()
+            _save(out_dir, arch, shape, mp,
+                  dict(arch=arch, shape=shape, skipped=False, failed=True,
+                       mesh="2x16x16" if mp else "16x16",
+                       error="\n".join(err[-15:])))
+            return f"FAIL {tag} ({dt:.0f}s)"
+        return f"done {tag} ({dt:.0f}s)"
+
+    print(f"{len(work)} cells to compile, {jobs} parallel jobs")
+    with ThreadPoolExecutor(max_workers=jobs) as ex:
+        for msg in ex.map(launch, work):
+            print(msg, flush=True)
+    print_table(out_dir)
+
+
+def print_table(out_dir: str) -> None:
+    rows = []
+    for f in sorted(pathlib.Path(out_dir).glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    if not rows:
+        print("no cached reports in", out_dir)
+        return
+    hdr = (f"{'arch':24} {'shape':12} {'mesh':8} {'kind':8} "
+           f"{'bottleneck':10} {'t_comp':>9} {'t_mem':>9} {'t_coll':>9} "
+           f"{'roofline':>8} {'useful':>7} {'peakGB':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r.get("skipped"):
+            print(f"{r['arch']:24} {r['shape']:12} {r.get('mesh', ''):8} "
+                  f"SKIP     ({r.get('reason', '')[:60]})")
+            continue
+        if r.get("failed"):
+            print(f"{r['arch']:24} {r['shape']:12} {r.get('mesh', ''):8} "
+                  f"FAILED   {r.get('error', '').splitlines()[-1][:70]}")
+            continue
+        print(f"{r['arch']:24} {r['shape']:12} {r['mesh']:8} "
+              f"{r['kind']:8} {r['bottleneck']:10} "
+              f"{r['t_compute']:9.4f} {r['t_memory']:9.4f} "
+              f"{r['t_collective']:9.4f} {r['roofline_fraction']:8.3f} "
+              f"{r['useful_flops_ratio']:7.3f} "
+              f"{r['peak_memory_bytes'] / 2**30:7.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--set", action="append", dest="overrides",
+                    metavar="KEY=VALUE",
+                    help="config override (hillclimb variants), repeatable")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the report file (variants don't "
+                         "clobber the baseline)")
+    args = ap.parse_args()
+
+    if args.report:
+        print_table(args.out)
+    elif args.all:
+        run_all(args.out, args.jobs,
+                multi_pod_also=not args.single_pod_only, force=args.force)
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all/--report)")
+        run_one(args.arch, args.shape, args.multi_pod, args.out,
+                overrides=_parse_overrides(args.overrides), tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Model zoo: every assigned architecture + the paper's own BNN workloads.
+
+transformer    dense/MoE GQA LMs (granite-moe, qwen3-moe, minitron, command-r)
+dit            Diffusion Transformer (DiT-L/2, DiT-XL/2), adaLN-zero
+vit            Vision Transformer (ViT-L/16, ViT-H/14)
+convnext       ConvNeXt-B
+efficientnet   EfficientNet-B7
+paper_nets     AlexNet / VGG16 / YOLOv2-Tiny, float + binarized (PhoneBit)
+layers         shared substrate: norms, RoPE, chunked flash attention,
+               flash decode, initializers, dtype policy
+"""
+
+from repro.models import (convnext, dit, efficientnet, layers, paper_nets,
+                          transformer, vit)
+
+__all__ = ["convnext", "dit", "efficientnet", "layers", "paper_nets",
+           "transformer", "vit"]

@@ -1,0 +1,235 @@
+"""ConvNeXt-B — Liu et al., arXiv:2201.03545.
+
+depths (3, 3, 27, 3), dims (128, 256, 512, 1024).  Block: 7×7 depthwise
+conv → LN → 1×1 expand (4×, GELU) → 1×1 project → layer-scale → residual.
+Stages are separated by LN + 2×2/s2 downsample convs.
+
+The identical blocks inside each stage are scanned (stacked params), so the
+traced depth is 4 stages regardless of the 27-deep third stage.
+
+Sharding: batch over data axes; channels over ``model`` (all stage dims are
+16-divisible).  The 1×1 convs are channel matmuls — Megatron-style sharding
+(expand out-dim sharded, project in-dim sharded) gives one reduce per block.
+
+PhoneBit applicability (DESIGN §6): with ``binary_pointwise=True`` the 1×1
+expand/project convs — the FLOP majority — run as STE-sign binary matmuls;
+the 7×7 depthwise convs stay float (K=49 reduction packs poorly, the same
+reason the paper's engine keeps non-conv ops float).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import binarize
+from repro.distributed.sharding import Rules
+from repro.models import layers
+from repro.optim import adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNeXtConfig:
+    name: str
+    img_res: int = 224
+    depths: tuple[int, ...] = (3, 3, 27, 3)
+    dims: tuple[int, ...] = (128, 256, 512, 1024)
+    n_classes: int = 1000
+    layer_scale_init: float = 1e-6
+    binary_pointwise: bool = False
+    # Unroll block scans into a python loop.  The dry-run uses this for
+    # exact cost accounting: XLA's HloCostAnalysis counts a while-loop
+    # body ONCE regardless of trip count, so scanned stages would
+    # under-report FLOPs/bytes by depth×.
+    unroll: bool = False
+
+    def param_count(self) -> int:
+        total = 4 * 4 * 3 * self.dims[0] + self.dims[0] * 2
+        prev = self.dims[0]
+        for depth, dim in zip(self.depths, self.dims):
+            if dim != prev:
+                total += prev * dim * 4 + dim + prev * 2
+            total += depth * (7 * 7 * dim + dim * 2 + dim * 4 * dim
+                              + 4 * dim + 4 * dim * dim + dim + dim)
+            prev = dim
+        return total + self.dims[-1] * 2 + self.dims[-1] * self.n_classes
+
+
+def init_params(key: jax.Array, cfg: ConvNeXtConfig) -> dict:
+    ks = iter(layers.split_keys(key, 64))
+    params: dict = {
+        "stem_w": layers.conv_init(next(ks), (4, 4, 3, cfg.dims[0])),
+        "stem_b": jnp.zeros((cfg.dims[0],), jnp.float32),
+        "stem_ln_s": jnp.ones((cfg.dims[0],), jnp.float32),
+        "stem_ln_b": jnp.zeros((cfg.dims[0],), jnp.float32),
+        "stages": [],
+    }
+    prev = cfg.dims[0]
+    for depth, dim in zip(cfg.depths, cfg.dims):
+        stage: dict = {}
+        if dim != prev:
+            stage["down_ln_s"] = jnp.ones((prev,), jnp.float32)
+            stage["down_ln_b"] = jnp.zeros((prev,), jnp.float32)
+            stage["down_w"] = layers.conv_init(next(ks), (2, 2, prev, dim))
+            stage["down_b"] = jnp.zeros((dim,), jnp.float32)
+        stage["blocks"] = {
+            "dw_w": _stack(next(ks), depth, (7, 7, 1, dim), conv=True),
+            "dw_b": jnp.zeros((depth, dim), jnp.float32),
+            "ln_s": jnp.ones((depth, dim), jnp.float32),
+            "ln_b": jnp.zeros((depth, dim), jnp.float32),
+            "w1": _stack(next(ks), depth, (dim, 4 * dim)),
+            "b1": jnp.zeros((depth, 4 * dim), jnp.float32),
+            "w2": _stack(next(ks), depth, (4 * dim, dim)),
+            "b2": jnp.zeros((depth, dim), jnp.float32),
+            "gamma": jnp.full((depth, dim), cfg.layer_scale_init,
+                              jnp.float32),
+        }
+        params["stages"].append(stage)
+        prev = dim
+    params.update({
+        "head_ln_s": jnp.ones((cfg.dims[-1],), jnp.float32),
+        "head_ln_b": jnp.zeros((cfg.dims[-1],), jnp.float32),
+        "head_w": layers.normal_init(next(ks),
+                                     (cfg.dims[-1], cfg.n_classes)),
+        "head_b": jnp.zeros((cfg.n_classes,), jnp.float32),
+    })
+    return params
+
+
+def _stack(key, depth, shape, conv=False):
+    init = layers.conv_init if conv else functools.partial(
+        layers.fanin_init, fan_axis=0)
+    keys = layers.split_keys(key, depth)
+    return jnp.stack([init(k, shape) for k in keys])
+
+
+def param_specs(cfg: ConvNeXtConfig, rules: Rules) -> dict:
+    fs, mp = rules.fsdp, rules.model
+    specs: dict = {
+        "stem_w": P(None, None, None, rules.shard_if(cfg.dims[0], mp)),
+        "stem_b": P(None), "stem_ln_s": P(None), "stem_ln_b": P(None),
+        "stages": [],
+    }
+    prev = cfg.dims[0]
+    for depth, dim in zip(cfg.depths, cfg.dims):
+        st: dict = {}
+        if dim != prev:
+            st["down_ln_s"] = P(None)
+            st["down_ln_b"] = P(None)
+            st["down_w"] = P(None, None, None, rules.shard_if(dim, mp))
+            st["down_b"] = P(None)
+        c_sh = rules.shard_if(dim, mp)
+        st["blocks"] = {
+            "dw_w": P(None, None, None, None, c_sh),
+            "dw_b": P(None, None),
+            "ln_s": P(None, None), "ln_b": P(None, None),
+            "w1": P(None, fs, rules.shard_if(4 * dim, mp)),
+            "b1": P(None, None),
+            "w2": P(None, rules.shard_if(4 * dim, mp), fs),
+            "b2": P(None, None),
+            "gamma": P(None, None),
+        }
+        specs["stages"].append(st)
+        prev = dim
+    specs.update({
+        "head_ln_s": P(None), "head_ln_b": P(None),
+        "head_w": P(fs, None), "head_b": P(None),
+    })
+    return specs
+
+
+def abstract_params(cfg: ConvNeXtConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                          jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _pointwise(x, w, enabled_binary: bool):
+    cd = layers.COMPUTE_DTYPE
+    if not enabled_binary:
+        return x @ w.astype(cd)
+    xb = binarize.ste_sign(x.astype(jnp.float32)).astype(cd)
+    wb = binarize.ste_sign(w).astype(cd)
+    return xb @ wb
+
+
+def forward(params: dict, images: jnp.ndarray, cfg: ConvNeXtConfig,
+            rules: Rules) -> jnp.ndarray:
+    cd = layers.COMPUTE_DTYPE
+    b = images.shape[0]
+    bspec = rules.batch_spec(b)
+    mp = rules.model
+
+    x = lax.conv_general_dilated(
+        images.astype(cd), params["stem_w"].astype(cd), (4, 4), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = x + params["stem_b"].astype(cd)
+    x = layers.layer_norm(x, params["stem_ln_s"], params["stem_ln_b"])
+
+    prev = cfg.dims[0]
+    for stage, (depth, dim) in zip(params["stages"],
+                                   zip(cfg.depths, cfg.dims)):
+        if dim != prev:
+            x = layers.layer_norm(x, stage["down_ln_s"], stage["down_ln_b"])
+            x = lax.conv_general_dilated(
+                x, stage["down_w"].astype(cd), (2, 2), "VALID",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = x + stage["down_b"].astype(cd)
+        x = rules.constrain(x, bspec, None, None, rules.shard_if(dim, mp))
+
+        def block(x, bp, dim=dim):
+            h = lax.conv_general_dilated(
+                x, bp["dw_w"].astype(cd), (1, 1), [(3, 3), (3, 3)],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=dim)
+            h = h + bp["dw_b"].astype(cd)
+            h = layers.layer_norm(h, bp["ln_s"], bp["ln_b"])
+            h = layers.gelu(_pointwise(h, bp["w1"], cfg.binary_pointwise)
+                            + bp["b1"].astype(cd))
+            h = (_pointwise(h, bp["w2"], cfg.binary_pointwise)
+                 + bp["b2"].astype(cd))
+            return x + bp["gamma"].astype(cd) * h, None
+
+        if cfg.unroll:
+            for i in range(depth):
+                bp = jax.tree.map(lambda p, i=i: p[i], stage["blocks"])
+                x, _ = block(x, bp)
+        else:
+            body = jax.checkpoint(
+                block, policy=jax.checkpoint_policies.nothing_saveable)
+            x, _ = lax.scan(body, x, stage["blocks"])
+        prev = dim
+
+    x = jnp.mean(x.astype(jnp.float32), axis=(1, 2))
+    x = layers.layer_norm(x, params["head_ln_s"], params["head_ln_b"])
+    return x @ params["head_w"] + params["head_b"]
+
+
+def loss_fn(params, batch, cfg: ConvNeXtConfig, rules: Rules):
+    logits = forward(params, batch["images"], cfg, rules).astype(
+        jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None],
+                               axis=-1)[:, 0]
+    return jnp.mean(lse - gold), {}
+
+
+def make_train_step(cfg: ConvNeXtConfig, rules: Rules, *, lr=4e-3):
+    def train_step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg, rules)
+        clip = ((lambda p: ("w1" in p or "w2" in p) and "blocks" in p)
+                if cfg.binary_pointwise else None)
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, lr=lr, clip_latent_paths=clip)
+        return params, opt_state, {"loss": loss, **om}
+    return train_step

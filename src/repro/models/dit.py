@@ -1,0 +1,304 @@
+"""Diffusion Transformer (DiT-L/2, DiT-XL/2) — Peebles & Xie, arXiv:2212.09748.
+
+Operates in a VAE latent space (8× downsample, 4 channels): img_res 256 →
+32×32×4 latents → patch 2 → 256 tokens.  Conditioning (timestep + class) is
+injected with adaLN-zero: per-block shift/scale/gate regressed from the
+conditioning vector, gates initialized to zero.
+
+Steps provided:
+
+* ``train_step`` — DDPM ε-prediction MSE at uniformly sampled t (the
+  assigned ``train_256``/``train_1024`` cells),
+* ``sample_step`` — one DDIM denoising update; a 50-step sampler is 50
+  invocations (the assigned ``gen_1024``/``gen_fast`` cells lower this
+  function — the sampling loop is step-count × this cost).
+
+Sharding: batch over data axes when divisible, else tokens over data
+(gen_1024 has batch 4); heads/MLP over ``model`` (16 heads, divisible).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import Rules
+from repro.models import layers
+from repro.optim import adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    name: str
+    img_res: int               # pixel resolution (latent = /8)
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_classes: int = 1000
+    latent_channels: int = 4
+    vae_downsample: int = 8
+    mlp_ratio: int = 4
+    # diffusion schedule
+    n_train_timesteps: int = 1000
+    # Unrolled layer loop (dry-run cost probes; see layers.scan_layers)
+    unroll: bool = False
+    # Activation-checkpoint policy (see layers.REMAT_POLICIES)
+    remat_policy: str = "nothing"
+    # Megatron-SP: shard the token dim of the residual stream over the
+    # model axis (halves the per-block boundary wire: RS+AG vs 2×AR)
+    seq_shard: bool = False
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return self.mlp_ratio * self.d_model
+
+    def latent_res(self, img_res: int | None = None) -> int:
+        return (img_res or self.img_res) // self.vae_downsample
+
+    def n_tokens(self, img_res: int | None = None) -> int:
+        return (self.latent_res(img_res) // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.latent_channels
+
+    def param_count(self) -> int:
+        d, l = self.d_model, self.n_layers
+        per_layer = 4 * d * d + 2 * d * self.d_ff + d * 6 * d + 6 * d
+        cond = 256 * d + d * d + self.n_classes * d
+        final = d * 2 * d + d * 2 * self.patch_dim
+        return (l * per_layer + cond + self.patch_dim * d + final)
+
+
+def init_params(key: jax.Array, cfg: DiTConfig) -> dict:
+    d, l, ff = cfg.d_model, cfg.n_layers, cfg.d_ff
+    ks = layers.split_keys(key, 14)
+    lay = {
+        "wqkv": _stack(ks[0], l, (d, 3 * d)),
+        "wo": _stack(ks[1], l, (d, d)),
+        "w1": _stack(ks[2], l, (d, ff)),
+        "w2": _stack(ks[3], l, (ff, d)),
+        # adaLN-zero: 6 modulation vectors per block; zero-init so each
+        # block starts as identity (the "-zero" in adaLN-zero).
+        "ada_w": jnp.zeros((l, d, 6 * d), jnp.float32),
+        "ada_b": jnp.zeros((l, 6 * d), jnp.float32),
+    }
+    grid = cfg.latent_res() // cfg.patch
+    return {
+        "patch_w": layers.fanin_init(ks[4], (cfg.patch_dim, d)),
+        "patch_b": jnp.zeros((d,), jnp.float32),
+        "pos": layers.normal_init(ks[5], (grid * grid, d)),
+        "t_mlp1": layers.fanin_init(ks[6], (256, d)),
+        "t_mlp2": layers.fanin_init(ks[7], (d, d)),
+        "label_emb": layers.normal_init(ks[8], (cfg.n_classes + 1, d)),
+        "layers": lay,
+        "final_ada_w": jnp.zeros((d, 2 * d), jnp.float32),
+        "final_ada_b": jnp.zeros((2 * d,), jnp.float32),
+        # 2x channels: predict (eps, sigma) like the paper
+        "final_w": jnp.zeros((d, 2 * cfg.patch_dim), jnp.float32),
+        "final_b": jnp.zeros((2 * cfg.patch_dim,), jnp.float32),
+    }
+
+
+def _stack(key, l, shape):
+    return jax.random.normal(key, (l, *shape), jnp.float32) / math.sqrt(
+        shape[0])
+
+
+def param_specs(cfg: DiTConfig, rules: Rules) -> dict:
+    fs, mp = rules.fsdp, rules.model
+    d, ff = cfg.d_model, cfg.d_ff
+    lay = {
+        "wqkv": P(None, fs, rules.shard_if(3 * d, mp)),
+        "wo": P(None, rules.shard_if(d, mp), fs),
+        "w1": P(None, fs, rules.shard_if(ff, mp)),
+        "w2": P(None, rules.shard_if(ff, mp), fs),
+        "ada_w": P(None, fs, rules.shard_if(6 * d, mp)),
+        "ada_b": P(None, None),
+    }
+    return {
+        "patch_w": P(None, fs), "patch_b": P(None),
+        "pos": P(None, None),
+        "t_mlp1": P(None, fs), "t_mlp2": P(fs, None),
+        "label_emb": P(None, fs),
+        "layers": lay,
+        "final_ada_w": P(fs, None), "final_ada_b": P(None),
+        "final_w": P(fs, None), "final_b": P(None),
+    }
+
+
+def abstract_params(cfg: DiTConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                          jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def timestep_embedding(t: jnp.ndarray, dim: int = 256) -> jnp.ndarray:
+    """Sinusoidal features of diffusion timestep t (B,) -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10_000.0)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def patchify(lat: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, H/p * W/p, p*p*C)."""
+    b, hh, ww, c = lat.shape
+    g_h, g_w = hh // patch, ww // patch
+    x = lat.reshape(b, g_h, patch, g_w, patch, c)
+    x = jnp.transpose(x, (0, 1, 3, 2, 4, 5))
+    return x.reshape(b, g_h * g_w, patch * patch * c)
+
+
+def unpatchify(x: jnp.ndarray, patch: int, grid: int, c: int) -> jnp.ndarray:
+    b, n, _ = x.shape
+    x = x.reshape(b, grid, grid, patch, patch, c)
+    x = jnp.transpose(x, (0, 1, 3, 2, 4, 5))
+    return x.reshape(b, grid * patch, grid * patch, c)
+
+
+def forward(params: dict, latents: jnp.ndarray, t: jnp.ndarray,
+            labels: jnp.ndarray, cfg: DiTConfig, rules: Rules):
+    """latents: (B, Hl, Wl, C); t: (B,) int; labels: (B,) int.
+    Returns (eps_pred, sigma_raw) each (B, Hl, Wl, C)."""
+    b, hl, _, c = latents.shape
+    cd = layers.COMPUTE_DTYPE
+    grid = hl // cfg.patch
+    n_tok = grid * grid
+    bspec = rules.batch_spec(b)
+    # batch 4 on a 16-way data axis: shard tokens over data instead
+    tspec = None if bspec is not None else rules.shard_if(
+        n_tok, rules.batch[-1])
+    mp = rules.model
+
+    x = patchify(latents, cfg.patch).astype(cd) @ params["patch_w"].astype(cd)
+    x = x + params["patch_b"].astype(cd)
+    pos = params["pos"]
+    if pos.shape[0] != n_tok:
+        side = int(math.sqrt(pos.shape[0]))
+        img = pos.reshape(1, side, side, -1)
+        img = jax.image.resize(img, (1, grid, grid, pos.shape[-1]),
+                               "bilinear")
+        pos = img.reshape(n_tok, -1)
+    if cfg.seq_shard and tspec is None:
+        # Megatron-SP residual: tokens over model between blocks; GSPMD
+        # lowers each block boundary to reduce-scatter + all-gather
+        # instead of two all-reduces (half the wire bytes).
+        tspec = rules.shard_if(n_tok, rules.model)
+    # attention tensors are head-sharded over model — their token dim
+    # must not also claim the model axis
+    attn_tspec = None if tspec == rules.model else tspec
+    x = x + pos.astype(cd)[None]
+    x = rules.constrain(x, bspec, tspec, None)
+
+    temb = timestep_embedding(t) @ params["t_mlp1"]
+    cvec = (jax.nn.silu(temb) @ params["t_mlp2"]
+            + params["label_emb"][labels])              # (B, D) f32
+    cvec = jax.nn.silu(cvec).astype(cd)
+
+    h, hd = cfg.n_heads, cfg.d_head
+    s = n_tok
+
+    def layer_body(x, lp):
+        mods = cvec @ lp["ada_w"].astype(cd) + lp["ada_b"].astype(cd)
+        (sh1, sc1, g1, sh2, sc2, g2) = jnp.split(mods, 6, axis=-1)
+        hn = layers.layer_norm(x, jnp.ones((cfg.d_model,), jnp.float32),
+                               None)
+        hn = layers.modulate(hn, sh1, sc1)
+        qkv = hn @ lp["wqkv"].astype(cd)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = rules.constrain(q.reshape(b, s, h, hd), bspec, attn_tspec,
+                            mp, None)
+        k = rules.constrain(k.reshape(b, s, h, hd), bspec, None, mp, None)
+        v = rules.constrain(v.reshape(b, s, h, hd), bspec, None, mp, None)
+        o = layers.chunked_attention(
+            q, k, v, causal=False, q_chunk=s,
+            kv_chunk=min(1024, s))
+        o = o.reshape(b, s, h * hd) @ lp["wo"].astype(cd)
+        x = x + g1[:, None, :] * o
+        hn = layers.layer_norm(x, jnp.ones((cfg.d_model,), jnp.float32),
+                               None)
+        hn = layers.modulate(hn, sh2, sc2)
+        out = layers.gelu(hn @ lp["w1"].astype(cd)) @ lp["w2"].astype(cd)
+        x = x + g2[:, None, :] * out
+        x = rules.constrain(x, bspec, tspec, None)
+        return x, None
+
+    x, _ = layers.scan_layers(layer_body, x, params["layers"],
+                              n_layers=cfg.n_layers, unroll=cfg.unroll,
+                              remat_policy=cfg.remat_policy)
+
+    fmods = cvec @ params["final_ada_w"].astype(cd) + params[
+        "final_ada_b"].astype(cd)
+    fsh, fsc = jnp.split(fmods, 2, axis=-1)
+    x = layers.modulate(
+        layers.layer_norm(x, jnp.ones((cfg.d_model,), jnp.float32), None),
+        fsh, fsc)
+    out = x @ params["final_w"].astype(cd) + params["final_b"].astype(cd)
+    eps, sigma = jnp.split(out, 2, axis=-1)
+    return (unpatchify(eps, cfg.patch, grid, c),
+            unpatchify(sigma, cfg.patch, grid, c))
+
+
+# --------------------------------------------------------------------------
+# Diffusion schedule (linear betas, DDPM) + steps
+# --------------------------------------------------------------------------
+
+def alphas_cumprod(cfg: DiTConfig) -> jnp.ndarray:
+    betas = jnp.linspace(1e-4, 0.02, cfg.n_train_timesteps,
+                         dtype=jnp.float32)
+    return jnp.cumprod(1.0 - betas)
+
+
+def train_loss(params, batch, cfg: DiTConfig, rules: Rules):
+    """batch: latents (B,H,W,C), labels (B,), t (B,), noise (B,H,W,C)."""
+    acp = alphas_cumprod(cfg)[batch["t"]][:, None, None, None]
+    noisy = (jnp.sqrt(acp) * batch["latents"]
+             + jnp.sqrt(1 - acp) * batch["noise"])
+    eps, _ = forward(params, noisy, batch["t"], batch["labels"], cfg, rules)
+    return jnp.mean(jnp.square(eps.astype(jnp.float32)
+                               - batch["noise"].astype(jnp.float32))), {}
+
+
+def make_train_step(cfg: DiTConfig, rules: Rules, *, lr=1e-4):
+    def train_step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(train_loss, has_aux=True)(
+            params, batch, cfg, rules)
+        params, opt_state, om = adamw_update(params, grads, opt_state,
+                                             lr=lr, weight_decay=0.0)
+        return params, opt_state, {"loss": loss, **om}
+    return train_step
+
+
+def make_sample_step(cfg: DiTConfig, rules: Rules):
+    """One DDIM update x_t -> x_{t_prev} (deterministic, eta=0)."""
+    acp = alphas_cumprod(cfg)
+
+    def sample_step(params, x_t, t, t_prev, labels):
+        eps, _ = forward(params, x_t, t, labels, cfg, rules)
+        eps = eps.astype(jnp.float32)
+        a_t = acp[t][:, None, None, None]
+        a_p = jnp.where(t_prev >= 0, acp[jnp.maximum(t_prev, 0)],
+                        jnp.ones_like(t_prev, jnp.float32))[:, None, None,
+                                                            None]
+        x0 = (x_t.astype(jnp.float32) - jnp.sqrt(1 - a_t) * eps
+              ) / jnp.sqrt(a_t)
+        return (jnp.sqrt(a_p) * x0
+                + jnp.sqrt(1 - a_p) * eps).astype(x_t.dtype)
+
+    return sample_step

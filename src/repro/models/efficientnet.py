@@ -1,0 +1,322 @@
+"""EfficientNet-B7 — Tan & Le, arXiv:1905.11946 (width 2.0 / depth 3.1).
+
+MBConv blocks (expand 1×1 → depthwise k×k → squeeze-excite → project 1×1)
+with batch norm and SiLU.  The B7 scaling yields 55 blocks in 7 stages;
+within each stage the stride-1 repeat blocks are identical and are scanned
+(stacked params), so the traced depth stays at 7 stage-heads + 7 scans.
+
+Batch norm carries running statistics in a separate ``state`` tree:
+``apply(params, state, x, train=True)`` computes batch stats (all-reduced
+over the data axes by GSPMD) and returns the updated state; ``train=False``
+consumes the running stats (the serve_* shapes).
+
+PhoneBit applicability (DESIGN §6): with ``binary_pointwise=True`` the 1×1
+expand/project convs binarize (STE); depthwise convs (tiny K) and SE stay
+float — the documented deviation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import binarize
+from repro.distributed.sharding import Rules
+from repro.models import layers
+from repro.optim import sgdm_update
+
+# (expand_ratio, kernel, stride, base_out_channels, base_repeats)
+_BASE_BLOCKS = ((1, 3, 1, 16, 1), (6, 3, 2, 24, 2), (6, 5, 2, 40, 2),
+                (6, 3, 2, 80, 3), (6, 5, 1, 112, 3), (6, 5, 2, 192, 4),
+                (6, 3, 1, 320, 1))
+_BN_MOM = 0.99
+_BN_EPS = 1e-3
+
+
+def round_filters(c: float, width: float) -> int:
+    c *= width
+    new = max(8, int(c + 4) // 8 * 8)
+    if new < 0.9 * c:
+        new += 8
+    return int(new)
+
+
+def round_repeats(r: int, depth: float) -> int:
+    return int(math.ceil(depth * r))
+
+
+@dataclasses.dataclass(frozen=True)
+class EffNetConfig:
+    name: str
+    img_res: int = 600
+    width: float = 2.0
+    depth: float = 3.1
+    n_classes: int = 1000
+    se_ratio: float = 0.25
+    binary_pointwise: bool = False
+    # Unroll repeat-block scans (exact dry-run cost accounting: XLA counts
+    # while bodies once, so scans under-report FLOPs by repeat×).
+    unroll: bool = False
+
+    @property
+    def stem_ch(self) -> int:
+        return round_filters(32, self.width)
+
+    @property
+    def head_ch(self) -> int:
+        return round_filters(1280, self.width)
+
+    def stages(self):
+        """Resolved per-stage (expand, kernel, stride, in_c, out_c, repeats)."""
+        out = []
+        prev = self.stem_ch
+        for e, k, s, c, r in _BASE_BLOCKS:
+            oc = round_filters(c, self.width)
+            out.append((e, k, s, prev, oc, round_repeats(r, self.depth)))
+            prev = oc
+        return out
+
+    def param_count(self) -> int:
+        params = jax.eval_shape(
+            functools.partial(init_params, cfg=self), jax.random.key(0))
+        return sum(int(x.size) for x in jax.tree.leaves(params[0]))
+
+
+def _mb_block_params(key, e, k, c_in, c_out, se_ratio,
+                     n: int | None = None):
+    """One MBConv block's params; n != None stacks n copies (scan xs)."""
+    mid = c_in * e
+    se = max(1, int(c_in * se_ratio))
+    ks = iter(layers.split_keys(key, 8))
+    def st(shape, init=layers.conv_init):
+        if n is None:
+            return init(next(ks), shape)
+        kk = layers.split_keys(next(ks), n)
+        return jnp.stack([init(k2, shape) for k2 in kk])
+    def zeros(shape):
+        return jnp.zeros(shape if n is None else (n, *shape), jnp.float32)
+    def ones(shape):
+        return jnp.ones(shape if n is None else (n, *shape), jnp.float32)
+    p = {}
+    if e != 1:
+        p["exp_w"] = st((1, 1, c_in, mid))
+        p["exp_bn_s"], p["exp_bn_b"] = ones((mid,)), zeros((mid,))
+    p["dw_w"] = st((k, k, 1, mid))
+    p["dw_bn_s"], p["dw_bn_b"] = ones((mid,)), zeros((mid,))
+    p["se_w1"] = st((1, 1, mid, se))
+    p["se_b1"] = zeros((se,))
+    p["se_w2"] = st((1, 1, se, mid))
+    p["se_b2"] = zeros((mid,))
+    p["proj_w"] = st((1, 1, mid, c_out))
+    p["proj_bn_s"], p["proj_bn_b"] = ones((c_out,)), zeros((c_out,))
+    return p
+
+
+def _mb_block_state(e, c_in, c_out, n: int | None = None):
+    mid = c_in * e
+    def zo(c):
+        shape = (c,) if n is None else (n, c)
+        return {"mean": jnp.zeros(shape, jnp.float32),
+                "var": jnp.ones(shape, jnp.float32)}
+    s = {}
+    if e != 1:
+        s["exp_bn"] = zo(mid)
+    s["dw_bn"] = zo(mid)
+    s["proj_bn"] = zo(c_out)
+    return s
+
+
+def init_params(key: jax.Array, cfg: EffNetConfig):
+    """Returns (params, state) — state carries BN running stats."""
+    ks = iter(layers.split_keys(key, 64))
+    params: dict = {
+        "stem_w": layers.conv_init(next(ks), (3, 3, 3, cfg.stem_ch)),
+        "stem_bn_s": jnp.ones((cfg.stem_ch,), jnp.float32),
+        "stem_bn_b": jnp.zeros((cfg.stem_ch,), jnp.float32),
+        "stages": [],
+    }
+    state: dict = {
+        "stem_bn": {"mean": jnp.zeros((cfg.stem_ch,), jnp.float32),
+                    "var": jnp.ones((cfg.stem_ch,), jnp.float32)},
+        "stages": [],
+    }
+    for e, k, s, c_in, c_out, r in cfg.stages():
+        sp = {"head": _mb_block_params(next(ks), e, k, c_in, c_out,
+                                       cfg.se_ratio)}
+        ss = {"head": _mb_block_state(e, c_in, c_out)}
+        if r > 1:
+            sp["rest"] = _mb_block_params(next(ks), e, k, c_out, c_out,
+                                          cfg.se_ratio, n=r - 1)
+            ss["rest"] = _mb_block_state(e, c_out, c_out, n=r - 1)
+        params["stages"].append(sp)
+        state["stages"].append(ss)
+    params.update({
+        "head_w": layers.conv_init(
+            next(ks), (1, 1, cfg.stages()[-1][4], cfg.head_ch)),
+        "head_bn_s": jnp.ones((cfg.head_ch,), jnp.float32),
+        "head_bn_b": jnp.zeros((cfg.head_ch,), jnp.float32),
+        "fc_w": layers.normal_init(next(ks), (cfg.head_ch, cfg.n_classes)),
+        "fc_b": jnp.zeros((cfg.n_classes,), jnp.float32),
+    })
+    state["head_bn"] = {"mean": jnp.zeros((cfg.head_ch,), jnp.float32),
+                        "var": jnp.ones((cfg.head_ch,), jnp.float32)}
+    return params, state
+
+
+def param_specs(cfg: EffNetConfig, rules: Rules):
+    """Channel (model-axis) sharding on every conv's output-channel dim."""
+    params, state = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.key(0))
+
+    def spec_of(leaf):
+        c = leaf.shape[-1]
+        sh = rules.shard_if(c, rules.model)
+        return P(*([None] * (leaf.ndim - 1)), sh)
+
+    pspecs = jax.tree.map(spec_of, params)
+    sspecs = jax.tree.map(spec_of, state)
+    return pspecs, sspecs
+
+
+def abstract_params(cfg: EffNetConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                          jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _bn(x, scale, bias, stats, train: bool):
+    """Batch norm.  Returns (y, new_stats)."""
+    xf = x.astype(jnp.float32)
+    if train:
+        mean = jnp.mean(xf, axis=(0, 1, 2))
+        var = jnp.var(xf, axis=(0, 1, 2))
+        new = {"mean": _BN_MOM * stats["mean"] + (1 - _BN_MOM) * mean,
+               "var": _BN_MOM * stats["var"] + (1 - _BN_MOM) * var}
+    else:
+        mean, var = stats["mean"], stats["var"]
+        new = stats
+    y = (xf - mean) * lax.rsqrt(var + _BN_EPS) * scale + bias
+    return y.astype(x.dtype), new
+
+
+def _conv(x, w, stride=1, groups=1, padding="SAME"):
+    return lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def _pointwise_conv(x, w, binary: bool):
+    if not binary:
+        return _conv(x, w)
+    xb = binarize.ste_sign(x.astype(jnp.float32)).astype(x.dtype)
+    wb = binarize.ste_sign(w).astype(x.dtype)
+    return _conv(xb, wb)
+
+
+def _mb_block(x, p, s, *, expand, kernel, stride, train, binary,
+              se_only_head=False):
+    """One MBConv block.  Returns (y, new_state)."""
+    ns = dict(s)
+    h = x
+    if expand != 1:
+        h = _pointwise_conv(h, p["exp_w"], binary)
+        h, ns["exp_bn"] = _bn(h, p["exp_bn_s"], p["exp_bn_b"],
+                              s["exp_bn"], train)
+        h = jax.nn.silu(h)
+    mid = h.shape[-1]
+    h = _conv(h, p["dw_w"], stride=stride, groups=mid)
+    h, ns["dw_bn"] = _bn(h, p["dw_bn_s"], p["dw_bn_b"], s["dw_bn"], train)
+    h = jax.nn.silu(h)
+    # squeeze-excite (float, DESIGN §6)
+    se = jnp.mean(h.astype(jnp.float32), axis=(1, 2), keepdims=True)
+    se = jax.nn.silu(_conv(se, p["se_w1"]) + p["se_b1"])
+    se = jax.nn.sigmoid(_conv(se, p["se_w2"]) + p["se_b2"])
+    h = h * se.astype(h.dtype)
+    h = _pointwise_conv(h, p["proj_w"], binary)
+    h, ns["proj_bn"] = _bn(h, p["proj_bn_s"], p["proj_bn_b"],
+                           s["proj_bn"], train)
+    if stride == 1 and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    return h, ns
+
+
+def apply(params, state, images, cfg: EffNetConfig, rules: Rules, *,
+          train: bool):
+    """Returns (logits, new_state)."""
+    cd = layers.COMPUTE_DTYPE
+    b = images.shape[0]
+    bspec = rules.batch_spec(b)
+    new_state = {"stages": []}
+
+    x = _conv(images.astype(cd), params["stem_w"], stride=2)
+    x, new_state["stem_bn"] = _bn(x, params["stem_bn_s"],
+                                  params["stem_bn_b"], state["stem_bn"],
+                                  train)
+    x = jax.nn.silu(x)
+
+    for (e, k, s, c_in, c_out, r), sp, ss in zip(
+            cfg.stages(), params["stages"], state["stages"]):
+        x = rules.constrain(x, bspec, None, None,
+                            rules.shard_if(x.shape[-1], rules.model))
+        x, head_ns = _mb_block(x, sp["head"], ss["head"], expand=e,
+                               kernel=k, stride=s, train=train,
+                               binary=cfg.binary_pointwise)
+        stage_ns = {"head": head_ns}
+        if r > 1:
+            def body(x, ps):
+                bp, bs = ps
+                y, ns = _mb_block(x, bp, bs, expand=e, kernel=k, stride=1,
+                                  train=train, binary=cfg.binary_pointwise)
+                return y, ns
+            if cfg.unroll:
+                all_ns = []
+                for i in range(r - 1):
+                    ps_i = jax.tree.map(lambda p, i=i: p[i],
+                                        (sp["rest"], ss["rest"]))
+                    x, ns_i = body(x, ps_i)
+                    all_ns.append(ns_i)
+                rest_ns = jax.tree.map(lambda *xs: jnp.stack(xs), *all_ns)
+            else:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+                x, rest_ns = lax.scan(body, x, (sp["rest"], ss["rest"]))
+            stage_ns["rest"] = rest_ns
+        new_state["stages"].append(stage_ns)
+
+    x = _conv(x, params["head_w"])
+    x, new_state["head_bn"] = _bn(x, params["head_bn_s"],
+                                  params["head_bn_b"], state["head_bn"],
+                                  train)
+    x = jax.nn.silu(x)
+    x = jnp.mean(x.astype(jnp.float32), axis=(1, 2))
+    logits = x @ params["fc_w"] + params["fc_b"]
+    return logits, new_state
+
+
+def loss_fn(params, state, batch, cfg: EffNetConfig, rules: Rules):
+    logits, new_state = apply(params, state, batch["images"], cfg, rules,
+                              train=True)
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, batch["labels"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold), new_state
+
+
+def make_train_step(cfg: EffNetConfig, rules: Rules, *, lr=0.016):
+    def train_step(params, state, opt_state, batch):
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, state, batch, cfg, rules)
+        params, opt_state, om = sgdm_update(params, grads, opt_state,
+                                            lr=lr)
+        return params, new_state, opt_state, {"loss": loss, **om}
+    return train_step

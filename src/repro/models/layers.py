@@ -1,0 +1,358 @@
+"""Shared model substrate: norms, RoPE, attention, initializers, dtype policy.
+
+Attention is the memory-critical op at the assigned shapes (32k prefill would
+materialize a 17 GB score matrix per device if written naively), so both the
+training/prefill path and the decode path are written memory-bounded:
+
+* :func:`chunked_attention` — online-softmax (flash-style) attention in pure
+  JAX: ``lax.scan`` over KV chunks with running (max, denom, acc) statistics.
+  Causal masking uses a *triangular schedule*: a static python loop over Q
+  chunks where each Q chunk only scans KV chunks up to its own diagonal, so
+  causal attention does ~S²/2 work instead of S² (the masked half is never
+  computed, not just masked out).
+
+* :func:`flash_decode` — decode-time attention over a sequence-sharded KV
+  cache (flash-decoding style SP).  Runs under ``shard_map``: each model
+  shard computes partial (logsumexp, weighted-V) over its KV chunk and the
+  partials are combined with two small cross-shard reductions instead of
+  all-gathering the cache.
+
+Dtype policy: parameters are stored f32 (optimizer-friendly), compute is
+bf16 via :func:`cast_compute`, reductions/softmax accumulate in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import os
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+# Dry-run accounting mode: XLA:CPU legalizes every bf16 dot to f32
+# (convert operands + f32 dot) and hoists those converts ahead of the
+# GSPMD collectives, so a bf16 model compiled for host devices reports
+# inflated, convert-noise-riddled bytes/wire numbers that a TPU lowering
+# (native MXU bf16) would not have.  REPRO_DRYRUN_F32=1 runs the whole
+# model in f32 — zero converts, clean collective placement — and the
+# analysis applies a documented ×0.5 bf16 adjustment to bytes/wire.
+COMPUTE_DTYPE = (jnp.float32 if os.environ.get("REPRO_DRYRUN_F32")
+                 else jnp.bfloat16)
+
+
+def cast_compute(x: jnp.ndarray, dtype=COMPUTE_DTYPE) -> jnp.ndarray:
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return x.astype(dtype)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Initializers (all take a key and return f32)
+# --------------------------------------------------------------------------
+
+def normal_init(key, shape, stddev: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * stddev)
+
+
+def fanin_init(key, shape, fan_axis: int = 0):
+    fan_in = shape[fan_axis] if isinstance(fan_axis, int) else math.prod(
+        shape[a] for a in fan_axis)
+    return jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+
+
+def conv_init(key, shape):
+    """HWIO conv kernel, He-normal over the receptive field."""
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray | None,
+               eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def modulate(x: jnp.ndarray, shift: jnp.ndarray, scale: jnp.ndarray):
+    """adaLN modulation (DiT): x * (1 + scale) + shift, broadcast over seq."""
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Chunked (flash-style) attention — training & prefill
+# --------------------------------------------------------------------------
+
+def _attn_one_q_chunk(q, k, v, *, mask_fn, kv_chunk: int, n_kv: int,
+                      step_remat: bool = True):
+    """Online-softmax over KV chunks for one Q chunk.
+
+    q: (B, Sq, KV, G, hd); k/v: (B, Skv_used, KV, hd) — already sliced to the
+    KV prefix this Q chunk may attend to.  mask_fn(q_idx, kv_idx) -> bool
+    (True = attend) applied only to the final (diagonal) chunk when causal.
+
+    Mixed precision (MXU-style): operands stay bf16, scores/stats/acc
+    accumulate f32 via preferred_element_type, probabilities downcast to
+    bf16 for the PV matmul, output downcast before the caller's concat —
+    no full-(Sq, H·hd) f32 tensor ever materializes (perf-log it5).
+    Returns (B, Sq, KV, G, hd) in q.dtype.
+    """
+    b, sq, kvh, g, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+
+    k = k.reshape(b, n_kv, kv_chunk, kvh, hd)
+    v = v.reshape(b, n_kv, kv_chunk, kvh, hd)
+
+    def step(carry, kv_i):
+        m, l, acc = carry
+        kc, vc, ci = kv_i                                  # (B,kc,KV,hd) x2
+        # scores: (B, KV, G, Sq, kc) f32 accumulate from bf16 operands;
+        # 1/sqrt(hd) folded into the f32 scores (no f32 roundtrip on q)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if mask_fn is not None:
+            q_pos = jnp.arange(sq)                          # offset added by caller
+            kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+            mask = mask_fn(q_pos, kv_pos)                   # (Sq, kc) bool
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    ks = jnp.moveaxis(k, 1, 0)                              # (n_kv, B, kc, KV, hd)
+    vs = jnp.moveaxis(v, 1, 0)
+    # Remat each KV step: without it, scan's AD stashes the (Sq, kc) f32
+    # probability matrix of EVERY step for the backward pass (flash
+    # attention's whole point is recomputing those).  step_remat=False
+    # trades that memory back for one less score-chain recompute — the
+    # right call when the outer layer policy already recomputes ("dots")
+    # or HBM has headroom.
+    if step_remat:
+        step = jax.checkpoint(step)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0),
+                              (ks, vs, jnp.arange(n_kv)))
+    out = (acc / l[..., None]).astype(q.dtype)
+    return jnp.transpose(out, (0, 3, 1, 2, 4))              # (B,Sq,KV,G,hd)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, q_chunk: int = 1024, kv_chunk: int = 1024,
+                      step_remat: bool = True) -> jnp.ndarray:
+    """Memory-bounded GQA attention.
+
+    q: (B, S, H, hd); k, v: (B, S, KV, hd) with H = KV * G.  Never
+    materializes the (S, S) score matrix: peak extra memory is
+    O(q_chunk * kv_chunk) per (head, batch).
+
+    Causal uses the triangular schedule: Q chunk i scans only KV chunks
+    [0, i], so FLOPs ~ S²/2 + diagonal masking on the last chunk only.
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, hd)
+
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    assert s % q_chunk == 0 and s % kv_chunk == 0, (s, q_chunk, kv_chunk)
+    n_q = s // q_chunk
+
+    outs = []
+    for qi in range(n_q):
+        q_lo = qi * q_chunk
+        qc = lax.slice_in_dim(q, q_lo, q_lo + q_chunk, axis=1)
+        if causal:
+            # This Q chunk attends to KV positions [0, q_lo + q_chunk).
+            kv_hi = q_lo + q_chunk
+            n_kv = -(-kv_hi // kv_chunk)
+            kv_used = n_kv * kv_chunk
+            kc = lax.slice_in_dim(k, 0, kv_used, axis=1)
+            vc = lax.slice_in_dim(v, 0, kv_used, axis=1)
+
+            def mask_fn(q_pos, kv_pos, q_lo=q_lo):
+                return (q_lo + q_pos)[:, None] >= kv_pos[None, :]
+        else:
+            n_kv = s // kv_chunk
+            kc, vc = k, v
+            mask_fn = None
+        o = _attn_one_q_chunk(qc, kc, vc, mask_fn=mask_fn,
+                              kv_chunk=kv_chunk, n_kv=n_kv,
+                              step_remat=step_remat)
+        outs.append(o)
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(b, s, h, hd)
+
+
+def reference_attention(q, k, v, *, causal: bool) -> jnp.ndarray:
+    """Naive O(S²)-memory oracle for chunked_attention (tests only)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, s, kvh, g, hd) / math.sqrt(hd)
+    s_ = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        s_ = jnp.where(mask[None, None, None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(b, s, h, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Flash decode — sequence-parallel attention over a sharded KV cache
+# --------------------------------------------------------------------------
+
+def flash_decode_local(q, k_cache, v_cache, valid_len, chunk_start):
+    """Partial attention of one query over a *local* KV-cache chunk.
+
+    q: (B, H, hd); k/v_cache: (B, C, KV, hd) local chunk; valid_len: scalar
+    total valid cache length; chunk_start: scalar global offset of the chunk.
+    Returns partials (out (B, H, hd) f32 unnormalized, lse-stats m (B, H),
+    l (B, H)) to be combined across shards.
+    """
+    b, c, kvh, hd = k_cache.shape
+    h = q.shape[1]
+    g = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, kvh, g, hd) / math.sqrt(hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    pos = chunk_start + jnp.arange(c)
+    s = jnp.where((pos < valid_len)[None, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return (o.reshape(b, h, hd), m.reshape(b, h), l.reshape(b, h))
+
+
+def combine_decode_partials(o, m, l, axis_name: str):
+    """Combine per-shard flash-decode partials along ``axis_name``.
+
+    o: (B, H, hd) unnormalized; m, l: (B, H).  Two small collectives
+    (max + sum) instead of an all-gather of the KV cache.
+    """
+    m_glob = lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_glob)
+    l_glob = lax.psum(l * corr, axis_name)
+    o_glob = lax.psum(o * corr[..., None], axis_name)
+    return (o_glob / jnp.maximum(l_glob, 1e-30)[..., None])
+
+
+# --------------------------------------------------------------------------
+# Layer stacking: scan (production) or unrolled python loop (dry-run probes)
+# --------------------------------------------------------------------------
+
+REMAT_POLICIES = {
+    # recompute everything in bwd: minimum memory, +1 forward of FLOPs
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    # save matmul outputs, recompute elementwise only: ~zero extra FLOPs,
+    # memory = per-layer matmul activations — the right default whenever
+    # HBM has headroom (small models / small per-device batches)
+    "dots": jax.checkpoint_policies.dots_saveable,
+}
+
+
+def scan_layers(body, carry, xs_tree, *, n_layers: int, unroll: bool,
+                remat: bool = True, remat_policy: str = "nothing"):
+    """lax.scan over stacked layer params, or an unrolled python loop.
+
+    The unrolled path exists for dry-run cost accounting: XLA's
+    HloCostAnalysis counts a while-loop body ONCE regardless of trip
+    count, so the probe compiles (n_layers=1/2, unroll=True) recover exact
+    per-layer FLOPs/bytes/collectives.  Production always scans (flat HLO,
+    flat compile time).  ``remat`` applies the selected checkpoint policy
+    to the body in both paths, so backward recompute is identical.
+    """
+    if remat:
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat_policy])
+    if not unroll:
+        return lax.scan(body, carry, xs_tree)
+    ys = []
+    for i in range(n_layers):
+        xs_i = jax.tree.map(lambda p, i=i: p[i], xs_tree)
+        carry, y = body(carry, xs_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# --------------------------------------------------------------------------
+# Misc
+# --------------------------------------------------------------------------
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def count_params(params: Any) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def tree_cast(params: Any, dtype) -> Any:
+    return jax.tree.map(lambda x: cast_compute(x, dtype), params)

@@ -1,0 +1,145 @@
+"""The paper's own workloads: AlexNet, VGG16, YOLOv2-Tiny (Tab II-IV, Fig 5).
+
+Each network exists in two execution forms sharing one latent-float
+parameter set:
+
+* **BNN engine form** — ``core.bnn_model.packed_forward`` after
+  ``core.converter.convert``: first layer bit-plane, hidden layers integer
+  xor/popcount/threshold on channel-packed words, last layer float (the
+  PhoneBit deployment path).
+* **float-CNN baseline** — :func:`cnn_float_forward`: the same topology at
+  full precision with ReLU (what CNNdroid / TFLite-float execute in
+  Tab III); and ``bnn_model.float_forward`` — the binarized net's float
+  oracle used for training and engine validation.
+
+Network definitions follow the originals (AlexNet/VGG16 at ImageNet shapes
+— the paper's Tab II model sizes only reconcile with 1000-class ImageNet
+heads; YOLOv2-Tiny at 416² VOC with 125 = 5·(20+5) output channels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.bnn_model import (BConv, BDense, FloatConv, FloatDense,
+                                  Pool, init_params)
+
+# --------------------------------------------------------------------------
+# Specs (paper benchmark networks)
+# --------------------------------------------------------------------------
+
+def alexnet_spec() -> list:
+    """AlexNet, 227x227x3 input, 1000 classes.  conv1 = bit-plane layer."""
+    return [
+        BConv(3, 96, kernel=11, stride=4, pad=0, first=True),
+        Pool(3, 2),
+        BConv(96, 256, kernel=5, stride=1, pad=2),
+        Pool(3, 2),
+        BConv(256, 384, kernel=3, stride=1, pad=1),
+        BConv(384, 384, kernel=3, stride=1, pad=1),
+        BConv(384, 256, kernel=3, stride=1, pad=1),
+        Pool(3, 2),
+        BDense(6 * 6 * 256, 4096),
+        BDense(4096, 4096),
+        FloatDense(4096, 1000),
+    ]
+
+
+def vgg16_spec() -> list:
+    """VGG16, 224x224x3 input, 1000 classes."""
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+           512, 512, 512, "M", 512, 512, 512, "M"]
+    spec: list = []
+    c_in, first = 3, True
+    for item in cfg:
+        if item == "M":
+            spec.append(Pool(2, 2))
+        else:
+            spec.append(BConv(c_in, item, kernel=3, stride=1, pad=1,
+                              first=first))
+            c_in, first = item, False
+    spec += [BDense(7 * 7 * 512, 4096), BDense(4096, 4096),
+             FloatDense(4096, 1000)]
+    return spec
+
+
+def yolov2_tiny_spec() -> list:
+    """YOLOv2-Tiny, 416x416x3 input, 125 output channels (VOC: 5·(20+5)).
+
+    conv9 is the paper's full-precision 1x1 head (Fig 5); pool6 is the
+    darknet stride-1 'same' pool (pad (0,1)) keeping the 13x13 grid.
+    """
+    return [
+        BConv(3, 16, kernel=3, stride=1, pad=1, first=True),
+        Pool(2, 2),
+        BConv(16, 32, kernel=3, stride=1, pad=1), Pool(2, 2),
+        BConv(32, 64, kernel=3, stride=1, pad=1), Pool(2, 2),
+        BConv(64, 128, kernel=3, stride=1, pad=1), Pool(2, 2),
+        BConv(128, 256, kernel=3, stride=1, pad=1), Pool(2, 2),
+        BConv(256, 512, kernel=3, stride=1, pad=1),
+        Pool(2, 1, pad=(0, 1)),
+        BConv(512, 1024, kernel=3, stride=1, pad=1),
+        BConv(1024, 1024, kernel=3, stride=1, pad=1),
+        FloatConv(1024, 125, kernel=1, stride=1, pad=0),
+    ]
+
+
+NETWORKS = {
+    "alexnet": (alexnet_spec, (227, 227, 3)),
+    "vgg16": (vgg16_spec, (224, 224, 3)),
+    "yolov2-tiny": (yolov2_tiny_spec, (416, 416, 3)),
+}
+
+
+def get(name: str):
+    """Returns (spec, input_hwc)."""
+    fn, shape = NETWORKS[name]
+    return fn(), shape
+
+
+def init(name: str, key=None):
+    spec, shape = get(name)
+    key = key if key is not None else jax.random.key(0)
+    return spec, shape, init_params(key, spec)
+
+
+# --------------------------------------------------------------------------
+# Full-precision CNN baseline (Tab III float frameworks)
+# --------------------------------------------------------------------------
+
+def cnn_float_forward(params, spec, x_uint8: jnp.ndarray) -> jnp.ndarray:
+    """The float CNN the paper benchmarks against: same topology, ReLU+BN,
+    full-precision weights (the latent floats), standard 0-padding."""
+    x = x_uint8.astype(jnp.float32) / 255.0
+    for layer, p in zip(spec, params):
+        if isinstance(layer, BConv):
+            x = lax.conv_general_dilated(
+                x, p["w"], (layer.stride, layer.stride),
+                [(layer.pad, layer.pad)] * 2,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            sigma = jnp.sqrt(p["var"] + 1e-4)
+            x = p["gamma"] * (x - p["mu"]) / sigma + p["beta"]
+            x = jax.nn.relu(x)
+        elif isinstance(layer, Pool):
+            if layer.pad != (0, 0):
+                x = jnp.pad(x, ((0, 0), layer.pad, layer.pad, (0, 0)),
+                            constant_values=-jnp.inf)
+            x = lax.reduce_window(
+                x, -jnp.inf, lax.max,
+                (1, layer.window, layer.window, 1),
+                (1, layer.stride, layer.stride, 1), "VALID")
+        elif isinstance(layer, BDense):
+            x = x.reshape(x.shape[0], -1) @ p["w"]
+            sigma = jnp.sqrt(p["var"] + 1e-4)
+            x = p["gamma"] * (x - p["mu"]) / sigma + p["beta"]
+            x = jax.nn.relu(x)
+        elif isinstance(layer, FloatDense):
+            x = x.reshape(x.shape[0], -1) @ p["w"] + p["b"]
+        elif isinstance(layer, FloatConv):
+            x = lax.conv_general_dilated(
+                x, p["w"], (layer.stride, layer.stride),
+                [(layer.pad, layer.pad)] * 2,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+    return x

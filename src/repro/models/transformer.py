@@ -1,0 +1,629 @@
+"""Decoder-only transformer LMs: dense + MoE, GQA, RoPE, KV-cache decode.
+
+Covers the four assigned LM architectures (granite-moe-3b-a800m,
+qwen3-moe-30b-a3b, minitron-8b, command-r-35b) plus arbitrary reduced smoke
+configs.  Design points:
+
+* **scan-over-layers + remat** — parameters are stacked on a leading L dim;
+  one traced layer keeps HLO size and compile time flat in depth, remat
+  bounds activation memory to one layer's residual stash.
+* **Attention sharding modes** (picked per arch by divisibility, see
+  distributed.sharding):
+  - ``tp_heads`` (n_heads % tp == 0): Megatron-style — Q/K/V heads sharded
+    over ``model``; the *triangular* chunked-attention schedule runs
+    (~S²/2 causal FLOPs).
+  - ``sp_seq`` (fallback, e.g. granite's 24 heads on 16 shards): Q sequence
+    dim sharded over ``model``, K/V gathered; full masked KV scan (≤2×
+    causal FLOPs, noted in the roofline's useful-FLOPs ratio).
+* **SP residual stream** — activations between blocks are
+  P(batch, model, None): the per-layer stash that remat saves is sharded
+  over *both* mesh axes, which is what lets 32k-token training fit.
+* **MoE** — expert-parallel shard_map with explicit all_to_all
+  (models.moe); expert count padded to the EP degree when non-divisible.
+* **Decode** — flash-decoding SP: the KV cache shards its sequence dim over
+  ``model``; softmax/PV over the sharded dim lowers to two small
+  all-reduces (max, sum) instead of a cache all-gather.
+
+``long_500k`` is skipped for these archs: their published configs are pure
+full attention (see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import Rules
+from repro.models import layers, moe as moe_lib
+from repro.optim import adamw_init, adamw_update
+
+# --------------------------------------------------------------------------
+# Config
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # MoE (n_experts == 0 -> dense)
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    # variants
+    qk_norm: bool = False
+    mlp_act: str = "swiglu"          # "swiglu" | "relu2"
+    tie_embeddings: bool = False
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-5
+    # attention chunking
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    # PhoneBit technique flag (out of the paper's scope for LMs; DESIGN §6)
+    binary_mlp: bool = False
+    # Unrolled layer loop (dry-run cost probes; see layers.scan_layers)
+    unroll: bool = False
+    # Activation-checkpoint policy: "nothing" (min memory) or "dots"
+    # (save matmul outputs — no bwd recompute; use when HBM has headroom)
+    remat_policy: str = "nothing"
+    # Remat the attention KV-scan step (see layers.chunked_attention)
+    attn_step_remat: bool = True
+
+    @property
+    def moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    def padded_experts(self, ep: int) -> int:
+        return moe_lib.padded_experts(self.n_experts, ep)
+
+    # ---- analytics -------------------------------------------------------
+    def param_count(self, ep: int = 1) -> int:
+        d, l = self.d_model, self.n_layers
+        attn = d * self.qkv_dim + 2 * d * self.kv_dim + self.qkv_dim * d
+        if self.moe:
+            e = self.n_experts
+            mlp = d * e + 3 * e * d * self.d_ff_expert
+        else:
+            n_mats = 3 if self.mlp_act == "swiglu" else 2
+            mlp = n_mats * d * self.d_ff
+        norms = 2 * d + (2 * self.d_head if self.qk_norm else 0)
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + mlp + norms) + embed + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.param_count()
+        d, l = self.d_model, self.n_layers
+        attn = d * self.qkv_dim + 2 * d * self.kv_dim + self.qkv_dim * d
+        mlp = d * self.n_experts + 3 * self.top_k * d * self.d_ff_expert
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + mlp + 2 * d) + embed + d
+
+    def train_flops_per_token(self) -> float:
+        """MODEL_FLOPS/token = 6·N_active (fwd 2N + bwd 4N), attn excluded."""
+        return 6.0 * self.active_param_count()
+
+
+# --------------------------------------------------------------------------
+# Parameter init + specs
+# --------------------------------------------------------------------------
+
+def padded_vocab(vocab: int, multiple: int) -> int:
+    """Megatron-style vocab padding: a vocab that does not divide the TP
+    degree (granite: 49155 on 16) would leave the logits REPLICATED —
+    measured 1.5 GB × dozens of live buffers per device and 16× redundant
+    head FLOPs (perf-log H2).  Pad ids are masked to -inf in the loss and
+    never produced by decode."""
+    return -(-vocab // multiple) * multiple
+
+
+def init_params(key: jax.Array, cfg: LMConfig, ep: int = 1,
+                vocab_pad_to: int = 1) -> dict:
+    """Stacked-layer parameter pytree.  ``ep`` pads the expert dim,
+    ``vocab_pad_to`` pads the vocab (pass the TP degree)."""
+    d, l = cfg.d_model, cfg.n_layers
+    v_pad = padded_vocab(cfg.vocab, vocab_pad_to)
+    ks = layers.split_keys(key, 16)
+    lay: dict[str, jnp.ndarray] = {
+        "ln1": jnp.ones((l, d), jnp.float32),
+        "ln2": jnp.ones((l, d), jnp.float32),
+        "wq": _stack(ks[0], l, (d, cfg.qkv_dim)),
+        "wk": _stack(ks[1], l, (d, cfg.kv_dim)),
+        "wv": _stack(ks[2], l, (d, cfg.kv_dim)),
+        "wo": _stack(ks[3], l, (cfg.qkv_dim, d)),
+    }
+    if cfg.qk_norm:
+        lay["q_norm"] = jnp.ones((l, cfg.d_head), jnp.float32)
+        lay["k_norm"] = jnp.ones((l, cfg.d_head), jnp.float32)
+    if cfg.moe:
+        e_pad = cfg.padded_experts(ep)
+        fe = cfg.d_ff_expert
+        lay["router"] = _stack(ks[4], l, (d, e_pad))
+        lay["we_gate"] = _stack(ks[5], l, (e_pad, d, fe))
+        lay["we_up"] = _stack(ks[6], l, (e_pad, d, fe))
+        lay["we_down"] = _stack(ks[7], l, (e_pad, fe, d))
+    else:
+        if cfg.mlp_act == "swiglu":
+            lay["w_gate"] = _stack(ks[4], l, (d, cfg.d_ff))
+        lay["w_up"] = _stack(ks[5], l, (d, cfg.d_ff))
+        lay["w_down"] = _stack(ks[6], l, (cfg.d_ff, d))
+    params = {
+        "embed": layers.normal_init(ks[8], (v_pad, d)),
+        "layers": lay,
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.normal_init(ks[9], (d, v_pad))
+    return params
+
+
+def _stack(key, l, shape):
+    fan_in = shape[0] if len(shape) == 2 else shape[1]
+    return (jax.random.normal(key, (l, *shape), jnp.float32)
+            / math.sqrt(fan_in))
+
+
+def param_specs(cfg: LMConfig, rules: Rules) -> dict:
+    """PartitionSpec pytree matching init_params (FSDP + TP 2D sharding)."""
+    fs, mp = rules.fsdp, rules.model
+    lay: dict[str, P] = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "wq": P(None, fs, rules.shard_if(cfg.qkv_dim, mp)),
+        "wk": P(None, fs, rules.shard_if(cfg.kv_dim, mp)),
+        "wv": P(None, fs, rules.shard_if(cfg.kv_dim, mp)),
+        "wo": P(None, rules.shard_if(cfg.qkv_dim, mp), fs),
+    }
+    if cfg.qk_norm:
+        lay["q_norm"] = P(None, None)
+        lay["k_norm"] = P(None, None)
+    if cfg.moe:
+        lay["router"] = P(None, None, None)
+        lay["we_gate"] = P(None, mp, fs, None)
+        lay["we_up"] = P(None, mp, fs, None)
+        lay["we_down"] = P(None, mp, None, fs)
+    else:
+        ff = rules.shard_if(cfg.d_ff, mp)
+        if cfg.mlp_act == "swiglu":
+            lay["w_gate"] = P(None, fs, ff)
+        lay["w_up"] = P(None, fs, ff)
+        lay["w_down"] = P(None, ff, fs)
+    specs = {
+        "embed": P(rules.shard_if(padded_vocab(cfg.vocab, rules.tp),
+                                  mp), fs),
+        "layers": lay,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(
+            fs, rules.shard_if(padded_vocab(cfg.vocab, rules.tp), mp))
+    return specs
+
+
+def abstract_params(cfg: LMConfig, ep: int = 1, vocab_pad_to: int = 1):
+    """ShapeDtypeStruct pytree — dry-run stand-in, no allocation."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg, ep=ep,
+                          vocab_pad_to=vocab_pad_to),
+        jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def _rms(x, scale, eps):
+    return layers.rms_norm(x, scale, eps)
+
+
+def _attention(x, lp, cfg: LMConfig, rules: Rules, bspec, positions):
+    """Causal self-attention over the full sequence (train / prefill)."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    cd = layers.COMPUTE_DTYPE
+    hnorm = _rms(x, lp["ln1"], cfg.norm_eps)
+    # Pin the norm to the sequence-sharded side: otherwise GSPMD hoists
+    # the Megatron all-gather BEFORE the norm and its f32 internals
+    # materialize at full sequence length (2 GB/buffer on command-r).
+    hnorm = rules.constrain(hnorm, bspec, rules.shard_if(s, rules.model),
+                            None)
+    tp_heads = (h % rules.tp == 0) and rules.tp > 1
+    if tp_heads:
+        # Megatron-SP boundary made EXPLICIT: one bf16 all-gather of the
+        # normed hidden over the sequence axis, then every head-sharded
+        # tensor is produced locally.  Leaving the boundary implicit made
+        # GSPMD transition q/k/v themselves from S-sharded to
+        # head-sharded — an "involuntary full rematerialization"
+        # (replicate-then-partition) of (B,S,H,hd) tensors (perf-log
+        # it2/it6).
+        hnorm = rules.constrain(hnorm, bspec, None, None)
+    q = (hnorm @ lp["wq"].astype(cd)).reshape(b, s, h, hd)
+    k = (hnorm @ lp["wk"].astype(cd)).reshape(b, s, kvh, hd)
+    v = (hnorm @ lp["wv"].astype(cd)).reshape(b, s, kvh, hd)
+    if tp_heads:
+        q = rules.constrain(q, bspec, None, rules.model, None)
+        k = rules.constrain(k, bspec, None, None, None)
+        v = rules.constrain(v, bspec, None, None, None)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    if tp_heads:
+        # Native GQA (no KV repeat): Q's head sharding propagates through
+        # the (KV, G) reshape as a [KV×G] tiling with no transition.
+        o = layers.chunked_attention(
+            q, k, v, causal=True,
+            q_chunk=min(cfg.q_chunk, s), kv_chunk=min(cfg.kv_chunk, s),
+            step_remat=cfg.attn_step_remat)
+    else:
+        # SP attention: Q sequence-sharded, K/V gathered, full masked scan.
+        sspec = rules.shard_if(s, rules.model)
+        q = rules.constrain(q, bspec, sspec, None, None)
+        k = rules.constrain(k, bspec, None, None, None)
+        v = rules.constrain(v, bspec, None, None, None)
+        o = layers.chunked_attention(
+            q, k, v, causal=True, q_chunk=s,
+            kv_chunk=min(cfg.kv_chunk, s),
+            step_remat=cfg.attn_step_remat)
+    o = o.reshape(b, s, h * hd) @ lp["wo"].astype(cd)
+    return x + o
+
+
+def _mlp_dense(hnorm, lp, cfg: LMConfig):
+    cd = layers.COMPUTE_DTYPE
+    up = hnorm @ lp["w_up"].astype(cd)
+    if cfg.mlp_act == "swiglu":
+        gate = hnorm @ lp["w_gate"].astype(cd)
+        hmid = jax.nn.silu(gate.astype(jnp.float32)).astype(cd) * up
+    elif cfg.mlp_act == "relu2":
+        hmid = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(cfg.mlp_act)
+    return hmid @ lp["w_down"].astype(cd)
+
+
+def _mlp_or_moe(x, lp, cfg: LMConfig, rules: Rules, bspec):
+    b, s, d = x.shape
+    hnorm = _rms(x, lp["ln2"], cfg.norm_eps)
+    hnorm = rules.constrain(hnorm, bspec, rules.shard_if(s, rules.model),
+                            None)  # see _attention: norm stays SP-side
+    if not cfg.moe and cfg.d_ff % rules.tp == 0 and rules.tp > 1:
+        # Explicit Megatron-SP boundary for the dense MLP (same reasoning
+        # as _attention): one bf16 S-gather, then F-sharded matmuls.
+        hnorm = rules.constrain(hnorm, bspec, None, None)
+    if cfg.moe:
+        tok = hnorm.reshape(b * s, d)
+        taxes = rules.tokens_spec(b * s)
+        taxes = (taxes,) if isinstance(taxes, str) else (taxes or ())
+        out, aux = moe_lib.moe_apply(
+            tok, lp["router"], lp["we_gate"], lp["we_up"], lp["we_down"],
+            n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, rules=rules,
+            token_axes=taxes, act=cfg.mlp_act)
+        return x + out.reshape(b, s, d), aux
+    out = _mlp_dense(hnorm, lp, cfg)
+    return x + out, jnp.zeros((), jnp.float32)
+
+
+def forward_hidden(params: dict, tokens: jnp.ndarray, cfg: LMConfig,
+                   rules: Rules) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Embed + all layers + final norm.  Returns (x (B,S,D), aux)."""
+    b, s = tokens.shape
+    bspec = rules.batch_spec(b)
+    sspec = rules.shard_if(s, rules.model)
+    cd = layers.COMPUTE_DTYPE
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = rules.constrain(x, bspec, sspec, None)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    def layer_body(carry, lp):
+        x = carry
+        x = _attention(x, lp, cfg, rules, bspec, positions)
+        x, aux = _mlp_or_moe(x, lp, cfg, rules, bspec)
+        x = rules.constrain(x, bspec, sspec, None)
+        return x, aux
+
+    x, auxs = layers.scan_layers(layer_body, x, params["layers"],
+                                 n_layers=cfg.n_layers, unroll=cfg.unroll,
+                                 remat_policy=cfg.remat_policy)
+    x = _rms(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.mean(auxs)
+
+
+def _head(params, cfg: LMConfig):
+    return (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(layers.COMPUTE_DTYPE)
+
+
+def _mask_pad_vocab(logits, cfg: LMConfig):
+    """-inf on padded vocab columns (argmax/softmax never pick them)."""
+    v_pad = logits.shape[-1]
+    if v_pad == cfg.vocab:
+        return logits
+    mask = jnp.arange(v_pad) < cfg.vocab
+    return jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: LMConfig,
+            rules: Rules) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.  Returns (logits (B,S,Vp) f32-castable, aux);
+    padded vocab columns (if any) are masked to -inf."""
+    b, s = tokens.shape
+    x, aux = forward_hidden(params, tokens, cfg, rules)
+    head = _head(params, cfg)
+    logits = x @ head
+    logits = rules.constrain(
+        logits, rules.batch_spec(b), None,
+        rules.shard_if(head.shape[1], rules.model))
+    return _mask_pad_vocab(logits, cfg), aux
+
+
+# --------------------------------------------------------------------------
+# Loss + train step
+# --------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 1e-4):
+    """Mean token CE over a (possibly vocab-sharded) logits tensor."""
+    lg = logits.astype(jnp.float32)
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1))
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - gold)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def chunked_ce(x: jnp.ndarray, head: jnp.ndarray, labels: jnp.ndarray,
+               rules: Rules, vocab: int, z_loss: float = 1e-4,
+               n_chunks: int = 8):
+    """Sequence-chunked head-matmul + cross-entropy.
+
+    The full (B, S, V) f32 logits of a 256k-vocab model are multi-GB per
+    device (command-r train_4k: ~6 GB of the HBM budget); computing the
+    head and the CE per S-chunk in a static python loop keeps the peak at
+    one chunk while leaving cost accounting exact (no scan).
+    """
+    b, s, _ = x.shape
+    bspec = rules.batch_spec(b)
+    # Shard on the head's actual (possibly vocab-padded) width — the raw
+    # vocab may not divide the TP degree (granite: 49155), which would
+    # silently replicate every logits chunk (perf-log H2-it3).
+    width = head.shape[1]
+    vspec = rules.shard_if(width, rules.model)
+    n_chunks = max(1, min(n_chunks, s))
+    while s % n_chunks:
+        n_chunks -= 1
+    cs = s // n_chunks
+    # Resolve the head's FSDP (data-axis) sharding ONCE: inside the loop it
+    # would be re-all-gathered per chunk (command-r: 4.2 GB × n_chunks).
+    head = rules.constrain(head, None, vspec)
+    pad_mask = (jnp.arange(width) < vocab) if width != vocab else None
+    total = jnp.zeros((), jnp.float32)
+    ztotal = jnp.zeros((), jnp.float32)
+    for i in range(n_chunks):
+        xc = lax.slice_in_dim(x, i * cs, (i + 1) * cs, axis=1)
+        lc = lax.slice_in_dim(labels, i * cs, (i + 1) * cs, axis=1)
+        logits = xc @ head
+        logits = rules.constrain(logits, bspec, None, vspec)
+        lg = logits.astype(jnp.float32)
+        if pad_mask is not None:
+            lg = jnp.where(pad_mask, lg, -1e30)
+        m = jnp.max(lg, axis=-1, keepdims=True)
+        lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1))
+        gold = jnp.take_along_axis(lg, lc[..., None], axis=-1)[..., 0]
+        total = total + jnp.sum(lse - gold)
+        ztotal = ztotal + jnp.sum(jnp.square(lse))
+    n_tok = b * s
+    return total / n_tok + z_loss * ztotal / n_tok
+
+
+def loss_fn(params, batch, cfg: LMConfig, rules: Rules,
+            aux_weight: float = 0.01):
+    x, aux = forward_hidden(params, batch["tokens"], cfg, rules)
+    ce = chunked_ce(x, _head(params, cfg), batch["labels"], rules,
+                    cfg.vocab)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: LMConfig, rules: Rules, *, lr=3e-4):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, rules)
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, lr=lr)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode with a sequence-sharded KV cache
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int):
+    """KV-head-major layout (L, B, KV, S, hd): decode's QK/PV einsums
+    consume it with NO physical transpose (the (S, hd) panel is the GEMM
+    operand) — the naive (B, S, KV, hd) layout costs two full-cache
+    transposes per layer per token (measured in EXPERIMENTS §Roofline
+    decode diagnosis)."""
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, cfg.d_head)
+    return {"k": jnp.zeros(shape, layers.COMPUTE_DTYPE),
+            "v": jnp.zeros(shape, layers.COMPUTE_DTYPE)}
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_seq: int):
+    return jax.eval_shape(functools.partial(
+        init_cache, cfg, batch, max_seq))
+
+
+def cache_specs(cfg: LMConfig, rules: Rules, batch: int, max_seq: int):
+    """Flash-decoding SP: cache sequence dim sharded over ``model``."""
+    spec = P(None, rules.batch_spec(batch), None,
+             rules.shard_if(max_seq, rules.model), None)
+    return {"k": spec, "v": spec}
+
+
+def make_prefill_step(cfg: LMConfig, rules: Rules, max_seq: int):
+    """Prefill: logits for the whole prompt + a filled KV cache."""
+
+    def prefill_step(params, tokens):
+        b, s = tokens.shape
+        bspec = rules.batch_spec(b)
+        sspec = rules.shard_if(s, rules.model)
+        cd = layers.COMPUTE_DTYPE
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+        x = rules.constrain(x, bspec, sspec, None)
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+        def layer_body(x, lp):
+            hnorm = _rms(x, lp["ln1"], cfg.norm_eps)
+            k = (hnorm @ lp["wk"].astype(cd)).reshape(
+                b, s, cfg.n_kv_heads, cfg.d_head)
+            v = (hnorm @ lp["wv"].astype(cd)).reshape(
+                b, s, cfg.n_kv_heads, cfg.d_head)
+            if cfg.qk_norm:
+                k = layers.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+            x = _attention(x, lp, cfg, rules, bspec, positions)
+            x, _ = _mlp_or_moe(x, lp, cfg, rules, bspec)
+            x = rules.constrain(x, bspec, sspec, None)
+            # cache layout (B, KV, S, hd) — see init_cache
+            kc = _pad_seq(jnp.transpose(k, (0, 2, 1, 3)), max_seq)
+            vc = _pad_seq(jnp.transpose(v, (0, 2, 1, 3)), max_seq)
+            cspec = P(bspec, None, rules.shard_if(max_seq, rules.model),
+                      None)
+            kc = rules.constrain(kc, *cspec)
+            vc = rules.constrain(vc, *cspec)
+            return x, {"k": kc, "v": vc}
+
+        x, cache = layers.scan_layers(
+            layer_body, x, params["layers"], n_layers=cfg.n_layers,
+            unroll=cfg.unroll, remat=False)
+        x = _rms(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(cd)
+        # Serving prefill only needs the last position's logits.
+        logits = x[:, -1, :] @ head
+        return logits, cache
+
+    return prefill_step
+
+
+def _pad_seq(x, max_seq):
+    """Pad the seq dim (axis 2 of the (B, KV, S, hd) cache layout)."""
+    s = x.shape[2]
+    if s == max_seq:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, max_seq - s), (0, 0)))
+
+
+def make_decode_step(cfg: LMConfig, rules: Rules, max_seq: int):
+    """One decode step: (params, cache, tokens (B,1), pos ()) ->
+    (logits (B,V), new cache).
+
+    Attention over the sequence-sharded cache is written as a plain masked
+    softmax over max_seq; GSPMD lowers the sharded-axis max/sum/PV into the
+    flash-decoding combine (two small all-reduces), never gathering the
+    cache.
+    """
+    def decode_step(params, cache, tokens, pos):
+        b = tokens.shape[0]
+        bspec = rules.batch_spec(b)
+        h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        g = h // kvh
+        cd = layers.COMPUTE_DTYPE
+        # (B, KV, S, hd) cache layout — see init_cache
+        cspec = (bspec, None, rules.shard_if(max_seq, rules.model), None)
+
+        x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(cd)
+        x = rules.constrain(x, bspec, None)
+        positions = jnp.full((b, 1), pos, jnp.int32)
+
+        def layer_body(x, xs):
+            lp, kc, vc = xs                       # kc/vc (B, KVH, Smax, hd)
+            hnorm = _rms(x, lp["ln1"], cfg.norm_eps)
+            q = (hnorm @ lp["wq"].astype(cd)).reshape(b, 1, h, hd)
+            k = (hnorm @ lp["wk"].astype(cd)).reshape(b, 1, kvh, hd)
+            v = (hnorm @ lp["wv"].astype(cd)).reshape(b, 1, kvh, hd)
+            if cfg.qk_norm:
+                q = layers.rms_norm(q, lp["q_norm"], cfg.norm_eps)
+                k = layers.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+            k_ins = jnp.transpose(k, (0, 2, 1, 3))     # (B, KV, 1, hd)
+            v_ins = jnp.transpose(v, (0, 2, 1, 3))
+            kc = lax.dynamic_update_slice(kc, k_ins, (0, 0, pos, 0))
+            vc = lax.dynamic_update_slice(vc, v_ins, (0, 0, pos, 0))
+            kc = rules.constrain(kc, *cspec)
+            vc = rules.constrain(vc, *cspec)
+
+            qf = (q.reshape(b, kvh, g, hd).astype(jnp.float32)
+                  / math.sqrt(hd))
+            # layout-native: (S, hd) is the GEMM panel, no cache transpose
+            s = jnp.einsum("bhgd,bhsd->bhgs", qf, kc.astype(jnp.float32))
+            valid = jnp.arange(max_seq) <= pos
+            s = jnp.where(valid[None, None, None], s, -1e30)
+            m = jnp.max(s, axis=-1, keepdims=True)     # all-reduce (model)
+            p = jnp.exp(s - m)
+            l = jnp.sum(p, axis=-1, keepdims=True)     # all-reduce (model)
+            o = jnp.einsum("bhgs,bhsd->bhgd", p / l,
+                           vc.astype(jnp.float32))     # psum (model)
+            o = o.reshape(b, h * hd).astype(cd) @ lp["wo"].astype(cd)
+            x = x + o
+
+            hnorm2 = _rms(x, lp["ln2"], cfg.norm_eps)
+            if cfg.moe:
+                taxes = rules.tokens_spec(b)
+                taxes = ((taxes,) if isinstance(taxes, str)
+                         else (taxes or ()))
+                out, _ = moe_lib.moe_apply(
+                    hnorm2, lp["router"], lp["we_gate"], lp["we_up"],
+                    lp["we_down"], n_experts=cfg.n_experts,
+                    top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                    rules=rules, token_axes=taxes, act=cfg.mlp_act)
+            else:
+                out = _mlp_dense(hnorm2, lp, cfg)
+            return x + out, {"k": kc, "v": vc}
+
+        x, new_cache = layers.scan_layers(
+            layer_body, x, (params["layers"], cache["k"], cache["v"]),
+            n_layers=cfg.n_layers, unroll=cfg.unroll, remat=False)
+        x = _rms(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(cd)
+        logits = x @ head
+        logits = rules.constrain(
+            logits, bspec, rules.shard_if(head.shape[1], rules.model))
+        return _mask_pad_vocab(logits, cfg), new_cache
+
+    return decode_step

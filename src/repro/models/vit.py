@@ -1,0 +1,229 @@
+"""Vision Transformer (ViT-L/16, ViT-H/14) — encoder-only classifier.
+
+Assigned shapes run at 224 (cls_224, serve_b1, serve_b128) and 384
+(cls_384 finetune; the learned position table is bilinearly resized, the
+standard finetune recipe from the ViT paper §3.2).
+
+Sharding: batch over the data axes; attention heads and the MLP hidden dim
+over ``model`` (both ViT variants have 16 heads and model-divisible d_ff, so
+classic Megatron TP applies).  Layers are scanned (stacked params).
+
+PhoneBit applicability (DESIGN §6): the QKV/MLP projections are binarizable
+dense layers; ``binary_dense=True`` switches them to STE-sign binary
+matmuls (latent float weights), the training-compatible float emulation of
+the packed engine.  Attention softmax and norms stay float, exactly as the
+paper keeps non-conv ops full precision.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import binarize
+from repro.distributed.sharding import Rules
+from repro.models import layers
+from repro.optim import adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int = 1000
+    pos_grid: int = 0          # side of the *trained* position grid
+    binary_dense: bool = False  # PhoneBit technique on QKV/MLP projections
+    # Unrolled layer loop (dry-run cost probes; see layers.scan_layers)
+    unroll: bool = False
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def n_tokens(self, img_res: int | None = None) -> int:
+        r = img_res or self.img_res
+        return (r // self.patch) ** 2 + 1
+
+    def param_count(self) -> int:
+        d, l = self.d_model, self.n_layers
+        per_layer = 4 * d * d + 2 * d * self.d_ff + 4 * d + d + self.d_ff
+        patch = self.patch * self.patch * 3 * d + d
+        grid = (self.pos_grid or self.img_res // self.patch) ** 2 + 1
+        return (l * per_layer + patch + grid * d + d
+                + 2 * d + d * self.n_classes + self.n_classes)
+
+
+def init_params(key: jax.Array, cfg: ViTConfig) -> dict:
+    d, l, ff = cfg.d_model, cfg.n_layers, cfg.d_ff
+    grid = cfg.pos_grid or cfg.img_res // cfg.patch
+    ks = layers.split_keys(key, 12)
+    lay = {
+        "ln1_s": jnp.ones((l, d), jnp.float32),
+        "ln1_b": jnp.zeros((l, d), jnp.float32),
+        "wqkv": _stack(ks[0], l, (d, 3 * d)),
+        "bqkv": jnp.zeros((l, 3 * d), jnp.float32),
+        "wo": _stack(ks[1], l, (d, d)),
+        "bo": jnp.zeros((l, d), jnp.float32),
+        "ln2_s": jnp.ones((l, d), jnp.float32),
+        "ln2_b": jnp.zeros((l, d), jnp.float32),
+        "w1": _stack(ks[2], l, (d, ff)),
+        "b1": jnp.zeros((l, ff), jnp.float32),
+        "w2": _stack(ks[3], l, (ff, d)),
+        "b2": jnp.zeros((l, d), jnp.float32),
+    }
+    return {
+        "patch_w": layers.conv_init(
+            ks[4], (cfg.patch, cfg.patch, 3, d)),
+        "patch_b": jnp.zeros((d,), jnp.float32),
+        "cls": layers.normal_init(ks[5], (1, 1, d)),
+        "pos": layers.normal_init(ks[6], (grid * grid + 1, d)),
+        "layers": lay,
+        "ln_f_s": jnp.ones((d,), jnp.float32),
+        "ln_f_b": jnp.zeros((d,), jnp.float32),
+        "head_w": layers.normal_init(ks[7], (d, cfg.n_classes)),
+        "head_b": jnp.zeros((cfg.n_classes,), jnp.float32),
+    }
+
+
+def _stack(key, l, shape):
+    return jax.random.normal(key, (l, *shape), jnp.float32) / math.sqrt(
+        shape[0])
+
+
+def param_specs(cfg: ViTConfig, rules: Rules) -> dict:
+    fs, mp = rules.fsdp, rules.model
+    ff = rules.shard_if(cfg.d_ff, mp)
+    d3 = rules.shard_if(3 * cfg.d_model, mp)
+    lay = {
+        "ln1_s": P(None, None), "ln1_b": P(None, None),
+        "wqkv": P(None, fs, d3), "bqkv": P(None, d3),
+        "wo": P(None, rules.shard_if(cfg.d_model, mp), fs),
+        "bo": P(None, None),
+        "ln2_s": P(None, None), "ln2_b": P(None, None),
+        "w1": P(None, fs, ff), "b1": P(None, ff),
+        "w2": P(None, ff, fs), "b2": P(None, None),
+    }
+    return {
+        "patch_w": P(None, None, None, rules.shard_if(cfg.d_model, mp)),
+        "patch_b": P(None),
+        "cls": P(None, None, None),
+        "pos": P(None, None),
+        "layers": lay,
+        "ln_f_s": P(None), "ln_f_b": P(None),
+        "head_w": P(fs, None), "head_b": P(None),
+    }
+
+
+def abstract_params(cfg: ViTConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                          jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _maybe_binary(w, x, enabled: bool):
+    """Dense matmul, optionally in the binary (+-1 STE) domain."""
+    cd = layers.COMPUTE_DTYPE
+    if not enabled:
+        return x @ w.astype(cd)
+    xb = binarize.ste_sign(x.astype(jnp.float32)).astype(cd)
+    wb = binarize.ste_sign(w).astype(cd)
+    return xb @ wb
+
+
+def resize_pos_embed(pos: jnp.ndarray, grid_from: int, grid_to: int):
+    """Bilinear resize of the (G²+1, D) position table (finetune at 384)."""
+    if grid_from == grid_to:
+        return pos
+    cls, grid = pos[:1], pos[1:]
+    d = grid.shape[-1]
+    img = grid.reshape(1, grid_from, grid_from, d)
+    img = jax.image.resize(img, (1, grid_to, grid_to, d), "bilinear")
+    return jnp.concatenate([cls, img.reshape(grid_to * grid_to, d)], axis=0)
+
+
+def forward(params: dict, images: jnp.ndarray, cfg: ViTConfig,
+            rules: Rules) -> jnp.ndarray:
+    """images: (B, R, R, 3) float -> logits (B, n_classes)."""
+    b, r, _, _ = images.shape
+    cd = layers.COMPUTE_DTYPE
+    bspec = rules.batch_spec(b)
+    mp = rules.model
+
+    x = lax.conv_general_dilated(
+        images.astype(cd), params["patch_w"].astype(cd),
+        (cfg.patch, cfg.patch), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    g = r // cfg.patch
+    x = x.reshape(b, g * g, cfg.d_model) + params["patch_b"].astype(cd)
+    cls = jnp.broadcast_to(params["cls"].astype(cd), (b, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1)
+    grid_from = cfg.pos_grid or cfg.img_res // cfg.patch
+    pos = resize_pos_embed(params["pos"], grid_from, g)
+    x = x + pos.astype(cd)[None]
+    x = rules.constrain(x, bspec, None, None)
+
+    h, hd = cfg.n_heads, cfg.d_head
+    s = x.shape[1]
+
+    def layer_body(x, lp):
+        hn = layers.layer_norm(x, lp["ln1_s"], lp["ln1_b"])
+        qkv = (_maybe_binary(lp["wqkv"], hn, cfg.binary_dense)
+               + lp["bqkv"].astype(cd))
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = rules.constrain(q.reshape(b, s, h, hd), bspec, None, mp, None)
+        k = rules.constrain(k.reshape(b, s, h, hd), bspec, None, mp, None)
+        v = rules.constrain(v.reshape(b, s, h, hd), bspec, None, mp, None)
+        o = layers.chunked_attention(q, k, v, causal=False,
+                                     q_chunk=s, kv_chunk=s)
+        o = (_maybe_binary(lp["wo"], o.reshape(b, s, h * hd),
+                           cfg.binary_dense) + lp["bo"].astype(cd))
+        x = x + o
+        hn = layers.layer_norm(x, lp["ln2_s"], lp["ln2_b"])
+        hmid = layers.gelu(
+            _maybe_binary(lp["w1"], hn, cfg.binary_dense)
+            + lp["b1"].astype(cd))
+        out = (_maybe_binary(lp["w2"], hmid, cfg.binary_dense)
+               + lp["b2"].astype(cd))
+        x = rules.constrain(x + out, bspec, None, None)
+        return x, None
+
+    x, _ = layers.scan_layers(layer_body, x, params["layers"],
+                              n_layers=cfg.n_layers, unroll=cfg.unroll)
+    x = layers.layer_norm(x, params["ln_f_s"], params["ln_f_b"])
+    pooled = x[:, 0, :]
+    return (pooled @ params["head_w"].astype(cd)
+            + params["head_b"].astype(cd))
+
+
+def loss_fn(params, batch, cfg: ViTConfig, rules: Rules):
+    logits = forward(params, batch["images"], cfg, rules)
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, batch["labels"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold), {}
+
+
+def make_train_step(cfg: ViTConfig, rules: Rules, *, lr=1e-3):
+    def train_step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg, rules)
+        clip = (lambda path: "wqkv" in path or "w1" in path or "w2" in path
+                or "wo" in path) if cfg.binary_dense else None
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, lr=lr, clip_latent_paths=clip)
+        return params, opt_state, {"loss": loss, **om}
+    return train_step

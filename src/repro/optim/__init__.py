@@ -1,0 +1,14 @@
+"""Optimizers: AdamW / SGD-momentum, global-norm clipping, LR schedules,
+straight-through-estimator-aware updates for binarized layers.
+
+Optimizer state mirrors the parameter pytree, so the parameter PartitionSpecs
+apply verbatim to m/v/momentum — states are born sharded (ZeRO: no replica
+ever materializes full optimizer state).
+"""
+
+from repro.optim.optimizers import (OptState, adamw_init, adamw_update,
+                                    clip_by_global_norm, cosine_schedule,
+                                    global_norm, sgdm_init, sgdm_update)
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "cosine_schedule", "global_norm", "sgdm_init", "sgdm_update"]

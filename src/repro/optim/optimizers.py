@@ -1,0 +1,147 @@
+"""AdamW / SGD-momentum with global-norm clipping and LR schedules.
+
+Pure-pytree implementation (no optax dependency).  The state trees mirror
+the parameter tree exactly, so parameter PartitionSpecs apply verbatim and
+optimizer state is sharded from birth (ZeRO semantics under pjit).
+
+STE awareness: binarized layers train on *latent* float weights clipped to
+[-1, 1] after each update (Courbariaux et al.); pass ``clip_latent_paths``
+with a predicate on the tree path to enable per-leaf clipping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # () int32
+    mu: Any                    # first moment  (params-like)
+    nu: Any | None             # second moment (params-like) — None for SGD
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    """Linear warmup -> cosine decay to ``floor * base_lr``."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * base_lr + (1 - floor) * base_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# --------------------------------------------------------------------------
+# Grad utilities
+# --------------------------------------------------------------------------
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw_init(params: Any) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(params: Any, grads: Any, state: OptState, *,
+                 lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0,
+                 clip_latent_paths: Callable[[str], bool] | None = None):
+    """One AdamW step.  ``lr`` is a float or a schedule fn(step)->lr.
+
+    Returns (new_params, new_state, metrics dict).
+    """
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+    b1t = 1 - b1 ** step.astype(jnp.float32)
+    b2t = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m / b1t
+        vhat = v / b2t
+        newp = (p.astype(jnp.float32)
+                - lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                          + weight_decay * p.astype(jnp.float32)))
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        np_, nm, nv = upd(p, g, m, v)
+        if clip_latent_paths is not None and clip_latent_paths(
+                jax.tree_util.keystr(path)):
+            np_ = jnp.clip(np_, -1.0, 1.0)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    unf = functools.partial(jax.tree_util.tree_unflatten, treedef)
+    metrics = {"grad_norm": gnorm, "lr": lr_t}
+    return unf(new_p), OptState(step, unf(new_m), unf(new_v)), metrics
+
+
+# --------------------------------------------------------------------------
+# SGD + momentum (vision baselines)
+# --------------------------------------------------------------------------
+
+def sgdm_init(params: Any) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(zeros, params), nu=None)
+
+
+def sgdm_update(params: Any, grads: Any, state: OptState, *,
+                lr, momentum: float = 0.9, weight_decay: float = 1e-4,
+                max_grad_norm: float = 0.0):
+    if max_grad_norm:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+    def upd(p, g, m):
+        gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m = momentum * m + gf
+        return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+    pm = jax.tree.map(upd, params, grads, state.mu)
+    new_p = jax.tree.map(lambda t: t[0], pm,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], pm,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(step, new_m, None), {"grad_norm": gnorm,
+                                                "lr": lr_t}

@@ -1,0 +1,14 @@
+"""Serving layer.
+
+engine      PhoneBitEngine — the paper's deployment story (Fig 2/Fig 3):
+            load a converted artifact, run the packed integer forward
+scheduler   request batching: latency/throughput-bounded batch assembly
+kv_cache    paged-lite KV cache manager for LM decode serving
+lm_server   continuous-batching LM decode loop (prefill + decode steps)
+"""
+
+from repro.serving.engine import PhoneBitEngine
+from repro.serving.scheduler import BatchScheduler, Request
+from repro.serving.kv_cache import KVCacheManager
+
+__all__ = ["PhoneBitEngine", "BatchScheduler", "Request", "KVCacheManager"]

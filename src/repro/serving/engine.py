@@ -1,0 +1,86 @@
+"""PhoneBitEngine: the paper's stand-alone BNN inference engine (Fig 2/3).
+
+Deployment flow exactly as the paper's Fig 2: a trained model (latent float
+params) is converted offline — BN folded to integer thresholds, weights
+bit-packed, first layer bit-plane-expanded — into the compressed artifact;
+the engine loads the artifact and serves the packed integer forward.
+
+The engine's ``matmul_mode`` selects the execution path (paper §V/VI vs
+the beyond-paper MXU path, DESIGN.md §3):
+
+* ``"xla"``           pure-JAX xor+popcount (CPU-timeable baseline),
+* ``"vpu_popcount"``  Pallas kernel, paper-faithful (interpret on CPU),
+* ``"mxu_pm1"``       Pallas MXU kernel, beyond-paper.
+
+API mirrors the paper's Fig 3 simplicity::
+
+    engine = PhoneBitEngine.from_artifact("model.npz", spec, (227, 227))
+    logits = engine(images_uint8)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bnn_model, converter
+
+
+@dataclasses.dataclass
+class PhoneBitEngine:
+    spec: Sequence[Any]
+    packed: list[dict]
+    input_hw: tuple[int, int]
+    matmul_mode: str = "xla"
+
+    # ---- construction ----------------------------------------------------
+    @classmethod
+    def from_trained(cls, params, spec, input_hw, **kw) -> "PhoneBitEngine":
+        """Offline conversion (Fig 2): fold + pack trained params."""
+        packed = converter.convert(params, spec, input_hw)
+        return cls(spec=spec, packed=packed, input_hw=input_hw, **kw)
+
+    @classmethod
+    def from_artifact(cls, path: str, spec, input_hw,
+                      **kw) -> "PhoneBitEngine":
+        return cls(spec=spec, packed=converter.load_artifact(path),
+                   input_hw=input_hw, **kw)
+
+    def save_artifact(self, path: str) -> None:
+        converter.save_artifact(path, self.packed)
+
+    # ---- inference ---------------------------------------------------------
+    @functools.cached_property
+    def _jitted(self):
+        spec = self.spec
+        # c_per_pos entries are static layout metadata (they become slice
+        # bounds); strip them out of the traced pytree and re-insert as
+        # python ints inside the jitted fn.
+        meta = [{k: int(v) for k, v in layer.items() if k == "c_per_pos"}
+                for layer in self.packed]
+        arrays = [{k: v for k, v in layer.items() if k != "c_per_pos"}
+                  for layer in self.packed]
+        self._arrays = arrays
+        impl = "pm1" if self.matmul_mode in ("mxu_pm1", "xla_pm1") else "xor"
+
+        @jax.jit
+        def fwd(arrays, x):
+            packed = [dict(a, **m) for a, m in zip(arrays, meta)]
+            return bnn_model.packed_forward(packed, spec, x, impl=impl)
+
+        return fwd
+
+    def __call__(self, x_uint8: jnp.ndarray) -> jnp.ndarray:
+        h, w = self.input_hw
+        assert x_uint8.shape[1:3] == (h, w), (x_uint8.shape, self.input_hw)
+        fwd = self._jitted
+        return fwd(self._arrays, x_uint8)
+
+    # ---- metadata ----------------------------------------------------------
+    @property
+    def model_bytes(self) -> int:
+        return converter.model_bytes(self.packed)

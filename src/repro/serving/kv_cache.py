@@ -1,0 +1,79 @@
+"""KV-cache slot manager for continuous-batching LM decode.
+
+The decode step operates on a fixed (B_slots, max_seq) cache; this manager
+owns the slot lifecycle: admit a sequence into a free slot after prefill,
+track its length, and release it on EOS/eviction.  It is deliberately a
+host-side bookkeeping object — the cache *data* lives sharded on device
+(sequence dim over the model axis, flash-decoding SP) and is mutated by
+the jitted steps; the manager only decides which slots participate.
+
+This is the "paged-lite" design point: slots are page-granularity-1
+(whole sequences).  True paged attention (block tables) is noted in
+DESIGN.md as the extension for production memory efficiency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class Sequence:
+    seq_id: int
+    slot: int
+    length: int
+    max_new: int
+    generated: int = 0
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class KVCacheManager:
+    n_slots: int
+    max_seq: int
+
+    def __post_init__(self):
+        self._free = list(range(self.n_slots - 1, -1, -1))
+        self.active: dict[int, Sequence] = {}
+        self._next_id = 0
+
+    # ---- admission ---------------------------------------------------------
+    def can_admit(self) -> bool:
+        return bool(self._free)
+
+    def admit(self, prompt_len: int, max_new: int) -> Sequence:
+        assert self._free, "no free KV slots"
+        assert prompt_len + max_new <= self.max_seq, "sequence too long"
+        slot = self._free.pop()
+        seq = Sequence(self._next_id, slot, prompt_len, max_new)
+        self._next_id += 1
+        self.active[seq.seq_id] = seq
+        return seq
+
+    # ---- stepping ------------------------------------------------------------
+    def record_token(self, seq_id: int, token: int,
+                     eos_id: int | None = None) -> bool:
+        """Append one generated token; returns True if the seq finished."""
+        seq = self.active[seq_id]
+        seq.tokens.append(token)
+        seq.length += 1
+        seq.generated += 1
+        done = (seq.generated >= seq.max_new
+                or (eos_id is not None and token == eos_id)
+                or seq.length >= self.max_seq)
+        if done:
+            self.release(seq_id)
+        return done
+
+    def release(self, seq_id: int) -> None:
+        seq = self.active.pop(seq_id)
+        self._free.append(seq.slot)
+
+    # ---- views -----------------------------------------------------------------
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self._free) / self.n_slots
+
+    def active_slots(self) -> list[int]:
+        return [s.slot for s in self.active.values()]

@@ -1,0 +1,106 @@
+"""Continuous-batching LM decode server.
+
+Serving loop tying the pieces together: the BatchScheduler admits prompts,
+the KVCacheManager assigns cache slots, prefill fills a slot, and one
+jitted decode step advances *all* active slots each tick (continuous
+batching — new sequences join between ticks, finished ones free their slot
+without stalling the rest).
+
+Simplifications vs a production server (recorded in DESIGN.md): one global
+position per tick (slot positions are tracked but the decode step uses the
+max — correct because attention masks by per-slot validity), greedy
+sampling, single-host loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import Rules
+from repro.models import transformer
+from repro.serving.kv_cache import KVCacheManager
+
+
+@dataclasses.dataclass
+class LMServer:
+    cfg: transformer.LMConfig
+    rules: Rules
+    params: Any
+    n_slots: int
+    max_seq: int
+    eos_id: int | None = None
+
+    def __post_init__(self):
+        self.cache = transformer.init_cache(self.cfg, self.n_slots,
+                                            self.max_seq)
+        self.manager = KVCacheManager(self.n_slots, self.max_seq)
+        self.tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
+        self.pos = 0
+        self._decode = jax.jit(transformer.make_decode_step(
+            self.cfg, self.rules, self.max_seq))
+        # Single-sequence prefill at a fixed bucket keeps one compilation.
+        self._fwd = jax.jit(
+            lambda p, t: transformer.forward(p, t, self.cfg, self.rules))
+
+    # ---- admission -------------------------------------------------------
+    def add_prompt(self, prompt: list[int], max_new: int = 32):
+        """Prefill a prompt token-by-token into a slot (compilation-free
+        path: reuses the decode step; a bucketed prefill step is the
+        optimization the prefill_32k cell lowers)."""
+        seq = self.manager.admit(len(prompt), max_new)
+        for i, tok in enumerate(prompt):
+            toks = self.tokens.at[seq.slot, 0].set(tok)
+            logits, self.cache = self._decode(
+                self.params, self.cache, toks, jnp.int32(self.pos + i))
+        self.pos += len(prompt)
+        nxt = int(jnp.argmax(logits[seq.slot]))
+        seq.tokens.append(nxt)
+        self.tokens = self.tokens.at[seq.slot, 0].set(nxt)
+        return seq
+
+    # ---- decode tick ---------------------------------------------------------
+    def step(self) -> dict[int, int]:
+        """One decode tick for all active sequences.  Returns
+        {seq_id: new_token} for sequences still active."""
+        if not self.manager.active:
+            return {}
+        logits, self.cache = self._decode(
+            self.params, self.cache, self.tokens, jnp.int32(self.pos))
+        self.pos += 1
+        out: dict[int, int] = {}
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        for seq_id, seq in list(self.manager.active.items()):
+            tok = int(next_tokens[seq.slot])
+            out[seq_id] = tok
+            self.manager.record_token(seq_id, tok, self.eos_id)
+            self.tokens = self.tokens.at[seq.slot, 0].set(tok)
+        return out
+
+    def generate(self, prompt: list[int], max_new: int = 16) -> list[int]:
+        """Convenience: run one sequence to completion."""
+        seq = self.manager.admit(len(prompt), max_new)
+        sid = seq.slot
+        out: list[int] = []
+        tok = prompt[0]
+        for i, tok in enumerate(prompt):
+            toks = self.tokens.at[sid, 0].set(tok)
+            logits, self.cache = self._decode(
+                self.params, self.cache, toks, jnp.int32(self.pos))
+            self.pos += 1
+        for _ in range(max_new):
+            nxt = int(jnp.argmax(logits[sid]))
+            out.append(nxt)
+            toks = self.tokens.at[sid, 0].set(nxt)
+            logits, self.cache = self._decode(
+                self.params, self.cache, toks, jnp.int32(self.pos))
+            self.pos += 1
+            if self.eos_id is not None and nxt == self.eos_id:
+                break
+        if seq.seq_id in self.manager.active:
+            self.manager.release(seq.seq_id)
+        return out

@@ -1,0 +1,83 @@
+"""Request batching for serving.
+
+The paper's engine serves one image at a time on a phone; at datacenter
+scale the same engine fronts a batch scheduler.  Policy: assemble the
+largest batch available up to ``max_batch``, but never hold a request
+longer than ``max_wait_s`` (latency/throughput knob).  Batches are padded
+to the nearest compiled bucket size so XLA never recompiles at serve time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Any, Callable
+
+
+@dataclasses.dataclass
+class Request:
+    payload: Any
+    arrival_s: float = dataclasses.field(default_factory=time.monotonic)
+    id: int = dataclasses.field(
+        default_factory=itertools.count().__next__)
+    result: Any = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class BatchScheduler:
+    max_batch: int = 8
+    max_wait_s: float = 0.005
+    buckets: tuple[int, ...] = (1, 2, 4, 8)
+
+    def __post_init__(self):
+        self._queue: deque[Request] = deque()
+        assert tuple(sorted(self.buckets)) == self.buckets
+        assert self.buckets[-1] >= self.max_batch
+
+    def submit(self, payload: Any) -> Request:
+        r = Request(payload)
+        self._queue.append(r)
+        return r
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def ready(self, now: float | None = None) -> bool:
+        if not self._queue:
+            return False
+        if len(self._queue) >= self.max_batch:
+            return True
+        now = time.monotonic() if now is None else now
+        return (now - self._queue[0].arrival_s) >= self.max_wait_s
+
+    def next_batch(self, now: float | None = None) -> list[Request] | None:
+        """Pop up to max_batch requests if the policy says go."""
+        if not self.ready(now):
+            return None
+        n = min(len(self._queue), self.max_batch)
+        return [self._queue.popleft() for _ in range(n)]
+
+    def drain(self, run: Callable[[list[Any]], list[Any]],
+              now: float | None = None) -> list[Request]:
+        """Assemble, pad to bucket, execute, scatter results."""
+        batch = self.next_batch(now)
+        if batch is None:
+            return []
+        bucket = self.bucket_for(len(batch))
+        payloads = [r.payload for r in batch]
+        pad = bucket - len(batch)
+        if pad:
+            payloads = payloads + [payloads[-1]] * pad
+        results = run(payloads)
+        for r, out in zip(batch, results):
+            r.result, r.done = out, True
+        return batch

@@ -1,0 +1,260 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned arch instantiates its REDUCED same-family config and runs
+one forward / train step on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised only by the dry-run (no allocation here).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.distributed.sharding import rules_for_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.models import (convnext, dit, efficientnet, transformer, vit)
+from repro.optim import adamw_init, sgdm_init
+
+LM_ARCHS = ["granite-moe-3b-a800m", "qwen3-moe-30b-a3b", "minitron-8b",
+            "command-r-35b"]
+DIT_ARCHS = ["dit-l2", "dit-xl2"]
+VIT_ARCHS = ["vit-l16", "vit-h14"]
+
+
+@pytest.fixture(scope="module")
+def mesh_rules():
+    mesh = make_host_mesh(data=1, model=1)
+    with mesh:
+        yield rules_for_mesh(mesh)
+
+
+def _no_nan(x):
+    assert not bool(jnp.isnan(x).any()), "NaNs in output"
+
+
+# --------------------------------------------------------------------------
+# LM family
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_forward_and_train(arch, mesh_rules):
+    rules = mesh_rules
+    cfg = configs.get(arch).smoke
+    params = transformer.init_params(jax.random.key(0), cfg, ep=rules.tp)
+    b, s = 2, 32
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab)
+    logits, aux = jax.jit(
+        lambda p, t: transformer.forward(p, t, cfg, rules))(params, tokens)
+    assert logits.shape == (b, s, cfg.vocab)
+    _no_nan(logits)
+
+    step = jax.jit(transformer.make_train_step(cfg, rules))
+    opt = adamw_init(params)
+    batch = {"tokens": tokens, "labels": tokens}
+    p2, o2, m = step(params, opt, batch)
+    assert float(m["loss"]) > 0 and np.isfinite(float(m["loss"]))
+    # params actually moved
+    delta = jax.tree.map(
+        lambda a, b_: float(jnp.abs(a - b_).max()), params, p2)
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS[:2])  # the two MoE archs
+def test_lm_smoke_decode(arch, mesh_rules):
+    rules = mesh_rules
+    cfg = configs.get(arch).smoke
+    params = transformer.init_params(jax.random.key(0), cfg, ep=rules.tp)
+    b, max_seq = 2, 16
+    cache = transformer.init_cache(cfg, b, max_seq)
+    step = jax.jit(transformer.make_decode_step(cfg, rules, max_seq))
+    tok = jnp.ones((b, 1), jnp.int32)
+    for pos in range(3):
+        logits, cache = step(params, cache, tok, jnp.int32(pos))
+    assert logits.shape == (b, cfg.vocab)
+    _no_nan(logits)
+    # the cache filled the first 3 positions of every layer
+    assert float(jnp.abs(cache["k"][:, :, :, :3]).sum()) > 0
+    assert float(jnp.abs(cache["k"][:, :, :, 3:]).sum()) == 0
+
+
+def test_lm_decode_matches_forward(mesh_rules):
+    """Greedy decode logits == full-forward logits position by position."""
+    rules = mesh_rules
+    cfg = configs.get("minitron-8b").smoke
+    params = transformer.init_params(jax.random.key(0), cfg, ep=rules.tp)
+    b, s = 2, 8
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab)
+    full_logits, _ = transformer.forward(params, tokens, cfg, rules)
+
+    cache = transformer.init_cache(cfg, b, s)
+    step = jax.jit(transformer.make_decode_step(cfg, rules, s))
+    for pos in range(s):
+        logits, cache = step(params, cache, tokens[:, pos:pos + 1],
+                             jnp.int32(pos))
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(full_logits[:, pos, :], np.float32),
+            rtol=2e-2, atol=2e-2)
+
+
+def test_lm_prefill_matches_decode_cache(mesh_rules):
+    rules = mesh_rules
+    cfg = configs.get("command-r-35b").smoke
+    params = transformer.init_params(jax.random.key(0), cfg, ep=rules.tp)
+    b, s = 2, 8
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab)
+    prefill = jax.jit(transformer.make_prefill_step(cfg, rules, s))
+    logits_p, cache_p = prefill(params, tokens)
+
+    cache_d = transformer.init_cache(cfg, b, s)
+    step = jax.jit(transformer.make_decode_step(cfg, rules, s))
+    for pos in range(s):
+        logits_d, cache_d = step(params, cache_d, tokens[:, pos:pos + 1],
+                                 jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(cache_p["k"], np.float32),
+                               np.asarray(cache_d["k"], np.float32),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(logits_p, np.float32),
+                               np.asarray(logits_d, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# --------------------------------------------------------------------------
+# Diffusion family
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", DIT_ARCHS)
+def test_dit_smoke(arch, mesh_rules):
+    rules = mesh_rules
+    cfg = configs.get(arch).smoke
+    params = dit.init_params(jax.random.key(0), cfg)
+    b = 2
+    lat = cfg.latent_res()
+    x = jax.random.normal(jax.random.key(1),
+                          (b, lat, lat, cfg.latent_channels))
+    t = jnp.array([3, 7])
+    labels = jnp.zeros((b,), jnp.int32)
+    eps, sigma = jax.jit(
+        lambda p, x_: dit.forward(p, x_, t, labels, cfg, rules))(params, x)
+    assert eps.shape == x.shape and sigma.shape == x.shape
+    _no_nan(eps)
+
+    step = jax.jit(dit.make_train_step(cfg, rules))
+    batch = {"latents": x, "labels": labels, "t": t,
+             "noise": jax.random.normal(jax.random.key(2), x.shape)}
+    _, _, m = step(params, adamw_init(params), batch)
+    assert np.isfinite(float(m["loss"]))
+
+    sample = jax.jit(dit.make_sample_step(cfg, rules))
+    x2 = sample(params, x.astype(jnp.bfloat16), t, t - 1, labels)
+    assert x2.shape == x.shape
+    _no_nan(x2.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Vision family
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", VIT_ARCHS)
+def test_vit_smoke(arch, mesh_rules):
+    rules = mesh_rules
+    cfg = configs.get(arch).smoke
+    params = vit.init_params(jax.random.key(0), cfg)
+    b = 2
+    imgs = jax.random.uniform(jax.random.key(1),
+                              (b, cfg.img_res, cfg.img_res, 3))
+    logits = jax.jit(
+        lambda p, x: vit.forward(p, x, cfg, rules))(params, imgs)
+    assert logits.shape == (b, cfg.n_classes)
+    _no_nan(logits)
+    step = jax.jit(vit.make_train_step(cfg, rules))
+    _, _, m = step(params, adamw_init(params),
+                   {"images": imgs, "labels": jnp.zeros((b,), jnp.int32)})
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_convnext_smoke(mesh_rules):
+    rules = mesh_rules
+    cfg = configs.get("convnext-b").smoke
+    params = convnext.init_params(jax.random.key(0), cfg)
+    b = 2
+    imgs = jax.random.uniform(jax.random.key(1),
+                              (b, cfg.img_res, cfg.img_res, 3))
+    logits = jax.jit(
+        lambda p, x: convnext.forward(p, x, cfg, rules))(params, imgs)
+    assert logits.shape == (b, cfg.n_classes)
+    _no_nan(logits)
+    step = jax.jit(convnext.make_train_step(cfg, rules))
+    _, _, m = step(params, adamw_init(params),
+                   {"images": imgs, "labels": jnp.zeros((b,), jnp.int32)})
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_efficientnet_smoke(mesh_rules):
+    rules = mesh_rules
+    cfg = configs.get("efficientnet-b7").smoke
+    params, state = efficientnet.init_params(jax.random.key(0), cfg)
+    b = 2
+    imgs = jax.random.uniform(jax.random.key(1),
+                              (b, cfg.img_res, cfg.img_res, 3))
+    logits, _ = jax.jit(
+        lambda p, s, x: efficientnet.apply(p, s, x, cfg, rules,
+                                           train=False))(params, state,
+                                                         imgs)
+    assert logits.shape == (b, cfg.n_classes)
+    _no_nan(logits)
+    step = jax.jit(efficientnet.make_train_step(cfg, rules))
+    p2, s2, o2, m = step(params, state, sgdm_init(params),
+                         {"images": imgs,
+                          "labels": jnp.zeros((b,), jnp.int32)})
+    assert np.isfinite(float(m["loss"]))
+    # BN running stats updated
+    assert float(jnp.abs(s2["stem_bn"]["mean"]
+                         - state["stem_bn"]["mean"]).sum()) > 0
+
+
+def test_unroll_matches_scan(mesh_rules):
+    """The dry-run's unrolled probe path is numerically identical."""
+    rules = mesh_rules
+    import dataclasses
+    cfg = configs.get("minitron-8b").smoke
+    params = transformer.init_params(jax.random.key(0), cfg, ep=rules.tp)
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    lg1, _ = jax.jit(
+        lambda p, t: transformer.forward(p, t, cfg, rules))(params, tokens)
+    cfg_u = dataclasses.replace(cfg, unroll=True)
+    lg2, _ = jax.jit(
+        lambda p, t: transformer.forward(p, t, cfg_u, rules))(params,
+                                                              tokens)
+    # bf16 compute: scan vs unroll fuse/reorder differently
+    np.testing.assert_allclose(np.asarray(lg1, np.float32),
+                               np.asarray(lg2, np.float32), rtol=3e-2,
+                               atol=3e-2)
+
+
+def test_binary_variants_run(mesh_rules):
+    """PhoneBit-technique variants of the applicable archs (DESIGN §6)."""
+    import dataclasses
+    rules = mesh_rules
+    b = 2
+    vcfg = dataclasses.replace(configs.get("vit-l16").smoke,
+                               binary_dense=True)
+    params = vit.init_params(jax.random.key(0), vcfg)
+    imgs = jax.random.uniform(jax.random.key(1),
+                              (b, vcfg.img_res, vcfg.img_res, 3))
+    logits = vit.forward(params, imgs, vcfg, rules)
+    _no_nan(logits)
+    # gradient flows through the STE
+    step = jax.jit(vit.make_train_step(vcfg, rules))
+    p2, _, m = step(params, adamw_init(params),
+                    {"images": imgs, "labels": jnp.zeros((b,), jnp.int32)})
+    assert np.isfinite(float(m["loss"]))
+    assert float(jnp.abs(p2["layers"]["wqkv"]
+                         - params["layers"]["wqkv"]).max()) > 0
+
+    ccfg = dataclasses.replace(configs.get("convnext-b").smoke,
+                               binary_pointwise=True)
+    cparams = convnext.init_params(jax.random.key(0), ccfg)
+    cl = convnext.forward(cparams, imgs, ccfg, rules)
+    _no_nan(cl)

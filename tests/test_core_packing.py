@@ -1,0 +1,172 @@
+"""Unit + property tests for channel compression and binary algebra."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binary_ops, bitplanes, layer_integration, packing
+
+
+class TestPacking:
+    @pytest.mark.parametrize("c", [1, 3, 31, 32, 33, 64, 100, 256])
+    def test_pack_unpack_roundtrip(self, c):
+        rng = np.random.default_rng(c)
+        bits = rng.integers(0, 2, size=(4, 5, c)).astype(np.int32)
+        words = packing.pack_bits(bits)
+        assert words.dtype == jnp.int32
+        assert words.shape == (4, 5, packing.num_words(c))
+        out = packing.unpack_bits(words, c)
+        np.testing.assert_array_equal(np.asarray(out), bits)
+
+    def test_pack_axis(self):
+        rng = np.random.default_rng(0)
+        bits = rng.integers(0, 2, size=(7, 33, 4)).astype(np.int32)
+        words = packing.pack_bits(bits, axis=1)
+        assert words.shape == (7, 2, 4)
+        out = packing.unpack_bits(words, 33, axis=1)
+        np.testing.assert_array_equal(np.asarray(out), bits)
+
+    def test_pack_signs_msb_channel(self):
+        x = np.array([[0.5, -0.5, 0.0, -1.0]], dtype=np.float32)
+        words = packing.pack_signs(x)
+        # bits: 1, 0, 1 (>=0), 0 -> 0b0101 = 5
+        assert int(words[0, 0]) == 0b0101
+
+    def test_unpack_to_pm1(self):
+        x = np.array([[1.0, -2.0, 3.0]], dtype=np.float32)
+        w = packing.pack_signs(x)
+        pm1 = packing.unpack_to_pm1(w, 3, dtype=jnp.float32)
+        np.testing.assert_array_equal(np.asarray(pm1), [[1.0, -1.0, 1.0]])
+
+    @given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip_property(self, c, seed):
+        rng = np.random.default_rng(seed)
+        bits = rng.integers(0, 2, size=(2, c)).astype(np.int32)
+        out = packing.unpack_bits(packing.pack_bits(bits), c)
+        np.testing.assert_array_equal(np.asarray(out), bits)
+
+
+class TestBinaryMatmul:
+    @pytest.mark.parametrize("m,n,k", [(4, 8, 32), (3, 5, 7), (16, 16, 257),
+                                       (1, 1, 1), (8, 40, 96)])
+    def test_dot_matches_pm1_reference(self, m, n, k):
+        rng = np.random.default_rng(m * 1000 + n * 10 + k)
+        a = rng.choice([-1.0, 1.0], size=(m, k)).astype(np.float32)
+        b = rng.choice([-1.0, 1.0], size=(n, k)).astype(np.float32)
+        ref = a @ b.T
+        ap = packing.pack_signs(a)
+        bp = packing.pack_signs(b)
+        dot = binary_ops.packed_matmul_dot(ap, bp, k_valid=k)
+        np.testing.assert_array_equal(np.asarray(dot), ref.astype(np.int32))
+
+    def test_mxu_pm1_path_matches(self):
+        rng = np.random.default_rng(7)
+        a = rng.choice([-1.0, 1.0], size=(6, 130)).astype(np.float32)
+        b = rng.choice([-1.0, 1.0], size=(9, 130)).astype(np.float32)
+        ap, bp = packing.pack_signs(a), packing.pack_signs(b)
+        vpu = binary_ops.packed_matmul_dot(ap, bp, k_valid=130)
+        mxu = binary_ops.mxu_pm1_matmul(ap, bp, k_valid=130, channels=130)
+        np.testing.assert_array_equal(np.asarray(vpu), np.asarray(mxu))
+
+    def test_chunked_matmul(self):
+        rng = np.random.default_rng(3)
+        a = rng.choice([-1.0, 1.0], size=(50, 64)).astype(np.float32)
+        b = rng.choice([-1.0, 1.0], size=(4, 64)).astype(np.float32)
+        ap, bp = packing.pack_signs(a), packing.pack_signs(b)
+        full = binary_ops.packed_matmul_counts(ap, bp)
+        chunked = binary_ops.packed_matmul_counts(ap, bp, chunk=16)
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(chunked))
+
+    def test_word_weighted_counts(self):
+        # weighted popcount == per-word popcount dot weights
+        rng = np.random.default_rng(11)
+        a = rng.integers(-2**31, 2**31, size=(3, 5), dtype=np.int32)
+        b = rng.integers(-2**31, 2**31, size=(2, 5), dtype=np.int32)
+        ww = jnp.asarray([1, 2, 4, 8, 16], dtype=jnp.int32)
+        got = binary_ops.packed_matmul_counts(jnp.asarray(a), jnp.asarray(b),
+                                              word_weights=ww)
+        exp = np.zeros((3, 2), np.int32)
+        for i in range(3):
+            for j in range(2):
+                x = np.bitwise_xor(a[i], b[j])
+                pc = np.array([bin(int(v) & 0xFFFFFFFF).count("1") for v in x])
+                exp[i, j] = int((pc * np.asarray(ww)).sum())
+        np.testing.assert_array_equal(np.asarray(got), exp)
+
+
+class TestLayerIntegration:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_integer_threshold_matches_float_bn(self, seed):
+        """Property: (cnt <= t) xor s == binarize(BN(K - 2cnt)) for all cnt."""
+        rng = np.random.default_rng(seed)
+        o = 16
+        k_valid = int(rng.integers(1, 512))
+        gamma = rng.uniform(-2, 2, o).astype(np.float32)
+        gamma[np.abs(gamma) < 1e-3] = 1.0  # paper footnote: gamma != 0
+        beta = rng.uniform(-1, 1, o).astype(np.float32)
+        mu = rng.uniform(-k_valid, k_valid, o).astype(np.float32)
+        sigma = rng.uniform(0.1, 3.0, o).astype(np.float32)
+        p = layer_integration.fold_bn(k_valid, jnp.asarray(gamma),
+                                      jnp.asarray(beta), jnp.asarray(mu),
+                                      jnp.asarray(sigma))
+        cnt = jnp.arange(k_valid + 1, dtype=jnp.int32)[:, None] * jnp.ones(
+            (1, o), jnp.int32)
+        got = layer_integration.apply_threshold(cnt, p)
+        x1 = (k_valid - 2 * cnt).astype(jnp.float32)
+        x3 = gamma * (x1 - mu) / sigma + beta
+        exp = (x3 >= 0).astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+    def test_first_layer_fold_matches_eqn2(self):
+        """wcnt <= t  ==  binarize(BN(sum_n 2^(n-1) dot_n)) on random data."""
+        rng = np.random.default_rng(5)
+        k, c, o = 3, 3, 8
+        k_valid = k * k * c
+        w = rng.choice([-1.0, 1.0], size=(k, k, c, o)).astype(np.float32)
+        w_sum = w.sum(axis=(0, 1, 2))
+        gamma = rng.uniform(0.1, 2, o).astype(np.float32)
+        beta = rng.uniform(-1, 1, o).astype(np.float32)
+        mu = rng.uniform(-100, 100, o).astype(np.float32)
+        sigma = rng.uniform(0.5, 2, o).astype(np.float32)
+        p = layer_integration.fold_bn_first_layer(
+            k_valid, jnp.asarray(w_sum), jnp.asarray(gamma),
+            jnp.asarray(beta), jnp.asarray(mu), jnp.asarray(sigma))
+        # random uint8 patch, direct integer conv reference
+        patch = rng.integers(0, 256, size=(k, k, c))
+        s_ref = np.tensordot(patch.astype(np.float64), w, axes=3)  # (o,)
+        bit_ref = ((gamma * (s_ref - mu) / sigma + beta) >= 0).astype(np.int32)
+        # engine path: weighted popcount
+        planes = np.stack([((patch >> n) & 1) for n in range(8)], axis=-2)
+        wcnt = np.zeros(o, np.int64)
+        for n in range(8):
+            for oo in range(o):
+                agree = (planes[..., n, :] == (w[..., oo] > 0))
+                wcnt[oo] += (1 << n) * int((~agree).sum())
+        got = layer_integration.apply_threshold(
+            jnp.asarray(wcnt, jnp.int32), p)
+        np.testing.assert_array_equal(np.asarray(got), bit_ref)
+
+
+class TestBitplanes:
+    def test_split_recombine_identity(self):
+        rng = np.random.default_rng(1)
+        x = rng.integers(0, 256, size=(2, 4, 4, 3)).astype(np.uint8)
+        planes = bitplanes.split_bitplanes(jnp.asarray(x))
+        assert planes.shape == (2, 4, 4, 8, 3)
+        v = bitplanes.recombine_planes(planes, axis=-2)
+        np.testing.assert_array_equal(np.asarray(v), x.astype(np.int32))
+
+    def test_pack_bitplanes_shape(self):
+        x = jnp.zeros((2, 4, 4, 3), jnp.uint8)
+        p = bitplanes.pack_bitplanes(x)
+        assert p.shape == (2, 4, 4, 8, 1)
+
+    def test_plane_word_weights(self):
+        ww = bitplanes.plane_word_weights(2)
+        np.testing.assert_array_equal(
+            np.asarray(ww), [1, 1, 2, 2, 4, 4, 8, 8, 16, 16, 32, 32, 64, 64,
+                             128, 128])

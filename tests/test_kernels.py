@@ -1,0 +1,151 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layer_integration, packing
+from repro.kernels import ref
+from repro.kernels.bitplane_pack import bitplane_pack
+from repro.kernels.fused_conv_bn_binarize import fused_matmul_bn_binarize
+from repro.kernels.mxu_pm1_matmul import mxu_pm1_matmul
+from repro.kernels.xnor_popcount_matmul import xnor_popcount_matmul
+
+
+def _packed(rng, rows, k):
+    signs = rng.choice([-1.0, 1.0], size=(rows, k)).astype(np.float32)
+    return packing.pack_signs(signs), signs
+
+
+class TestXnorPopcountMatmul:
+    @pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+        (8, 8, 64, 8, 8, 2),        # exact tiling
+        (10, 7, 65, 8, 8, 2),       # padding on every dim
+        (33, 40, 96, 16, 32, 1),    # multi-tile
+        (1, 1, 1, 8, 8, 8),         # degenerate
+        (4, 129, 2048, 4, 128, 32), # lane-width n
+    ])
+    def test_vs_oracle(self, m, n, k, bm, bn, bk):
+        rng = np.random.default_rng(m * 7 + n * 3 + k)
+        a, _ = _packed(rng, m, k)
+        b, _ = _packed(rng, n, k)
+        got = xnor_popcount_matmul(a, b, block_m=bm, block_n=bn, block_k=bk,
+                                   interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.xnor_popcount_matmul(a, b)))
+
+    def test_word_weights(self):
+        rng = np.random.default_rng(0)
+        a, _ = _packed(rng, 6, 8 * 32)
+        b, _ = _packed(rng, 5, 8 * 32)
+        ww = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128], jnp.int32)
+        got = xnor_popcount_matmul(a, b, ww, block_m=4, block_n=4, block_k=4,
+                                   interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.xnor_popcount_matmul(a, b, ww)))
+
+    @given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 300),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_shapes(self, m, n, k, seed):
+        rng = np.random.default_rng(seed)
+        a, _ = _packed(rng, m, k)
+        b, _ = _packed(rng, n, k)
+        got = xnor_popcount_matmul(a, b, block_m=16, block_n=16, block_k=4,
+                                   interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.xnor_popcount_matmul(a, b)))
+
+
+class TestFusedMatmulBnBinarize:
+    @pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+        (16, 64, 64, 8, 32, 1),
+        (9, 40, 100, 8, 32, 2),     # n not mult of 32, k padding
+        (32, 33, 288, 16, 32, 4),
+        (3, 256, 64, 4, 64, 2),
+    ])
+    def test_vs_oracle(self, m, n, k, bm, bn, bk):
+        rng = np.random.default_rng(n * 31 + k)
+        a, _ = _packed(rng, m, k)
+        b, _ = _packed(rng, n, k)
+        kv = k
+        t = jnp.asarray(rng.integers(-5, kv + 5, n), jnp.int32)
+        s = jnp.asarray(rng.integers(0, 2, n).astype(bool))
+        got = fused_matmul_bn_binarize(a, b, t, s, block_m=bm, block_n=bn,
+                                       block_k=bk, interpret=True)
+        exp = ref.fused_matmul_bn_binarize(a, b, t, s)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+    def test_with_plane_weights(self):
+        rng = np.random.default_rng(4)
+        a, _ = _packed(rng, 10, 16 * 32)
+        b, _ = _packed(rng, 40, 16 * 32)
+        ww = jnp.asarray(rng.integers(1, 129, 16), jnp.int32)
+        t = jnp.asarray(rng.integers(0, 3000, 40), jnp.int32)
+        s = jnp.asarray(rng.integers(0, 2, 40).astype(bool))
+        got = fused_matmul_bn_binarize(a, b, t, s, ww, block_m=8, block_n=32,
+                                       block_k=4, interpret=True)
+        exp = ref.fused_matmul_bn_binarize(a, b, t, s, ww)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+class TestBitplanePack:
+    @pytest.mark.parametrize("shape,bh", [
+        ((2, 8, 8, 3), 4),
+        ((1, 7, 5, 3), 4),          # h padding
+        ((2, 4, 4, 33), 2),         # multi-word channels
+        ((1, 1, 1, 1), 1),
+    ])
+    def test_vs_oracle(self, shape, bh):
+        rng = np.random.default_rng(shape[1] * 13)
+        x = jnp.asarray(rng.integers(0, 256, size=shape), jnp.uint8)
+        got = bitplane_pack(x, block_h=bh, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.bitplane_pack(x)))
+
+
+class TestMxuPm1Matmul:
+    @pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+        (8, 8, 64, 8, 8, 1),
+        (10, 9, 100, 8, 8, 2),      # channel-pad bits + block padding
+        (16, 40, 513, 8, 16, 4),
+    ])
+    def test_vs_oracle(self, m, n, k, bm, bn, bk):
+        rng = np.random.default_rng(k * 3 + m)
+        a, av = _packed(rng, m, k)
+        b, bv = _packed(rng, n, k)
+        got = mxu_pm1_matmul(a, b, k_valid=k, block_m=bm, block_n=bn,
+                             block_k=bk, interpret=True)
+        exp = (av @ bv.T).astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(got), exp)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.mxu_pm1_matmul(a, b, k_valid=k)))
+
+
+class TestOpsDispatch:
+    def test_modes_agree(self):
+        from repro.kernels import ops
+        rng = np.random.default_rng(9)
+        a, _ = _packed(rng, 12, 130)
+        b, _ = _packed(rng, 7, 130)
+        outs = [np.asarray(ops.binary_matmul_dot(a, b, 130, mode=m))
+                for m in ("vpu_popcount", "mxu_pm1", "xla")]
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[0], outs[2])
+
+    def test_fused_conv_matches_core(self):
+        from repro.kernels import ops
+        from repro.core import binary_conv
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.integers(-2**31, 2**31, size=(2, 6, 6, 2)),
+                        jnp.int32)
+        w = rng.choice([-1.0, 1.0], size=(3, 3, 64, 8)).astype(np.float32)
+        wp = binary_conv.pack_conv_weights(jnp.asarray(w))
+        t = jnp.asarray(rng.integers(0, 9 * 64, 8), jnp.int32)
+        s = jnp.asarray(rng.integers(0, 2, 8).astype(bool))
+        p = layer_integration.IntegratedParams(t, s)
+        got = ops.fused_binary_conv2d(x, wp, p, 3, 3, 1, 1)
+        exp = binary_conv.binary_conv2d_fused(x, wp, p, 3, 3, 1, 1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))

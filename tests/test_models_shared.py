@@ -1,0 +1,199 @@
+"""Shared model substrate: attention oracles, RoPE, MoE, CE — unit +
+property tests."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import rules_for_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.models import layers, moe as moe_lib, transformer
+
+
+@pytest.fixture(scope="module")
+def rules():
+    mesh = make_host_mesh(data=1, model=1)
+    with mesh:
+        yield rules_for_mesh(mesh)
+
+
+# --------------------------------------------------------------------------
+# Chunked (flash) attention vs naive oracle
+# --------------------------------------------------------------------------
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (6, 2)])
+    def test_matches_reference(self, causal, h, kvh):
+        b, s, hd = 2, 64, 16
+        key = jax.random.key(h * 10 + kvh + causal)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, kvh, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, kvh, hd), jnp.float32)
+        out = layers.chunked_attention(q, k, v, causal=causal,
+                                       q_chunk=16, kv_chunk=16)
+        ref = layers.reference_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("q_chunk,kv_chunk", [(64, 64), (32, 16),
+                                                  (8, 64), (64, 8)])
+    def test_chunking_invariance(self, q_chunk, kv_chunk):
+        """Output is independent of the chunking schedule."""
+        b, s, h, hd = 1, 64, 2, 8
+        key = jax.random.key(0)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd))
+        k = jax.random.normal(ks[1], (b, s, h, hd))
+        v = jax.random.normal(ks[2], (b, s, h, hd))
+        a = layers.chunked_attention(q, k, v, causal=True,
+                                     q_chunk=q_chunk, kv_chunk=kv_chunk)
+        b_ = layers.reference_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_gradients_flow(self):
+        b, s, h, hd = 1, 32, 2, 8
+        key = jax.random.key(1)
+        q = jax.random.normal(key, (b, s, h, hd))
+
+        def f(q):
+            return jnp.sum(layers.chunked_attention(
+                q, q, q, causal=True, q_chunk=8, kv_chunk=8))
+
+        g = jax.grad(f)(q)
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.abs(g).max()) > 0
+
+    def test_flash_decode_partials(self):
+        """Manual partial-combine == full softmax attention (1 query)."""
+        b, s, kvh, hd, h = 2, 32, 2, 8, 4
+        key = jax.random.key(2)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, h, hd))
+        kc = jax.random.normal(ks[1], (b, s, kvh, hd))
+        vc = jax.random.normal(ks[2], (b, s, kvh, hd))
+        # two "shards" of the cache
+        o1, m1, l1 = layers.flash_decode_local(q, kc[:, :16], vc[:, :16],
+                                               jnp.int32(s), jnp.int32(0))
+        o2, m2, l2 = layers.flash_decode_local(q, kc[:, 16:], vc[:, 16:],
+                                               jnp.int32(s), jnp.int32(16))
+        m = jnp.maximum(m1, m2)
+        l = l1 * jnp.exp(m1 - m) + l2 * jnp.exp(m2 - m)
+        o = (o1 * jnp.exp(m1 - m)[..., None]
+             + o2 * jnp.exp(m2 - m)[..., None]) / l[..., None]
+        ref = layers.reference_attention(
+            q[:, None], kc, vc, causal=False)[:, 0]
+        np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+class TestRoPE:
+    def test_preserves_norm(self):
+        x = jax.random.normal(jax.random.key(0), (2, 16, 4, 32))
+        pos = jnp.arange(16)[None, :]
+        y = layers.apply_rope(x, pos)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i - j."""
+        hd = 32
+        q = jax.random.normal(jax.random.key(1), (hd,))
+        k = jax.random.normal(jax.random.key(2), (hd,))
+
+        def dot_at(i, j):
+            qr = layers.apply_rope(q[None, None, None, :],
+                                   jnp.array([[i]]))[0, 0, 0]
+            kr = layers.apply_rope(k[None, None, None, :],
+                                   jnp.array([[j]]))[0, 0, 0]
+            return float(qr @ kr)
+
+        assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+        assert abs(dot_at(0, 0) - dot_at(100, 100)) < 1e-4
+
+    def test_position_zero_identity(self):
+        x = jax.random.normal(jax.random.key(3), (1, 1, 2, 16))
+        y = layers.apply_rope(x, jnp.zeros((1, 1), jnp.int32))
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# MoE: EP layer vs dense oracle
+# --------------------------------------------------------------------------
+
+class TestMoE:
+    def test_matches_reference_high_capacity(self, rules):
+        t, d, e, k, fe = 64, 16, 8, 2, 32
+        key = jax.random.key(0)
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (t, d), jnp.float32)
+        router = jax.random.normal(ks[1], (d, e)) * 0.1
+        wg = jax.random.normal(ks[2], (e, d, fe)) / np.sqrt(d)
+        wu = jax.random.normal(ks[3], (e, d, fe)) / np.sqrt(d)
+        wd = jax.random.normal(ks[4], (e, fe, d)) / np.sqrt(fe)
+        out, aux = moe_lib.moe_apply(
+            x, router, wg, wu, wd, n_experts=e, top_k=k,
+            capacity_factor=float(e), rules=rules, token_axes=())
+        ref = moe_lib.moe_reference(x, router, wg, wu, wd, n_experts=e,
+                                    top_k=k)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+        assert float(aux) > 0
+
+    def test_padded_experts_never_selected(self, rules):
+        """n_real < E_pad: padding experts get zero routed tokens."""
+        t, d, e_real, e_pad, k, fe = 32, 8, 5, 8, 2, 16
+        key = jax.random.key(1)
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (t, d))
+        router = jax.random.normal(ks[1], (d, e_pad))
+        w, ids, probs = moe_lib._route(x, router, n_real=e_real, top_k=k)
+        assert int(jnp.max(ids)) < e_real
+        assert float(jnp.sum(probs[:, e_real:])) < 1e-6
+
+    def test_capacity_drops_overflow(self):
+        ids = jnp.zeros((10, 1), jnp.int32)  # all tokens -> expert 0
+        dest, keep = moe_lib._dispatch_indices(ids, n_experts=4, cap=3)
+        assert int(keep.sum()) == 3          # capacity enforced
+        assert sorted(np.asarray(dest[keep]).tolist()) == [0, 1, 2]
+
+    @given(st.integers(0, 10_000), st.integers(1, 4))
+    @settings(max_examples=20, deadline=None)
+    def test_dispatch_positions_unique(self, seed, k):
+        """No two kept assignments land in the same bucket slot."""
+        rng = np.random.default_rng(seed)
+        e, cap, t = 6, 4, 16
+        ids = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+        dest, keep = moe_lib._dispatch_indices(ids, n_experts=e, cap=cap)
+        kept = np.asarray(dest)[np.asarray(keep)]
+        assert len(set(kept.tolist())) == len(kept)
+        assert (kept < e * cap).all()
+
+
+# --------------------------------------------------------------------------
+# Chunked CE == unchunked CE
+# --------------------------------------------------------------------------
+
+def test_chunked_ce_matches_dense(rules):
+    b, s, d, v = 2, 32, 16, 64
+    key = jax.random.key(0)
+    x = jax.random.normal(jax.random.key(1), (b, s, d), jnp.float32)
+    head = jax.random.normal(jax.random.key(2), (d, v), jnp.float32)
+    labels = jax.random.randint(jax.random.key(3), (b, s), 0, v)
+    dense = transformer.cross_entropy((x @ head), labels)
+    chunked = transformer.chunked_ce(x, head, labels, rules, v)
+    np.testing.assert_allclose(float(dense), float(chunked), rtol=1e-5)

@@ -1,0 +1,132 @@
+"""Property-based tests (hypothesis) for system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binary_conv, binary_ops, packing
+from repro.distributed.straggler import StragglerMonitor
+from repro.distributed.sharding import rules_for_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer
+from repro.serving import BatchScheduler
+
+
+class TestBinaryAlgebra:
+    @given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 300),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_pm1_impl_equals_xor_impl(self, m, n, k, seed):
+        """The matmul-engine reformulation is exact for any shape."""
+        rng = np.random.default_rng(seed)
+        a = packing.pack_signs(jnp.asarray(
+            rng.choice([-1.0, 1.0], (m, k)).astype(np.float32)))
+        b = packing.pack_signs(jnp.asarray(
+            rng.choice([-1.0, 1.0], (n, k)).astype(np.float32)))
+        cx = binary_ops.packed_matmul_counts(a, b, impl="xor")
+        cp = binary_ops.packed_matmul_counts(a, b, impl="pm1")
+        np.testing.assert_array_equal(np.asarray(cx), np.asarray(cp))
+
+    @given(st.integers(2, 6), st.integers(1, 3), st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_or_pool_equals_maxpool(self, hw, win, seed):
+        """sign is monotone: OR-pooling packed bits == maxpool-then-pack."""
+        rng = np.random.default_rng(seed)
+        win = min(win, hw)
+        x = rng.choice([-1.0, 1.0], (1, hw, hw, 64)).astype(np.float32)
+        xp = packing.pack_signs(jnp.asarray(x), axis=-1)
+        pooled_packed = binary_conv.binary_or_maxpool(xp, win, win)
+        from jax import lax
+        pooled_float = lax.reduce_window(
+            jnp.asarray(x), -jnp.inf, lax.max, (1, win, win, 1),
+            (1, win, win, 1), "VALID")
+        expect = packing.pack_signs(pooled_float, axis=-1)
+        np.testing.assert_array_equal(np.asarray(pooled_packed),
+                                      np.asarray(expect))
+
+    @given(st.integers(1, 4), st.integers(1, 64), st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_pack_axis_invariance(self, lead, c, seed):
+        """Packing along any axis round-trips."""
+        rng = np.random.default_rng(seed)
+        bits = rng.integers(0, 2, (lead, c, 3)).astype(np.int32)
+        for axis in range(3):
+            w = packing.pack_bits(jnp.asarray(bits), axis=axis)
+            out = packing.unpack_bits(w, bits.shape[axis], axis=axis)
+            np.testing.assert_array_equal(np.asarray(out), bits)
+
+
+class TestChunkedCE:
+    @given(st.integers(1, 3), st.sampled_from([8, 12, 24]),
+           st.integers(10, 80), st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_matches_dense(self, b, s, v, seed):
+        mesh = make_host_mesh(1, 1)
+        rules = rules_for_mesh(mesh)
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(b, s, 16)).astype(np.float32))
+        head = jnp.asarray(rng.normal(size=(16, v)).astype(np.float32))
+        labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+        with mesh:
+            dense = transformer.cross_entropy(x @ head, labels)
+            chunked = transformer.chunked_ce(x, head, labels, rules, v)
+        np.testing.assert_allclose(float(dense), float(chunked),
+                                   rtol=1e-5)
+
+    @given(st.integers(1, 7), st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_vocab_padding_invariant(self, pad, seed):
+        """Extra (masked) vocab columns never change the loss."""
+        mesh = make_host_mesh(1, 1)
+        rules = rules_for_mesh(mesh)
+        rng = np.random.default_rng(seed)
+        b, s, d, v = 2, 8, 8, 17
+        x = jnp.asarray(rng.normal(size=(b, s, d)).astype(np.float32))
+        head = jnp.asarray(rng.normal(size=(d, v)).astype(np.float32))
+        head_pad = jnp.pad(head, ((0, 0), (0, pad)))
+        labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+        with mesh:
+            base = transformer.chunked_ce(x, head, labels, rules, v)
+            padded = transformer.chunked_ce(x, head_pad, labels, rules, v)
+        np.testing.assert_allclose(float(base), float(padded), rtol=1e-5)
+
+
+class TestServingInvariants:
+    @given(st.integers(1, 30), st.integers(1, 8), st.integers(0, 999))
+    @settings(max_examples=20, deadline=None)
+    def test_scheduler_conserves_requests(self, n_req, max_batch, seed):
+        """Every submitted request is served exactly once, in order."""
+        s = BatchScheduler(max_batch=max_batch, max_wait_s=0.0,
+                           buckets=(1, 2, 4, 8))
+        for i in range(n_req):
+            s.submit(i)
+        served = []
+        while len(s):
+            done = s.drain(lambda ps: [p * 2 for p in ps])
+            served.extend(r.payload for r in done)
+            assert all(r.result == r.payload * 2 for r in done)
+        assert served == list(range(n_req))
+
+    @given(st.floats(0.001, 0.2), st.integers(20, 60))
+    @settings(max_examples=15, deadline=None)
+    def test_straggler_constant_never_flags(self, dt, n):
+        mon = StragglerMonitor(min_samples=5)
+        assert not any(mon.observe(i, dt) for i in range(n))
+
+
+class TestRulesInvariants:
+    @given(st.integers(1, 512))
+    @settings(max_examples=30, deadline=None)
+    def test_shard_if_divisibility(self, dim):
+        mesh = make_host_mesh(1, 1)
+        rules = rules_for_mesh(mesh)
+        got = rules.shard_if(dim, rules.model)
+        # tp == 1: everything is "divisible", axis returned
+        assert got == rules.model
+
+    @given(st.integers(1, 100), st.integers(1, 16))
+    @settings(max_examples=30, deadline=None)
+    def test_padded_vocab(self, vocab, mult):
+        vp = transformer.padded_vocab(vocab, mult)
+        assert vp >= vocab and vp % mult == 0 and vp - vocab < mult

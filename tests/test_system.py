@@ -1,0 +1,281 @@
+"""End-to-end system tests: fault tolerance, serving, drivers.
+
+Covers the large-scale-runnability story on a single host:
+checkpoint/restart with fault injection, elastic restore, straggler
+detection, batch scheduling, KV-slot management, and the PhoneBit engine
+serving path.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.distributed.straggler import StragglerMonitor
+from repro.serving import BatchScheduler, KVCacheManager, PhoneBitEngine
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+# --------------------------------------------------------------------------
+# Checkpointing
+# --------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def _tree(self, scale=1.0):
+        return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3) * scale,
+                "nested": {"b": jnp.ones((4,), jnp.int32)}}
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = self._tree()
+        save(tmp_path, 7, tree)
+        assert latest_step(tmp_path) == 7
+        out = restore(tmp_path, 7, jax.eval_shape(lambda: tree))
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+        np.testing.assert_array_equal(np.asarray(out["nested"]["b"]),
+                                      np.asarray(tree["nested"]["b"]))
+
+    def test_atomic_no_partial(self, tmp_path):
+        # a leftover tmp file from a "crashed" writer is ignored
+        (tmp_path / "tmp.3.999.npz").write_bytes(b"garbage")
+        assert latest_step(tmp_path) is None
+        save(tmp_path, 3, self._tree())
+        assert latest_step(tmp_path) == 3
+
+    def test_retention(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for step in (1, 2, 3, 4):
+            mgr.save(step, self._tree(step))
+        steps = sorted(int(f.name.split("_")[1].split(".")[0])
+                       for f in tmp_path.glob("step_*.npz"))
+        assert steps == [3, 4]
+
+    def test_async_writer(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save_async(5, self._tree())
+        mgr.wait()
+        assert mgr.latest_step() == 5
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save(tmp_path, 1, {"a": jnp.ones((2, 2))})
+        with pytest.raises(ValueError, match="shape"):
+            restore(tmp_path, 1, {"a": jax.ShapeDtypeStruct((3, 3),
+                                                            jnp.float32)})
+
+
+# --------------------------------------------------------------------------
+# Straggler monitor
+# --------------------------------------------------------------------------
+
+class TestStraggler:
+    def test_detects_outlier(self):
+        warns = []
+        mon = StragglerMonitor(on_warn=lambda s, dt, mu: warns.append(s),
+                               min_samples=5)
+        for i in range(20):
+            mon.observe(i, 0.1 + 0.001 * (i % 3))
+        assert not warns
+        mon.observe(20, 1.5)        # 15x mean
+        assert warns == [20]
+
+    def test_persistent_triggers_mitigation(self):
+        hits = []
+        mon = StragglerMonitor(on_persistent=hits.append,
+                               persistent_after=3, min_samples=5)
+        for i in range(10):
+            mon.observe(i, 0.1)
+        for i in range(10, 13):     # degrading host
+            mon.observe(i, 2.0)
+        assert hits == [12]
+
+    def test_outliers_do_not_poison_baseline(self):
+        mon = StragglerMonitor(min_samples=5)
+        for i in range(10):
+            mon.observe(i, 0.1)
+        base = mon.mean_step_time
+        mon.observe(10, 5.0)
+        assert abs(mon.mean_step_time - base) < 1e-9
+
+
+# --------------------------------------------------------------------------
+# Batch scheduler
+# --------------------------------------------------------------------------
+
+class TestScheduler:
+    def test_batches_up_to_max(self):
+        s = BatchScheduler(max_batch=4, max_wait_s=10.0)
+        for i in range(6):
+            s.submit(i)
+        batch = s.next_batch()
+        assert [r.payload for r in batch] == [0, 1, 2, 3]
+        assert len(s) == 2
+
+    def test_waits_for_more(self):
+        s = BatchScheduler(max_batch=4, max_wait_s=10.0)
+        s.submit(0)
+        assert s.next_batch(now=s._queue[0].arrival_s + 0.1) is None
+        assert s.next_batch(now=s._queue[0].arrival_s + 11) is not None
+
+    def test_drain_pads_to_bucket(self):
+        s = BatchScheduler(max_batch=8, max_wait_s=0.0, buckets=(1, 4, 8))
+        for i in range(3):
+            s.submit(i)
+        seen = {}
+
+        def run(payloads):
+            seen["n"] = len(payloads)
+            return [p * 10 for p in payloads]
+
+        done = s.drain(run)
+        assert seen["n"] == 4                    # padded 3 -> bucket 4
+        assert [r.result for r in done] == [0, 10, 20]
+        assert all(r.done for r in done)
+
+
+# --------------------------------------------------------------------------
+# KV-cache manager
+# --------------------------------------------------------------------------
+
+class TestKVCacheManager:
+    def test_slot_lifecycle(self):
+        mgr = KVCacheManager(n_slots=2, max_seq=64)
+        s1 = mgr.admit(8, 4)
+        s2 = mgr.admit(8, 4)
+        assert not mgr.can_admit()
+        assert mgr.utilization == 1.0
+        done = False
+        for t in range(4):
+            done = mgr.record_token(s1.seq_id, t)
+        assert done and mgr.can_admit()
+        s3 = mgr.admit(4, 4)
+        assert s3.slot == s1.slot    # slot recycled
+
+    def test_eos_finishes(self):
+        mgr = KVCacheManager(n_slots=1, max_seq=64)
+        s = mgr.admit(4, 40)
+        assert not mgr.record_token(s.seq_id, 7, eos_id=9)
+        assert mgr.record_token(s.seq_id, 9, eos_id=9)
+        assert s.tokens == [7, 9]
+
+    def test_overlong_rejected(self):
+        mgr = KVCacheManager(n_slots=1, max_seq=16)
+        with pytest.raises(AssertionError):
+            mgr.admit(10, 10)
+
+
+# --------------------------------------------------------------------------
+# Fault injection: checkpoint -> crash -> resume (full driver)
+# --------------------------------------------------------------------------
+
+def test_train_crash_resume(tmp_path):
+    """Train 10 steps dying at step 6; the restart restores step 5's
+    checkpoint and resumes from step 6 (deterministic pipeline)."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    args = [sys.executable, "-m", "repro.launch.train",
+            "--arch", "minitron-8b", "--smoke",
+            "--steps", "10", "--batch", "2", "--seq-len", "32",
+            "--checkpoint-dir", str(tmp_path / "ckpt"),
+            "--checkpoint-every", "3", "--log-every", "1"]
+
+    r1 = subprocess.run(args + ["--fail-at", "6"], env=env,
+                        capture_output=True, text=True, timeout=420)
+    assert r1.returncode == 17, (r1.stdout[-1000:], r1.stderr[-1000:])
+    assert "fault injection" in r1.stdout
+
+    r2 = subprocess.run(args, env=env, capture_output=True, text=True,
+                        timeout=420)
+    assert r2.returncode == 0, (r2.stdout[-1000:], r2.stderr[-1000:])
+    assert "restored checkpoint at step 5" in r2.stdout
+    assert "resuming from 6" in r2.stdout.replace("\n", " ")
+
+
+# --------------------------------------------------------------------------
+# PhoneBit engine end-to-end
+# --------------------------------------------------------------------------
+
+def test_engine_matches_float_oracle_small():
+    """Random tiny BNN: packed engine == float sign oracle."""
+    from repro.core import bnn_model
+    from repro.core.bnn_model import BConv, BDense, FloatDense, Pool
+
+    spec = [
+        BConv(3, 32, kernel=3, stride=1, pad=1, first=True),
+        Pool(2, 2),
+        BConv(32, 64, kernel=3, stride=1, pad=1),
+        Pool(2, 2),
+        BDense(4 * 4 * 64, 128),
+        FloatDense(128, 10),
+    ]
+    key = jax.random.key(0)
+    params = bnn_model.init_params(key, spec)
+    params = [dict(p, mu=jax.random.normal(jax.random.key(i),
+                                           p["mu"].shape) * 0.2)
+              if "mu" in p else p for i, p in enumerate(params)]
+    engine = PhoneBitEngine.from_trained(params, spec, (16, 16))
+    x = jax.random.randint(jax.random.key(1), (2, 16, 16, 3), 0,
+                           256).astype(jnp.uint8)
+    packed_out = engine(x)
+    float_out = bnn_model.float_forward(params, spec, x)
+    np.testing.assert_allclose(np.asarray(packed_out),
+                               np.asarray(float_out), rtol=1e-4, atol=1e-4)
+
+
+def test_engine_artifact_roundtrip(tmp_path):
+    from repro.core import bnn_model
+    from repro.core.bnn_model import BConv, FloatDense, Pool
+
+    spec = [BConv(3, 32, kernel=3, stride=1, pad=1, first=True),
+            Pool(2, 2), FloatDense(8 * 8 * 32, 10)]
+    params = bnn_model.init_params(jax.random.key(0), spec)
+    e1 = PhoneBitEngine.from_trained(params, spec, (16, 16))
+    path = str(tmp_path / "model.npz")
+    e1.save_artifact(path)
+    e2 = PhoneBitEngine.from_artifact(path, spec, (16, 16))
+    x = jax.random.randint(jax.random.key(1), (1, 16, 16, 3), 0,
+                           256).astype(jnp.uint8)
+    np.testing.assert_array_equal(np.asarray(e1(x)), np.asarray(e2(x)))
+    assert e1.model_bytes == e2.model_bytes
+
+
+def test_yolo_final_float_conv():
+    """YOLOv2-Tiny-style FloatConv head + darknet stride-1 pool:
+    packed engine == float oracle."""
+    from repro.core import bnn_model
+    from repro.core.bnn_model import BConv, FloatConv, Pool
+
+    spec = [BConv(3, 16, kernel=3, stride=1, pad=1, first=True),
+            Pool(2, 1, pad=(0, 1)),
+            BConv(16, 32, kernel=3, stride=1, pad=1),
+            FloatConv(32, 12, kernel=1)]
+    params = bnn_model.init_params(jax.random.key(2), spec)
+    engine = PhoneBitEngine.from_trained(params, spec, (8, 8))
+    x = jax.random.randint(jax.random.key(3), (2, 8, 8, 3), 0,
+                           256).astype(jnp.uint8)
+    out = engine(x)
+    ref = bnn_model.float_forward(params, spec, x)
+    assert out.shape == (2, 8, 8, 12)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_paper_network_specs_consistent():
+    """The three paper networks build, convert, and report Tab-II-scale
+    model sizes (float ~15-20x larger than packed)."""
+    from repro.core import bnn_model, converter
+    from repro.models import paper_nets
+
+    for name in ("alexnet", "vgg16", "yolov2-tiny"):
+        spec, (h, w, c) = paper_nets.get(name)
+        params = bnn_model.init_params(jax.random.key(0), spec)
+        packed = converter.convert(params, spec, (h, w))
+        fb = converter.float_model_bytes(params)
+        bb = converter.model_bytes(packed)
+        ratio = fb / bb
+        assert 5 < ratio < 40, (name, ratio)
