@@ -49,6 +49,13 @@ def _float_conv_ms(x_float, w, stride, pad):
 def run() -> list[dict]:
     spec, _ = paper_nets.get("yolov2-tiny")
     convs = [l for l in spec if isinstance(l, (BConv, FloatConv))]
+    # Per-layer backend winners from the graph runtime's autotuner
+    # (benchmarks/graph_plan.py): which engine won *where*.
+    from benchmarks import graph_plan
+    try:
+        winners = graph_plan.conv_winners("yolov2-tiny")
+    except Exception:
+        winners = []
     rows = []
     rng = np.random.default_rng(0)
     key = jax.random.key(0)
@@ -105,12 +112,16 @@ def run() -> list[dict]:
             t_bnn = t_float
             ops_bound = 1.0
 
+        graph_backend = ("float" if not isinstance(layer, BConv)
+                         else (winners[i - 1] if i - 1 < len(winners)
+                               else "n/a"))
         rows.append(dict(
             layer=lname, grid=h, c_in=c_in, c_out=c_out,
             float_ms=round(t_float, 3), bnn_ms=round(t_bnn, 3),
             host_speedup=round(t_float / max(t_bnn, 1e-9), 2),
             ops_bound_speedup=ops_bound,
             paper_speedup=PAPER_SPEEDUP[lname],
+            graph_backend=graph_backend,
         ))
     emit(rows, "Fig 5 — per-layer speedup, YOLOv2-Tiny "
                "(host wall + ops-bound shape)")

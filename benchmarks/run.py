@@ -11,7 +11,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (crossover, fig5_layers, roofline,
+    from benchmarks import (crossover, fig5_layers, graph_plan, roofline,
                             table2_model_size, table3_runtime,
                             table4_energy)
 
@@ -20,6 +20,7 @@ def main() -> None:
             ("table2_model_size", table2_model_size.run),
             ("table3_runtime", table3_runtime.run),
             ("fig5_layers", fig5_layers.run),
+            ("graph_plan", graph_plan.run),
             ("crossover", crossover.run),
     ):
         try:

@@ -37,12 +37,23 @@ engine.save_artifact("/tmp/quickstart_bnn.npz")
 engine2 = PhoneBitEngine.from_artifact("/tmp/quickstart_bnn.npz", spec,
                                        (32, 32))
 
-# (4) packed integer inference == float sign oracle
+# (4) packed integer inference == float sign oracle.  The engine executes
+# through the graph runtime (operator IR + jit'd topological executor);
+# cross_check also runs the legacy flat packed_forward walk and asserts
+# bit-exactness between the two.
 x = jnp.asarray(np.random.default_rng(0).integers(
     0, 256, (4, 32, 32, 3), dtype=np.uint8))
-logits = engine2(x)
+logits = engine2.cross_check(x)
 oracle = bnn_model.float_forward(params, spec, x)
 np.testing.assert_allclose(np.asarray(logits), np.asarray(oracle),
                            rtol=1e-4, atol=1e-4)
-print("packed engine matches float oracle ✓")
+print("packed engine (graph runtime == flat path) matches float oracle ✓")
 print("logits[0]:", np.asarray(logits[0]).round(2))
+
+# (5) the runtime's static memory plan: intermediate buffers share one
+# arena (lifetime-based slot reuse), so peak memory < sum of buffers.
+plan = engine2.memory_plan()
+print(f"memory plan: peak {plan.peak_bytes() / 2**10:.1f} KiB arena vs "
+      f"{plan.naive_bytes() / 2**10:.1f} KiB without reuse")
+print("per-node backends:", [(r['op'], r['backend'])
+                             for r in engine2.backend_choices])

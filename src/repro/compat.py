@@ -1,0 +1,27 @@
+"""Version-compat shims for the installed jax.
+
+The codebase targets the modern jax API surface; older installs spell some
+of it differently.  Everything here is a thin rename — no behavioral
+wrappers — so call sites read like modern jax.
+
+* ``shard_map``: ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (old), whose replication-check
+  kwarg is ``check_rep`` rather than ``check_vma``.
+* ``AxisType`` handling lives in :mod:`repro.launch.mesh` (meshes are
+  implicitly auto-typed on old jax).
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:  # jax < 0.6: experimental namespace, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

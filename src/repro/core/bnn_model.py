@@ -200,6 +200,20 @@ def float_forward(params: Sequence[dict], spec: Sequence[LayerSpec],
     return x
 
 
+def to_graph(params: Sequence[dict], spec: Sequence[LayerSpec],
+             input_hw: tuple[int, int]):
+    """Lower trained latent-float params to the *unfused* operator graph.
+
+    Hook into :mod:`repro.runtime` (DESIGN.md §4.2): the unfused graph is
+    the input of the optimization-pass pipeline (layout assignment, BN
+    integration, epilogue fusion, OR-pool absorption), which converges to
+    the same fused graph :func:`repro.core.converter.to_graph` produces
+    from an artifact.  Imported lazily to avoid a core→runtime cycle.
+    """
+    from repro.runtime import lower_trained
+    return lower_trained(spec, params, input_hw)
+
+
 # --------------------------------------------------------------------------
 # Packed inference path (the engine)
 # --------------------------------------------------------------------------

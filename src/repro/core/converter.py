@@ -111,6 +111,19 @@ def convert(params: Sequence[dict], spec: Sequence[LayerSpec],
     return packed
 
 
+def to_graph(packed: Sequence[dict], spec: Sequence[LayerSpec],
+             input_hw: tuple[int, int]):
+    """Lower a converted artifact to the runtime operator graph.
+
+    Hook into :mod:`repro.runtime` (DESIGN.md §4.2): the graph is the
+    deployable form the executor/memory-planner consume; this is what
+    ``PhoneBitEngine`` runs through.  Imported lazily to keep ``core`` free
+    of a runtime dependency.
+    """
+    from repro.runtime import lower_packed
+    return lower_packed(spec, packed, input_hw)
+
+
 # --------------------------------------------------------------------------
 # Serialized artifact ("compressed PhoneBit format")
 # --------------------------------------------------------------------------

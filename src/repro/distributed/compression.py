@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 
 def quantize_int8(x: jnp.ndarray):
     """Symmetric per-tensor int8 quantization.  Returns (q, scale)."""
@@ -102,7 +104,7 @@ def pod_compressed_mean(grads: Any, err: Any | None, mesh, *,
 
     from jax.sharding import PartitionSpec as P
     spec = jax.tree.map(lambda _: P(), grads)
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(spec, spec), out_specs=(spec, spec),
         check_vma=False,

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
                    axis: str, n_microbatches: int):
@@ -80,7 +82,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
         return lax.psum(outs, axis)
 
     spec_p = jax.tree.map(lambda _: P(axis), stage_params)
-    out = jax.shard_map(
+    out = compat.shard_map(
         local, mesh=mesh,
         in_specs=(spec_p, P()), out_specs=P(),
         check_vma=False,

@@ -38,6 +38,8 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed.sharding import Rules
 from repro.models import layers
 
+from repro import compat
+
 
 def padded_experts(n_experts: int, ep: int) -> int:
     return -(-n_experts // ep) * ep
@@ -178,7 +180,7 @@ def moe_apply(x_tokens: jnp.ndarray, router, wg, wu, wd, *,
     # check_vma=False: when tokens are replicated over the model axis
     # (decode), the static variance checker cannot prove the all_to_all
     # round-trip keeps them replicated; the collectives are still correct.
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         body, mesh=rules.mesh,
         in_specs=(tok_spec, P(None, None), P(rules.model, None, None),
                   P(rules.model, None, None), P(rules.model, None, None)),

@@ -1,0 +1,34 @@
+"""Graph runtime: operator IR, optimization passes, memory planning, and a
+multi-backend autotuned executor (DESIGN.md §4).
+
+The engine-level half of the PhoneBit reproduction: where ``repro.core``
+provides the kernels and the offline parameter transform, this package
+provides the *framework* that composes them — the difference §V-C of the
+paper (and daBNN/CNNdroid before it) draws between a fast kernel and a
+fast engine.
+
+    graph      operator IR (explicit-edge DAG) + lowering from LayerSpec
+               sequences, converter artifacts, and trained float params
+    passes     layout assignment, conv+BN+binarize integration (Eqns 5-9),
+               epilogue fusion, OR-pool absorption — as testable rewrites
+    memory     static lifetime analysis + arena planning (peak_bytes)
+    executor   jit-compiled topological evaluator, per-node backends
+    autotune   times backend candidates per node, caches winners
+"""
+
+from repro.runtime.autotune import Autotuner, default_candidates
+from repro.runtime.executor import BACKENDS, GraphExecutor
+from repro.runtime.graph import (DISPATCHABLE_OPS, Graph, Node, TensorType,
+                                 infer_types, lower_packed, lower_trained)
+from repro.runtime.memory import MemoryPlan, plan_memory
+from repro.runtime.passes import (absorb_pools, assign_layouts,
+                                  default_pipeline, fuse_epilogues,
+                                  integrate_bn)
+
+__all__ = [
+    "Autotuner", "BACKENDS", "DISPATCHABLE_OPS", "Graph", "GraphExecutor",
+    "MemoryPlan", "Node", "TensorType", "absorb_pools", "assign_layouts",
+    "default_candidates", "default_pipeline", "fuse_epilogues",
+    "infer_types", "integrate_bn", "lower_packed", "lower_trained",
+    "plan_memory",
+]

@@ -1,0 +1,103 @@
+"""Per-node backend autotuning (DESIGN.md §4.6).
+
+All executor backends are bit-exact, so the fastest one per node is a free
+win — but the winner depends on shape: popcount formulations win when the
+packed reduction dim is long relative to the matmul engine's tile economics,
+±1-matmul wins for fat output dims (the crossover benchmarks measure this
+globally; here it is decided *per node*).
+
+:class:`Autotuner` times each candidate backend on a zero-filled input of
+the node's inferred shape (timing is layout/shape-dependent, not
+value-dependent — binary kernels have no data-dependent control flow) and
+caches the winner under a shape/attr signature.  The cache is keyed so
+structurally identical layers across graphs (or across engine restarts
+sharing a cache dict) reuse measurements instead of re-timing, and the
+resulting backend map is frozen into a new :class:`GraphExecutor` — so the
+serving path never re-times or re-compiles.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.executor import BACKENDS, GraphExecutor, eval_node
+from repro.runtime.graph import DISPATCHABLE_OPS, Graph, infer_types
+
+# Default candidates: the pure-XLA formulations everywhere; the Pallas
+# kernels only compete where they are compiled (on TPU) — in interpret mode
+# they are validators, not contenders.
+def default_candidates() -> tuple[str, ...]:
+    if jax.default_backend() == "tpu":
+        return ("xla", "xla_pm1", "mxu_pm1", "vpu_popcount")
+    return ("xla", "xla_pm1")
+
+
+def _node_signature(node, in_shape: tuple[int, ...],
+                    candidates: tuple[str, ...] = ()) -> tuple:
+    attrs = tuple(sorted((k, v) for k, v in node.attrs.items()
+                         if isinstance(v, (int, bool, str, tuple))))
+    pshapes = tuple(sorted(
+        (k, tuple(np.shape(v))) for k, v in node.params.items()
+        if not hasattr(v, "_fields")))
+    return (node.op, attrs, tuple(in_shape), pshapes, candidates,
+            jax.default_backend())
+
+
+class Autotuner:
+    """Times candidates once per node signature; caches winners."""
+
+    def __init__(self, cache: dict | None = None,
+                 candidates: Iterable[str] | None = None,
+                 warmup: int = 1, iters: int = 3):
+        self.cache: dict = cache if cache is not None else {}
+        self.candidates = tuple(candidates if candidates is not None
+                                else default_candidates())
+        for c in self.candidates:
+            if c not in BACKENDS:
+                raise ValueError(f"unknown candidate backend {c!r}")
+        self.warmup = warmup
+        self.iters = iters
+
+    # ---- measurement -----------------------------------------------------
+    def _time_node(self, node, x, backend: str) -> float:
+        fn = jax.jit(lambda params, xx: eval_node(
+            node.op, node.attrs, params, [xx], backend=backend))
+        for _ in range(self.warmup):
+            jax.block_until_ready(fn(node.params, x))
+        times = []
+        for _ in range(self.iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(node.params, x))
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
+
+    def tune(self, graph: Graph, input_shape: tuple[int, ...],
+             ) -> dict[int, str]:
+        """Pick a backend per dispatchable node; returns the backend map."""
+        types = infer_types(graph, input_shape)
+        choices: dict[int, str] = {}
+        for nid in graph.topo_order():
+            node = graph.nodes[nid]
+            if node.op not in DISPATCHABLE_OPS:
+                continue
+            in_t = types[node.inputs[0]]
+            key = _node_signature(node, in_t.shape, self.candidates)
+            if key not in self.cache:
+                x = jnp.zeros(in_t.shape, in_t.dtype)
+                timings = {b: self._time_node(node, x, b)
+                           for b in self.candidates}
+                self.cache[key] = dict(
+                    winner=min(timings, key=timings.get),
+                    timings_ms={b: round(t * 1e3, 4)
+                                for b, t in timings.items()})
+            choices[nid] = self.cache[key]["winner"]
+        return choices
+
+    def tuned_executor(self, graph: Graph, input_shape: tuple[int, ...]
+                       ) -> GraphExecutor:
+        return GraphExecutor(graph, self.tune(graph, input_shape))

@@ -1,0 +1,206 @@
+"""Topological graph executor with per-node backend dispatch (DESIGN.md §4.5).
+
+Evaluates a :class:`~repro.runtime.graph.Graph` in its deterministic
+schedule under one ``jax.jit`` closure: the graph structure, static attrs
+and per-node backend choices are compile-time constants; only the parameter
+arrays and the input image are traced operands.  Per-node backends:
+
+* ``"xla"``           pure-JAX xor+popcount (paper Eqn 1; always available),
+* ``"xla_pm1"``       pure-JAX ±1-matmul reformulation (XLA maps it to the
+                      platform matmul engine),
+* ``"mxu_pm1"``       ±1-matmul routed for the TPU MXU (same numerics as
+                      ``xla_pm1``; distinct name so autotune/benchmarks can
+                      report the intended engine),
+* ``"vpu_popcount"``  the fused Pallas kernel (interpret-mode off-TPU).
+
+All four are bit-exact w.r.t. each other, so backend choice is purely a
+performance decision — which is what makes per-node autotuning
+(:mod:`repro.runtime.autotune`) safe.
+
+``trace_count`` increments only when JAX retraces the closure, which the
+tests use to pin the no-recompile-at-serve-time contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import (binary_conv, binary_ops, bitplanes,
+                        layer_integration, packing)
+from repro.core.bnn_model import _BN_EPS
+from repro.runtime.graph import DISPATCHABLE_OPS, Graph
+
+BACKENDS = ("xla", "xla_pm1", "mxu_pm1", "vpu_popcount")
+
+_IMPL = {"xla": "xor", "xla_pm1": "pm1", "mxu_pm1": "pm1"}
+
+
+def _pallas_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _eval_packed_conv(a: dict, p: dict, x, backend: str):
+    k, s, pad = a["kernel"], a["stride"], a["pad"]
+    ww = p.get("word_weights")
+    if backend == "vpu_popcount":
+        from repro.kernels import ops as kops
+        return kops.fused_binary_conv2d(
+            x, p["w_packed"], p["thresh"], k, k, s, pad,
+            word_weights=ww, mode="vpu_popcount")
+    return binary_conv.binary_conv2d_fused(
+        x, p["w_packed"], p["thresh"], k, k, s, pad,
+        word_weights=ww, impl=_IMPL[backend])
+
+
+def _eval_packed_dense(a: dict, p: dict, x, backend: str):
+    flat = x.reshape(x.shape[0], -1)
+    if backend == "vpu_popcount":
+        from repro.kernels import ops as kops
+        return kops.fused_matmul_bn_binarize(
+            flat, p["w_packed"], p["thresh"], mode="vpu_popcount")
+    return binary_conv.binary_dense_fused(flat, p["w_packed"], p["thresh"],
+                                          impl=_IMPL[backend])
+
+
+def _eval_bn_binarize(a: dict, p: dict, cnt):
+    sigma = jnp.sqrt(p["var"] + _BN_EPS)
+    if a.get("first"):
+        # wcnt -> Eqn-2 dot: s = 255*(K + w_sum)/2 - wcnt
+        const = 255.0 * (jnp.float32(a["k_valid"]) +
+                         p["w_sum"].astype(jnp.float32)) / 2.0
+        dot = const - cnt.astype(jnp.float32)
+    else:
+        dot = jnp.float32(a["k_valid"]) - 2.0 * cnt.astype(jnp.float32)
+    x3 = p["gamma"] * ((dot + p.get("bias", 0.0)) - p["mu"]) / sigma + p["beta"]
+    return packing.pack_bits((x3 >= 0), axis=-1)
+
+
+def _eval_maxpool_pm1(a: dict, x):
+    xv = packing.unpack_to_pm1(x, a["channels"], dtype=jnp.float32)
+    pad = tuple(a.get("pad", (0, 0)))
+    if pad != (0, 0):
+        xv = jnp.pad(xv, ((0, 0), pad, pad, (0, 0)), constant_values=-1.0)
+    xv = lax.reduce_window(
+        xv, -jnp.inf, lax.max,
+        (1, a["window"], a["window"], 1),
+        (1, a["stride"], a["stride"], 1), "VALID")
+    return packing.pack_bits((xv >= 0), axis=-1)
+
+
+def eval_node(node_op: str, attrs: dict, params: dict, inputs: list,
+              backend: str = "xla"):
+    """Evaluate one node given its already-computed input values."""
+    a, p = attrs, params
+    if node_op == "bitplane_expand":
+        planes = bitplanes.pack_bitplanes(inputs[0])
+        n, h, w, np_, cw = planes.shape
+        return planes.reshape(n, h, w, np_ * cw)
+    if node_op == "packed_conv":
+        return _eval_packed_conv(a, p, inputs[0], backend)
+    if node_op == "packed_dense":
+        return _eval_packed_dense(a, p, inputs[0], backend)
+    if node_op == "or_pool":
+        x = inputs[0]
+        pad = tuple(a.get("pad", (0, 0)))
+        if pad != (0, 0):
+            # 0-words == all -1 channels: identity under OR-pooling.
+            x = jnp.pad(x, ((0, 0), pad, pad, (0, 0)))
+        return binary_conv.binary_or_maxpool(x, a["window"], a["stride"])
+    if node_op == "conv_counts":
+        return binary_conv.binary_conv2d_counts(
+            inputs[0], p["w_packed"], a["kernel"], a["kernel"],
+            a["stride"], a["pad"], word_weights=p.get("word_weights"))
+    if node_op == "dense_counts":
+        flat = inputs[0].reshape(inputs[0].shape[0], -1)
+        return binary_ops.binary_dense_counts(flat, p["w_packed"])
+    if node_op == "bn_binarize":
+        return _eval_bn_binarize(a, p, inputs[0])
+    if node_op == "threshold_pack":
+        bits = layer_integration.apply_threshold(inputs[0], p["thresh"])
+        return packing.pack_bits(bits, axis=-1)
+    if node_op == "maxpool_pm1":
+        return _eval_maxpool_pm1(a, inputs[0])
+    if node_op == "unpack_pm1":
+        return packing.unpack_to_pm1(inputs[0], a["channels"],
+                                     dtype=jnp.float32)
+    if node_op == "float_dense":
+        flat = inputs[0].reshape(inputs[0].shape[0], -1)
+        return flat @ p["w"] + p["b"]
+    if node_op == "float_conv":
+        return lax.conv_general_dilated(
+            inputs[0], p["w"], (a["stride"], a["stride"]),
+            [(a["pad"], a["pad"])] * 2,
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+    if node_op == "concat_packed":
+        return jnp.concatenate(inputs, axis=-1)
+    raise ValueError(f"cannot evaluate op {node_op!r}")
+
+
+class GraphExecutor:
+    """Jit-compiled topological evaluator with frozen per-node backends.
+
+    The backend map is part of the compile-time closure: changing it means
+    building a new executor (``with_backends``), never silently retracing
+    an existing one — serve-time calls hit the same compiled function.
+    """
+
+    def __init__(self, graph: Graph,
+                 backends: str | Mapping[int, str] = "xla"):
+        graph.validate()
+        self.graph = graph
+        if isinstance(backends, str):
+            backends = {nid: backends for nid, n in graph.nodes.items()
+                        if n.op in DISPATCHABLE_OPS}
+        self.backends: dict[int, str] = {
+            nid: b for nid, b in backends.items()
+            if graph.nodes[nid].op in DISPATCHABLE_OPS}
+        for nid, b in self.backends.items():
+            if b not in BACKENDS:
+                raise ValueError(f"unknown backend {b!r} for node {nid}; "
+                                 f"want one of {BACKENDS}")
+        # Params are traced operands (a pytree keyed by node id);
+        # IntegratedParams is a NamedTuple and flattens naturally.
+        self.arrays = {str(nid): dict(n.params)
+                       for nid, n in graph.nodes.items() if n.params}
+        self._schedule = graph.topo_order()
+        self.trace_count = 0
+        self._jitted = jax.jit(self._run)
+
+    # ---- execution -------------------------------------------------------
+    def _run(self, arrays, x):
+        self.trace_count += 1  # increments at trace time only
+        g = self.graph
+        env: dict[int, Any] = {}
+        for nid in self._schedule:
+            node = g.nodes[nid]
+            if node.op == "input":
+                env[nid] = x
+                continue
+            env[nid] = eval_node(
+                node.op, node.attrs, arrays.get(str(nid), {}),
+                [env[i] for i in node.inputs],
+                backend=self.backends.get(nid, "xla"))
+        return env[g.output_id]
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self._jitted(self.arrays, x)
+
+    # ---- variants --------------------------------------------------------
+    def with_backends(self, backends: str | Mapping[int, str]
+                      ) -> "GraphExecutor":
+        return GraphExecutor(self.graph, backends)
+
+    def backend_report(self) -> list[dict]:
+        rows = []
+        for nid in self._schedule:
+            node = self.graph.nodes[nid]
+            if node.op in DISPATCHABLE_OPS:
+                rows.append(dict(node=nid, op=node.op,
+                                 channels=node.attrs.get("channels"),
+                                 backend=self.backends.get(nid, "xla")))
+        return rows

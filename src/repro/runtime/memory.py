@@ -1,0 +1,125 @@
+"""Static memory planner for scheduled graphs (DESIGN.md §4.4).
+
+PhoneBit's §VI is about never touching more memory than necessary (layer
+integration avoids materializing intermediates; packed layouts shrink what
+is materialized 32×).  At the graph level the same discipline becomes a
+*static* plan: with the schedule fixed (our deterministic topological
+order) every intermediate buffer has a known byte size (shape inference)
+and a known lifetime [birth, last-use], so buffers whose lifetimes do not
+overlap can share arena space.
+
+:func:`plan_memory` computes lifetimes and assigns every intermediate an
+offset in a single arena via lifetime-aware first-fit.  ``peak_bytes()``
+(the arena size) is the number the serving stack budgets against;
+``naive_bytes()`` is the no-reuse sum — the gap between them is the
+planner's win, reported per-node by ``report()`` for the benchmarks.
+
+The plan is *advisory* on the XLA path (XLA does its own buffer
+assignment); it is the contract a future donation/buffer-aliasing executor
+and the roofline model consume, and the test suite checks its invariant:
+no two overlapping-lifetime buffers may overlap in the arena.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.runtime.graph import Graph, TensorType, infer_types
+
+_ALIGN = 128  # bytes; one VREG lane row of int32
+
+
+def _align(n: int) -> int:
+    return -(-n // _ALIGN) * _ALIGN
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferPlan:
+    node_id: int
+    op: str
+    shape: tuple[int, ...]
+    nbytes: int          # aligned size reserved in the arena
+    offset: int          # arena offset
+    birth: int           # schedule index of the producing node
+    death: int           # schedule index of the last consumer
+
+
+@dataclasses.dataclass
+class MemoryPlan:
+    schedule: list[int]
+    buffers: dict[int, BufferPlan]
+    arena_bytes: int
+
+    def peak_bytes(self) -> int:
+        """Arena size: peak intermediate memory under slot reuse."""
+        return self.arena_bytes
+
+    def naive_bytes(self) -> int:
+        """Sum of all intermediate buffers (the no-reuse baseline)."""
+        return sum(b.nbytes for b in self.buffers.values())
+
+    def live_peak_bytes(self) -> int:
+        """Lower bound: max over schedule steps of live-buffer bytes."""
+        peak = 0
+        for t in range(len(self.schedule)):
+            live = sum(b.nbytes for b in self.buffers.values()
+                       if b.birth <= t <= b.death)
+            peak = max(peak, live)
+        return peak
+
+    def report(self) -> list[dict]:
+        rows = []
+        for b in sorted(self.buffers.values(), key=lambda b: b.birth):
+            rows.append(dict(node=b.node_id, op=b.op,
+                             shape="x".join(map(str, b.shape)),
+                             bytes=b.nbytes, offset=b.offset,
+                             birth=b.birth, death=b.death))
+        return rows
+
+
+def plan_memory(graph: Graph, input_shape: tuple[int, ...],
+                types: dict[int, TensorType] | None = None) -> MemoryPlan:
+    """Lifetime analysis + first-fit arena assignment over the schedule.
+
+    The graph input and output are excluded from the arena (they are owned
+    by the caller and must survive the whole call); every other node output
+    is an intermediate eligible for reuse.
+    """
+    types = types if types is not None else infer_types(graph, input_shape)
+    schedule = graph.topo_order()
+    pos = {nid: t for t, nid in enumerate(schedule)}
+    cons = graph.consumers()
+
+    intervals: list[tuple[int, int, int, int]] = []  # (birth, death, size, id)
+    for nid in schedule:
+        if nid in (graph.input_id, graph.output_id):
+            continue
+        users = cons[nid]
+        death = max((pos[u] for u in users), default=pos[nid])
+        intervals.append((pos[nid], death, _align(types[nid].nbytes), nid))
+
+    # First-fit by birth order: place each buffer at the lowest offset that
+    # does not collide with an already-placed buffer of overlapping lifetime.
+    placed: list[tuple[int, int, int, int]] = []  # (offset, size, birth, death)
+    offsets: dict[int, int] = {}
+    arena = 0
+    for birth, death, size, nid in sorted(intervals):
+        overlapping = sorted(
+            (off, sz) for off, sz, b2, d2 in placed
+            if not (d2 < birth or b2 > death))
+        offset = 0
+        for off, sz in overlapping:
+            if offset + size <= off:
+                break
+            offset = max(offset, off + sz)
+        placed.append((offset, size, birth, death))
+        offsets[nid] = offset
+        arena = max(arena, offset + size)
+
+    buffers = {
+        nid: BufferPlan(node_id=nid, op=graph.nodes[nid].op,
+                        shape=types[nid].shape, nbytes=size,
+                        offset=offsets[nid], birth=birth, death=death)
+        for birth, death, size, nid in intervals
+    }
+    return MemoryPlan(schedule=schedule, buffers=buffers, arena_bytes=arena)

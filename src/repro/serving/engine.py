@@ -5,12 +5,20 @@ params) is converted offline — BN folded to integer thresholds, weights
 bit-packed, first layer bit-plane-expanded — into the compressed artifact;
 the engine loads the artifact and serves the packed integer forward.
 
-The engine's ``matmul_mode`` selects the execution path (paper §V/VI vs
-the beyond-paper MXU path, DESIGN.md §3):
+Since the graph-runtime rework the engine executes through
+:mod:`repro.runtime`: the artifact is lowered to an operator graph
+(DESIGN.md §4) and evaluated by a jit-compiled topological executor whose
+per-node backend is either fixed by ``matmul_mode`` or chosen by the
+autotuner.  The original flat ``packed_forward`` walk is kept as the
+``legacy_call`` cross-check oracle.
+
+``matmul_mode`` values (DESIGN.md §3/§4.5):
 
 * ``"xla"``           pure-JAX xor+popcount (CPU-timeable baseline),
+* ``"xla_pm1"``       pure-JAX ±1-matmul reformulation,
 * ``"vpu_popcount"``  Pallas kernel, paper-faithful (interpret on CPU),
-* ``"mxu_pm1"``       Pallas MXU kernel, beyond-paper.
+* ``"mxu_pm1"``       ±1 matmul routed for the TPU MXU, beyond-paper,
+* ``"auto"``          per-node autotune (winners cached per shape signature).
 
 API mirrors the paper's Fig 3 simplicity::
 
@@ -29,6 +37,12 @@ import jax.numpy as jnp
 
 from repro.core import bnn_model, converter
 
+# Modes whose flat-path impl is the ±1-matmul reformulation.
+_PM1_MODES = ("mxu_pm1", "xla_pm1")
+# Process-wide autotune cache: engines serving structurally identical
+# layers (same shapes/attrs) share measurements.
+_AUTOTUNE_CACHE: dict = {}
+
 
 @dataclasses.dataclass
 class PhoneBitEngine:
@@ -36,6 +50,7 @@ class PhoneBitEngine:
     packed: list[dict]
     input_hw: tuple[int, int]
     matmul_mode: str = "xla"
+    batch_size: int | None = None  # autotune/memory-plan batch (default 1)
 
     # ---- construction ----------------------------------------------------
     @classmethod
@@ -53,19 +68,52 @@ class PhoneBitEngine:
     def save_artifact(self, path: str) -> None:
         converter.save_artifact(path, self.packed)
 
-    # ---- inference ---------------------------------------------------------
-    @functools.cached_property
-    def _jitted(self):
-        spec = self.spec
-        # c_per_pos entries are static layout metadata (they become slice
-        # bounds); strip them out of the traced pytree and re-insert as
-        # python ints inside the jitted fn.
+    # ---- artifact/metadata separation ------------------------------------
+    def prepare(self) -> tuple[list[dict], list[dict]]:
+        """Split the packed artifact into traced arrays vs static metadata.
+
+        ``c_per_pos`` entries are static layout metadata (they become slice
+        bounds inside jit), so they must leave the traced pytree.  This is
+        an explicit, side-effect-free method — callable in any order
+        relative to inference — returning ``(arrays, meta)``; both the
+        legacy flat path and tooling use it instead of relying on jit
+        construction order.
+        """
         meta = [{k: int(v) for k, v in layer.items() if k == "c_per_pos"}
                 for layer in self.packed]
         arrays = [{k: v for k, v in layer.items() if k != "c_per_pos"}
                   for layer in self.packed]
-        self._arrays = arrays
-        impl = "pm1" if self.matmul_mode in ("mxu_pm1", "xla_pm1") else "xor"
+        return arrays, meta
+
+    # ---- graph runtime path (default) ------------------------------------
+    @functools.cached_property
+    def _executor(self):
+        from repro import runtime
+
+        graph = runtime.lower_packed(self.spec, self.packed, self.input_hw)
+        if self.matmul_mode == "auto":
+            tuner = runtime.Autotuner(cache=_AUTOTUNE_CACHE)
+            return tuner.tuned_executor(graph, self._plan_shape())
+        return runtime.GraphExecutor(graph, self.matmul_mode)
+
+    def _plan_shape(self) -> tuple[int, int, int, int]:
+        h, w = self.input_hw
+        c = next((l.c_in for l in self.spec
+                  if isinstance(l, (bnn_model.BConv, bnn_model.FloatConv))),
+                 3)
+        return (self.batch_size or 1, h, w, c)
+
+    def __call__(self, x_uint8: jnp.ndarray) -> jnp.ndarray:
+        h, w = self.input_hw
+        assert x_uint8.shape[1:3] == (h, w), (x_uint8.shape, self.input_hw)
+        return self._executor(x_uint8)
+
+    # ---- legacy flat path (cross-check oracle) ---------------------------
+    @functools.cached_property
+    def _jitted_flat(self):
+        spec = self.spec
+        _, meta = self.prepare()
+        impl = "pm1" if self.matmul_mode in _PM1_MODES else "xor"
 
         @jax.jit
         def fwd(arrays, x):
@@ -74,13 +122,32 @@ class PhoneBitEngine:
 
         return fwd
 
-    def __call__(self, x_uint8: jnp.ndarray) -> jnp.ndarray:
-        h, w = self.input_hw
-        assert x_uint8.shape[1:3] == (h, w), (x_uint8.shape, self.input_hw)
-        fwd = self._jitted
-        return fwd(self._arrays, x_uint8)
+    def legacy_call(self, x_uint8: jnp.ndarray) -> jnp.ndarray:
+        """The pre-graph flat ``packed_forward`` walk (oracle)."""
+        arrays, _ = self.prepare()
+        return self._jitted_flat(arrays, x_uint8)
 
-    # ---- metadata ----------------------------------------------------------
+    def cross_check(self, x_uint8: jnp.ndarray) -> jnp.ndarray:
+        """Run the graph path and assert bit-exactness vs the flat path."""
+        import numpy as np
+
+        got = self(x_uint8)
+        ref = self.legacy_call(x_uint8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+        return got
+
+    # ---- introspection ---------------------------------------------------
+    def memory_plan(self):
+        """Static arena plan for the serving graph (DESIGN.md §4.4)."""
+        from repro import runtime
+
+        return runtime.plan_memory(self._executor.graph, self._plan_shape())
+
+    @property
+    def backend_choices(self) -> list[dict]:
+        """Per-node backend decisions (fixed mode or autotune winners)."""
+        return self._executor.backend_report()
+
     @property
     def model_bytes(self) -> int:
         return converter.model_bytes(self.packed)

@@ -1,0 +1,93 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The test suite uses a narrow slice of the API — ``@given`` over
+``st.integers`` / ``st.floats`` / ``st.sampled_from`` with
+``@settings(max_examples=..., deadline=...)``.  This stub replays the same
+contract with a deterministic PRNG: each ``@given`` test runs
+``max_examples`` times on pseudo-random draws seeded by the test name, so
+failures reproduce run-to-run.  It is installed by ``tests/conftest.py``
+only when the real package is missing; with hypothesis available the stub
+is never imported.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return SearchStrategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def booleans():
+        return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn = [s.example_from(rng) for s in strats]
+                drawn_kw = {k: s.example_from(rng)
+                            for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"stub-hypothesis example {i + 1}/{n} failed with "
+                        f"args={drawn} kwargs={drawn_kw}") from e
+
+        # Hide the drawn parameters from pytest's fixture resolution: the
+        # wrapper's visible signature is the original minus the trailing
+        # positional params filled by `strats` and the kw-strategy names.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        if strats:
+            params = params[:-len(strats)]
+        params = [p for p in params if p.name not in kw_strats]
+        del wrapper.__wrapped__  # keep inspect from seeing fn's signature
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return deco
+
+
+st = strategies

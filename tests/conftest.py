@@ -1,0 +1,25 @@
+"""Test bootstrap: src/ on sys.path + a hypothesis fallback.
+
+Keeps `python -m pytest` working from the repo root even without an
+installed package (pyproject's `pythonpath = ["src"]` does the same for
+pytest >= 7; this also covers direct module imports).  When the real
+``hypothesis`` package is unavailable in the environment, installs the
+deterministic stub from ``tests/_hypothesis_stub.py`` so the
+property-based modules still collect and run.
+"""
+
+import pathlib
+import sys
+
+_SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies

@@ -23,9 +23,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, {src!r})
 import jax, jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import _mesh  # AxisType version-compat
+mesh = _mesh((2, 4), ("data", "model"))
 from repro.distributed.sharding import rules_for_mesh
 rules = rules_for_mesh(mesh)
 """
@@ -206,8 +206,7 @@ def test_pod_compressed_mean():
     _run("""
     from repro.distributed import compression
 
-    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                          axis_types=(AxisType.Auto,) * 3)
+    mesh3 = _mesh((2, 2, 2), ("pod", "data", "model"))
     g = {"w": jax.random.normal(jax.random.key(0), (32, 32))}
     with mesh3:
         out, err = jax.jit(lambda g_: compression.pod_compressed_mean(
