@@ -23,7 +23,8 @@ import jax
 from benchmarks.common import emit
 from repro.core import bnn_model, converter
 from repro.models import paper_nets
-from repro.runtime import Autotuner, infer_types, lower_packed, plan_memory
+from repro.runtime import (Autotuner, fuse_pool_epilogue, infer_types,
+                           lower_packed, plan_memory)
 from repro.runtime.autotune import _node_signature
 
 _HW = 104  # 416 / 4
@@ -37,10 +38,15 @@ def _tuned(net: str):
     spec, _ = paper_nets.get(net)
     params = bnn_model.init_params(jax.random.key(0), spec)
     packed = converter.convert(params, spec, (_HW, _HW))
-    graph = lower_packed(spec, packed, (_HW, _HW))
+    # The serving graph: conv+pool pairs fused (engine applies the same
+    # pass), so winners/arena rows match what the engine executes.
+    graph = fuse_pool_epilogue(lower_packed(spec, packed, (_HW, _HW)))
     in_shape = (_BATCH, _HW, _HW, spec[0].c_in)
     types = infer_types(graph, in_shape)
-    tuner = Autotuner(candidates=("xla", "xla_pm1"), warmup=1, iters=2)
+    # persist=False: report *this* run's measurements, never warm-start
+    # stale winners from ~/.cache/repro/autotune.json.
+    tuner = Autotuner(candidates=("xla", "xla_pm1"), warmup=1, iters=2,
+                      persist=False)
     choices = tuner.tune(graph, in_shape)
     return graph, in_shape, types, tuner, choices
 

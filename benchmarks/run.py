@@ -1,19 +1,36 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
-One harness per paper table/figure + the roofline reader (which consumes
-cached dry-run artifacts if present).  Each prints a CSV block.
+One harness per paper table/figure, the per-kernel microbench (which
+writes the machine-readable ``BENCH_kernels.json`` perf artifact), and the
+roofline reader (which consumes cached dry-run artifacts if present).
+Each harness prints a CSV block.
+
+``--smoke`` runs only the kernel microbench at CI-sized shapes — a fast
+regression tripwire that still writes ``BENCH_kernels.json``.
 """
 
 from __future__ import annotations
 
+import argparse
 import pathlib
 import traceback
 
 
-def main() -> None:
-    from benchmarks import (crossover, fig5_layers, graph_plan, roofline,
-                            table2_model_size, table3_runtime,
-                            table4_energy)
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(prog="benchmarks.run")
+    parser.add_argument("--smoke", action="store_true",
+                        help="kernel microbench only, tiny shapes "
+                             "(CI tripwire; still writes "
+                             "BENCH_kernels.json)")
+    args = parser.parse_args(argv)
+
+    from benchmarks import (crossover, fig5_layers, graph_plan,
+                            kernels_bench, roofline, table2_model_size,
+                            table3_runtime, table4_energy)
+
+    if args.smoke:
+        kernels_bench.run(smoke=True)
+        return
 
     t3_rows = None
     for name, fn in (
@@ -21,6 +38,7 @@ def main() -> None:
             ("table3_runtime", table3_runtime.run),
             ("fig5_layers", fig5_layers.run),
             ("graph_plan", graph_plan.run),
+            ("kernels_bench", kernels_bench.run),
             ("crossover", crossover.run),
     ):
         try:

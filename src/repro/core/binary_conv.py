@@ -5,7 +5,7 @@ with static strided slices (the packed channel words stay contiguous,
 preserving the locality-friendly layout of §V-A), then a single
 xor-popcount matmul produces counts for all output positions x filters.
 
-Padding semantics: spatial padding inserts 0-words == 64 channels of -1,
+Padding semantics: spatial padding inserts 0-words == 32 channels of -1,
 i.e. the -1-padding convention of the reference BNN implementations (see
 DESIGN.md §3.2).  The float oracles use the identical convention, so packed
 results are bit-exact against them.
@@ -53,6 +53,21 @@ def extract_patches_packed(x: jnp.ndarray, kh: int, kw: int,
     return jnp.concatenate(slices, axis=-1)
 
 
+def im2col_matmul(x: jnp.ndarray, kh: int, kw: int, stride: int = 1,
+                  pad: int = 0) -> tuple[jnp.ndarray, tuple[int, int, int]]:
+    """Canonical im2col lowering shared by every im2col conv backend.
+
+    Returns ``(patches_2d, (n, oh, ow))`` where ``patches_2d`` is the
+    matmul-shaped ``(n*oh*ow, kh*kw*Cw)`` view of the packed patches.  The
+    direct-conv kernel (DESIGN.md §5) is the path that *avoids* building
+    this tensor; everything that does build it must come through here so
+    patch/filter word order stays in one place (`pack_conv_weights`).
+    """
+    patches = extract_patches_packed(x, kh, kw, stride, pad)
+    n, oh, ow, pw = patches.shape
+    return patches.reshape(n * oh * ow, pw), (n, oh, ow)
+
+
 def pack_conv_weights(w: jnp.ndarray) -> jnp.ndarray:
     """(KH, KW, C, O) +-1/float weights -> (O, KH*KW*Cw) packed filters.
 
@@ -72,9 +87,7 @@ def binary_conv2d_counts(x_packed: jnp.ndarray, w_packed: jnp.ndarray,
 
     x_packed: (N, H, W, Cw); w_packed: (O, kh*kw*Cw).
     """
-    patches = extract_patches_packed(x_packed, kh, kw, stride, pad)
-    n, oh, ow, pw = patches.shape
-    flat = patches.reshape(n * oh * ow, pw)
+    flat, (n, oh, ow) = im2col_matmul(x_packed, kh, kw, stride, pad)
     cnt = binary_ops.packed_matmul_counts(flat, w_packed,
                                           word_weights=word_weights,
                                           impl=impl)
@@ -105,12 +118,17 @@ def binary_conv2d_fused(x_packed: jnp.ndarray, w_packed: jnp.ndarray,
     return packing.pack_bits(bits, axis=-1)
 
 
-def binary_or_maxpool(x_packed: jnp.ndarray, window: int, stride: int) -> jnp.ndarray:
+def binary_or_maxpool(x_packed: jnp.ndarray, window: int, stride: int,
+                      pad: tuple[int, int] = (0, 0)) -> jnp.ndarray:
     """Max-pool on packed binary maps = bitwise OR over the window.
 
     sign() is monotone, so maxpool-then-binarize == binarize-then-OR-pool;
     pooling never leaves the packed domain (no unpack round-trip).
+    ``pad`` spatially pads with 0-words (32 channels of -1 — the OR
+    identity) on both dims before pooling.
     """
+    if tuple(pad) != (0, 0):
+        x_packed = jnp.pad(x_packed, ((0, 0), pad, pad, (0, 0)))
     n, h, w, cw = x_packed.shape
     oh = (h - window) // stride + 1
     ow = (w - window) // stride + 1

@@ -1,8 +1,12 @@
 """Pallas TPU kernel: integrated binary-conv + BN + binarize + bit-pack (C4+C6).
 
-The flagship PhoneBit kernel.  One output tile:
+The im2col-shaped fused PhoneBit kernel.  One output tile:
 
-  1. accumulates xor-popcounts over the packed reduction dim (Eqn 1),
+  1. accumulates xor-popcounts over the packed reduction dim (Eqn 1) with
+     the whole-tile vectorized reduction of ``xnor_popcount_matmul``
+     (block xor -> population_count -> weighted reduction; the legacy
+     per-word ``fori_loop`` is selectable as ``reduction="loop"`` for
+     benchmarking only),
   2. applies the offline-folded integer threshold  bit = (cnt <= t) xor s
      (Eqns 5-9, integer-strengthened form, branch-free on the VPU),
   3. bit-packs 32 output channels per int32 word *in-register* and performs a
@@ -14,77 +18,75 @@ exactly the paper's layer-integration claim (§V-B): intermediate results
 between conv/BN/binarization layers are never materialized in memory.
 
 Operands are im2col patches (matmul-shaped); the conv wrapper lives in
-``repro.kernels.ops.fused_binary_conv2d``.
+``repro.kernels.ops.fused_binary_conv2d``.  For the im2col-*free* direct
+convolution form of the same contract see
+``repro.kernels.direct_conv_bn_binarize`` (DESIGN.md §5).
 """
 
 from __future__ import annotations
 
 import functools
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.packing import WORD_BITS
+from repro.kernels.xnor_popcount_matmul import _tile_counts, compiler_params
 
 
-def _pack_weights3d() -> jnp.ndarray:
-    """(1, 1, 32) int32 modular weights: bit i -> 1<<i, computed in-kernel.
+def pack_words(bits: jnp.ndarray) -> jnp.ndarray:
+    """In-register bit-pack of the minor axis: (..., n*32) {0,1} int32 ->
+    (..., n) int32 words, LSB-first.
 
-    Built from a broadcasted iota + shift so the kernel body has no captured
-    constants (Pallas requires all operands to be explicit inputs).  Bit 31
-    wraps to INT32_MIN — the correct two's-complement pattern for modular
-    int32 accumulation.
+    The weights are built from a broadcasted iota + shift so kernel bodies
+    have no captured constants (Pallas requires all operands explicit).
+    Bit 31 wraps to INT32_MIN — the correct two's-complement pattern for
+    modular int32 accumulation.
     """
-    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, WORD_BITS), 2)
-    return jax.lax.shift_left(jnp.int32(1), shifts)
+    shape = bits.shape[:-1] + (bits.shape[-1] // WORD_BITS, WORD_BITS)
+    words = bits.reshape(shape)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, words.shape, words.ndim - 1)
+    return jnp.sum(words * jax.lax.shift_left(jnp.int32(1), shifts),
+                   axis=-1, dtype=jnp.int32)
+
+
+def threshold_pack(cnt: jnp.ndarray, t: jnp.ndarray,
+                   s: jnp.ndarray) -> jnp.ndarray:
+    """Fused epilogue on a count tile: integer threshold (Eqn 9's
+    ``(cnt <= t) xor s`` form) + in-register 32-channel bit-pack.
+    cnt: (..., bn); t, s: (bn,) int32 -> (..., bn//32) int32 words."""
+    bits = (jnp.less_equal(cnt, t).astype(jnp.int32) ^ s)
+    return pack_words(bits)
 
 
 def _kernel(a_ref, b_ref, ww_ref, t_ref, s_ref, o_ref, acc_ref,
-            *, n_k_steps: int):
+            *, n_k_steps: int, reduction: str):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...]            # (bm, bk) int32 packed patches
-    b = b_ref[...]            # (bn, bk) int32 packed filters
-    ww = ww_ref[...]          # (bk,)    int32 word weights (Eqn 2 powers)
-
-    def body(w, acc):
-        aw = jax.lax.dynamic_slice_in_dim(a, w, 1, axis=1)
-        bw = jax.lax.dynamic_slice_in_dim(b, w, 1, axis=1)
-        www = jax.lax.dynamic_slice_in_dim(ww, w, 1, axis=0)
-        x = jax.lax.bitwise_xor(aw, jnp.transpose(bw))
-        return acc + jax.lax.population_count(x) * www[0]
-
-    acc_ref[...] += jax.lax.fori_loop(0, a.shape[1], body,
-                                      jnp.zeros_like(acc_ref))
+    acc_ref[...] += _tile_counts(a_ref[...], b_ref[...], ww_ref[...],
+                                 reduction)
 
     @pl.when(k == n_k_steps - 1)
     def _epilogue():
-        cnt = acc_ref[...]                                # (bm, bn)
-        t = t_ref[...]                                    # (bn,)
-        s = s_ref[...]                                    # (bn,) int32 0/1
-        bits = (jnp.less_equal(cnt, t[None, :]).astype(jnp.int32)
-                ^ s[None, :])                             # Eqn 9, int form
-        bm, bn = bits.shape
-        words = bits.reshape(bm, bn // WORD_BITS, WORD_BITS)
-        o_ref[...] = jnp.sum(words * _pack_weights3d(), axis=-1,
-                             dtype=jnp.int32)
+        o_ref[...] = threshold_pack(acc_ref[...], t_ref[...][None, :],
+                                    s_ref[...][None, :])
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "interpret"))
+    static_argnames=("block_m", "block_n", "block_k", "reduction",
+                     "interpret"))
 def fused_matmul_bn_binarize(a: jnp.ndarray, b: jnp.ndarray,
                              threshold: jnp.ndarray, sign_flip: jnp.ndarray,
                              word_weights: jnp.ndarray | None = None,
                              *, block_m: int = 128, block_n: int = 256,
-                             block_k: int = 128,
+                             block_k: int = 128, reduction: str = "vector",
                              interpret: bool = False) -> jnp.ndarray:
     """a: (M, W) patches, b: (N, W) filters -> packed bits (M, ceil(N/32)).
 
@@ -110,17 +112,9 @@ def fused_matmul_bn_binarize(a: jnp.ndarray, b: jnp.ndarray,
                         constant_values=-1)
     sign_flip = jnp.pad(sign_flip.astype(jnp.int32), (0, gn * bn - n))
 
-    kwargs = {}
-    if not interpret:
-        params = getattr(pltpu, "CompilerParams",
-                         getattr(pltpu, "TPUCompilerParams", None))
-        if params is not None:
-            kwargs["compiler_params"] = params(
-                dimension_semantics=("parallel", "parallel", "arbitrary"))
-
     nw = bn // WORD_BITS
     out = pl.pallas_call(
-        functools.partial(_kernel, n_k_steps=gk),
+        functools.partial(_kernel, n_k_steps=gk, reduction=reduction),
         grid=(gm, gn, gk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
@@ -133,6 +127,6 @@ def fused_matmul_bn_binarize(a: jnp.ndarray, b: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((gm * bm, gn * nw), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-        **kwargs,
+        **compiler_params(interpret),
     )(a, b, word_weights, threshold, sign_flip)
     return out[:m, : -(-n // WORD_BITS)]

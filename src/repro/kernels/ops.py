@@ -1,12 +1,23 @@
 """Jit'd wrappers + execution-path dispatch for the PhoneBit kernels.
 
-``matmul_mode`` selects the engine for binary matmuls:
+This module is the *single* conv/dense dispatch surface: the graph executor
+and the flat legacy path both come through here, so every backend shares
+one canonical patch-extraction + weight-packing convention
+(``repro.core.binary_conv``) instead of parallel implementations.
 
-* ``"vpu_popcount"``  — paper-faithful xor+popcount Pallas kernel (C1).
+Conv backends (``CONV_MODES``):
+
+* ``"vpu_direct"``    — direct (im2col-free) fused Pallas kernel: input
+                        tiles stream to VMEM once, KHxKW walked as in-VMEM
+                        shifted reads, threshold+pack (+ OR-pool) epilogue
+                        (DESIGN.md §5).  No patch tensor exists.
+* ``"vpu_popcount"``  — paper-faithful xor+popcount Pallas kernel on
+                        im2col patches (C1); the legacy im2col path, kept
+                        as a selectable backend.
 * ``"mxu_pm1"``       — beyond-paper MXU kernel (unpack-to-bf16 in VMEM).
-* ``"xla"``           — pure-JAX fallback (always available; what benchmarks
-                        time on CPU and what models use under jit on any
-                        backend).
+* ``"xla"/"xla_pm1"`` — pure-JAX fallbacks (always available; what
+                        benchmarks time on CPU and what models use under
+                        jit on any backend).
 
 On CPU the Pallas kernels run with ``interpret=True`` (bit-exact, slow) —
 the TPU is the compile target, CPU interpret mode is the validator.
@@ -14,19 +25,22 @@ the TPU is the compile target, CPU interpret mode is the validator.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.core import binary_ops, layer_integration, packing
+from repro.core import binary_conv, binary_ops, layer_integration, packing
 from repro.kernels import (bitplane_pack as _bitplane_pack_mod,
+                           direct_conv_bn_binarize as _direct_mod,
                            fused_conv_bn_binarize as _fused_mod,
                            mxu_pm1_matmul as _mxu_mod,
                            xnor_popcount_matmul as _xnor_mod)
-from repro.core.binary_conv import conv_out_size, extract_patches_packed
+from repro.core.binary_conv import im2col_matmul
 
 VALID_MODES = ("vpu_popcount", "mxu_pm1", "xla")
+# Every engine the fused conv dispatches to; "vpu_direct" is im2col-free,
+# the rest ride the canonical im2col lowering.
+CONV_MODES = ("xla", "xla_pm1", "mxu_pm1", "vpu_popcount", "vpu_direct")
+_IMPL = {"xla": "xor", "xla_pm1": "pm1", "mxu_pm1": "pm1"}
 
 
 def _interpret() -> bool:
@@ -67,25 +81,63 @@ def fused_matmul_bn_binarize(a, b, p: layer_integration.IntegratedParams,
         return _fused_mod.fused_matmul_bn_binarize(
             a, b, p.threshold, p.sign_flip, word_weights,
             interpret=_interpret(), **block_kw)
-    if mode == "xla":
-        cnt = binary_ops.packed_matmul_counts(a, b, word_weights=word_weights)
+    if mode in _IMPL:
+        cnt = binary_ops.packed_matmul_counts(
+            a, b, word_weights=word_weights, impl=_IMPL[mode])
         bits = layer_integration.apply_threshold(cnt, p)
         return packing.pack_bits(bits, axis=-1)
     raise ValueError(f"fused path not supported for mode {mode!r}")
+
+
+def fused_binary_dense(x_packed, w_packed,
+                       p: layer_integration.IntegratedParams,
+                       mode: str = "vpu_popcount", **block_kw) -> jnp.ndarray:
+    """Integrated dense+BN+binarize on flattened packed input, any mode."""
+    flat = x_packed.reshape(x_packed.shape[0], -1)
+    return fused_matmul_bn_binarize(flat, w_packed, p, mode=mode, **block_kw)
 
 
 def fused_binary_conv2d(x_packed: jnp.ndarray, w_packed: jnp.ndarray,
                         p: layer_integration.IntegratedParams,
                         kh: int, kw: int, stride: int = 1, pad: int = 0,
                         word_weights=None, mode: str = "vpu_popcount",
+                        pool: tuple[int, int, tuple[int, int]] | None = None,
                         **block_kw) -> jnp.ndarray:
-    """Conv wrapper: im2col on packed words + the fused kernel (C4+C6)."""
-    patches = extract_patches_packed(x_packed, kh, kw, stride, pad)
-    n, oh, ow, pw = patches.shape
-    out = fused_matmul_bn_binarize(
-        patches.reshape(n * oh * ow, pw), w_packed, p,
-        word_weights=word_weights, mode=mode, **block_kw)
-    return out.reshape(n, oh, ow, out.shape[-1])
+    """Fused conv+BN+binarize(+OR-pool) dispatch — one call site for every
+    backend (C4+C6).
+
+    ``pool`` is an optional ``(window, stride, (pad_lo, pad_hi))`` OR-pool
+    epilogue.  On ``"vpu_direct"`` it fuses into the kernel epilogue (the
+    pre-pool conv output never reaches HBM); on the im2col backends it runs
+    as a separate packed-domain OR-pool after the conv.
+    """
+    if mode == "vpu_direct":
+        pool_kw = {}
+        if pool is not None:
+            pool_kw = dict(pool_window=pool[0], pool_stride=pool[1],
+                           pool_pad=tuple(pool[2]))
+        return _direct_mod.direct_conv_bn_binarize(
+            x_packed, w_packed, p.threshold, p.sign_flip,
+            kh=kh, kw=kw, stride=stride, pad=pad,
+            word_weights=word_weights, interpret=_interpret(),
+            **pool_kw, **block_kw)
+    if mode == "vpu_popcount":
+        flat, (n, oh, ow) = im2col_matmul(x_packed, kh, kw, stride, pad)
+        out = fused_matmul_bn_binarize(
+            flat, w_packed, p, word_weights=word_weights, mode=mode,
+            **block_kw)
+        out = out.reshape(n, oh, ow, out.shape[-1])
+    elif mode in _IMPL:
+        out = binary_conv.binary_conv2d_fused(
+            x_packed, w_packed, p, kh, kw, stride, pad,
+            word_weights=word_weights, impl=_IMPL[mode])
+    else:
+        raise ValueError(
+            f"unknown conv mode {mode!r}; want one of {CONV_MODES}")
+    if pool is not None:
+        out = binary_conv.binary_or_maxpool(out, pool[0], pool[1],
+                                            pad=tuple(pool[2]))
+    return out
 
 
 def bitplane_pack(x: jnp.ndarray, **kw) -> jnp.ndarray:

@@ -12,6 +12,13 @@ dim), which is the Pallas analogue of the paper's private-memory per-thread
 accumulation (C6); Pallas double-buffers the a/b block DMAs against compute
 (C7, latency hiding).
 
+The inner reduction is *whole-tile vectorized* (DESIGN.md §5.2): one
+block-level xor of the broadcast (bm, bn, bk) cube, one population_count,
+one weighted reduction over the word axis — every VPU lane busy every
+cycle.  The historical per-word ``fori_loop`` + ``dynamic_slice`` form is
+kept selectable (``reduction="loop"``) purely so benchmarks/kernels_bench
+can measure the win; it is not a serving path.
+
 The optional per-word weight vector ``ww`` implements Eqn 2's bit-plane
 powers 2^(n-1) so the first layer reuses this same kernel.
 """
@@ -25,19 +32,53 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+REDUCTIONS = ("vector", "loop")
 
-def _kernel(a_ref, b_ref, ww_ref, o_ref, acc_ref, *, n_k_steps: int):
-    k = pl.program_id(2)
 
-    @pl.when(k == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+# Word-axis width below which the broadcast cube is not worth building:
+# with only a handful of packed words the reduction fully unrolls at trace
+# time into straight-line whole-tile (bm, bn) ops — no cube, no loop
+# state, every step a full VPU op with output channels on the lanes.
+_NARROW_K = 16
+# Word-axis slab per broadcast cube: bounds the live (bm, bn, _SLAB_K)
+# intermediate to ~2 MiB at 128x128 blocks so it fits VMEM alongside the
+# double-buffered operand blocks even at the largest default tiles.
+_SLAB_K = 32
 
-    a = a_ref[...]            # (bm, bk) int32
-    b = b_ref[...]            # (bn, bk) int32
-    ww = ww_ref[...]          # (bk,)    int32
+
+def tile_counts(a: jnp.ndarray, b: jnp.ndarray,
+                ww: jnp.ndarray) -> jnp.ndarray:
+    """Whole-tile vectorized weighted xor-popcount: (bm, bk) x (bn, bk) ->
+    (bm, bn) int32.  No per-word ``dynamic_slice`` and no ``fori_loop``:
+    wide word dims do broadcast xor -> population_count -> weighted
+    reduction over the minor (word) axis, in static ``_SLAB_K``-word slabs
+    so the (bm, bn, slab) cube stays VMEM-sized; narrow word dims
+    (< ``_NARROW_K``) unroll statically into bk fused whole-tile ops,
+    which beats both the cube (nothing materialized) and the loop
+    (no loop-carried state)."""
     bk = a.shape[1]
+    if bk < _NARROW_K:
+        bt = jnp.transpose(b)                                  # (bk, bn)
+        acc = None
+        for w in range(bk):
+            c = jax.lax.population_count(
+                jax.lax.bitwise_xor(a[:, w:w + 1], bt[w:w + 1, :])) * ww[w]
+            acc = c if acc is None else acc + c
+        return acc
+    acc = None
+    for s in range(0, bk, _SLAB_K):
+        e = min(s + _SLAB_K, bk)
+        x = jax.lax.bitwise_xor(a[:, None, s:e], b[None, :, s:e])
+        cnt = jnp.sum(jax.lax.population_count(x) * ww[None, None, s:e],
+                      axis=-1, dtype=jnp.int32)               # (bm, bn)
+        acc = cnt if acc is None else acc + cnt
+    return acc
 
+
+def tile_counts_loop(a: jnp.ndarray, b: jnp.ndarray,
+                     ww: jnp.ndarray) -> jnp.ndarray:
+    """Legacy per-word reduction (benchmark baseline only): one packed word
+    per ``fori_loop`` step via ``dynamic_slice`` — scalar-ish on the VPU."""
     def body(w, acc):
         aw = jax.lax.dynamic_slice_in_dim(a, w, 1, axis=1)       # (bm, 1)
         bw = jax.lax.dynamic_slice_in_dim(b, w, 1, axis=1)       # (bn, 1)
@@ -45,20 +86,55 @@ def _kernel(a_ref, b_ref, ww_ref, o_ref, acc_ref, *, n_k_steps: int):
         x = jax.lax.bitwise_xor(aw, jnp.transpose(bw))           # (bm, bn)
         return acc + jax.lax.population_count(x) * www[0]
 
-    acc_ref[...] += jax.lax.fori_loop(0, bk, body, jnp.zeros_like(acc_ref))
+    init = jnp.zeros((a.shape[0], b.shape[0]), jnp.int32)
+    return jax.lax.fori_loop(0, a.shape[1], body, init)
+
+
+def _tile_counts(a, b, ww, reduction: str):
+    if reduction == "vector":
+        return tile_counts(a, b, ww)
+    if reduction == "loop":
+        return tile_counts_loop(a, b, ww)
+    raise ValueError(f"unknown reduction {reduction!r}; want {REDUCTIONS}")
+
+
+def _kernel(a_ref, b_ref, ww_ref, o_ref, acc_ref, *, n_k_steps: int,
+            reduction: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _tile_counts(a_ref[...], b_ref[...], ww_ref[...],
+                                 reduction)
 
     @pl.when(k == n_k_steps - 1)
     def _done():
         o_ref[...] = acc_ref[...]
 
 
+def compiler_params(interpret: bool,
+                    semantics=("parallel", "parallel", "arbitrary")) -> dict:
+    """kwargs for ``pl.pallas_call`` carrying the TPU dimension semantics
+    (version-portable; empty off-TPU / in interpret mode)."""
+    if interpret:
+        return {}
+    params = getattr(pltpu, "CompilerParams",
+                     getattr(pltpu, "TPUCompilerParams", None))
+    if params is None:
+        return {}
+    return {"compiler_params": params(dimension_semantics=semantics)}
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "interpret"))
+    static_argnames=("block_m", "block_n", "block_k", "reduction",
+                     "interpret"))
 def xnor_popcount_matmul(a: jnp.ndarray, b: jnp.ndarray,
                          word_weights: jnp.ndarray | None = None,
                          *, block_m: int = 128, block_n: int = 128,
-                         block_k: int = 128,
+                         block_k: int = 128, reduction: str = "vector",
                          interpret: bool = False) -> jnp.ndarray:
     """a: (M, W) int32, b: (N, W) int32 -> counts (M, N) int32."""
     m, w = a.shape
@@ -76,16 +152,8 @@ def xnor_popcount_matmul(a: jnp.ndarray, b: jnp.ndarray,
     word_weights = jnp.pad(word_weights.astype(jnp.int32),
                            (0, gk * bk - w))
 
-    kwargs = {}
-    if not interpret:
-        params = getattr(pltpu, "CompilerParams",
-                         getattr(pltpu, "TPUCompilerParams", None))
-        if params is not None:
-            kwargs["compiler_params"] = params(
-                dimension_semantics=("parallel", "parallel", "arbitrary"))
-
     out = pl.pallas_call(
-        functools.partial(_kernel, n_k_steps=gk),
+        functools.partial(_kernel, n_k_steps=gk, reduction=reduction),
         grid=(gm, gn, gk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
@@ -96,6 +164,6 @@ def xnor_popcount_matmul(a: jnp.ndarray, b: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-        **kwargs,
+        **compiler_params(interpret),
     )(a, b, word_weights)
     return out[:m, :n]

@@ -16,19 +16,21 @@ fast engine.
     autotune   times backend candidates per node, caches winners
 """
 
-from repro.runtime.autotune import Autotuner, default_candidates
-from repro.runtime.executor import BACKENDS, GraphExecutor
+from repro.runtime.autotune import (Autotuner, cache_path,
+                                    default_candidates)
+from repro.runtime.executor import (BACKENDS, GraphExecutor,
+                                    valid_backends)
 from repro.runtime.graph import (DISPATCHABLE_OPS, Graph, Node, TensorType,
                                  infer_types, lower_packed, lower_trained)
 from repro.runtime.memory import MemoryPlan, plan_memory
 from repro.runtime.passes import (absorb_pools, assign_layouts,
                                   default_pipeline, fuse_epilogues,
-                                  integrate_bn)
+                                  fuse_pool_epilogue, integrate_bn)
 
 __all__ = [
     "Autotuner", "BACKENDS", "DISPATCHABLE_OPS", "Graph", "GraphExecutor",
     "MemoryPlan", "Node", "TensorType", "absorb_pools", "assign_layouts",
-    "default_candidates", "default_pipeline", "fuse_epilogues",
-    "infer_types", "integrate_bn", "lower_packed", "lower_trained",
-    "plan_memory",
+    "cache_path", "default_candidates", "default_pipeline",
+    "fuse_epilogues", "fuse_pool_epilogue", "infer_types", "integrate_bn",
+    "lower_packed", "lower_trained", "plan_memory", "valid_backends",
 ]

@@ -1,23 +1,38 @@
-"""Per-node backend autotuning (DESIGN.md §4.6).
+"""Per-node backend + tile-shape autotuning (DESIGN.md §4.6, §5.4).
 
 All executor backends are bit-exact, so the fastest one per node is a free
 win — but the winner depends on shape: popcount formulations win when the
 packed reduction dim is long relative to the matmul engine's tile economics,
-±1-matmul wins for fat output dims (the crossover benchmarks measure this
-globally; here it is decided *per node*).
+±1-matmul wins for fat output dims, and the direct (im2col-free) conv
+kernel wins whenever patch traffic would dominate — except for large K on
+tiny spatial grids, where the im2col matmul's tiling amortizes better
+(the crossover benchmarks measure this globally; here it is decided *per
+node*).  For the direct backends the kernel's tile shape
+``(block_h, block_w, block_n)`` is part of the search space: each backend
+candidate is timed over a small shape-derived sweep and the winning tile
+rides along with the winning backend.
 
-:class:`Autotuner` times each candidate backend on a zero-filled input of
-the node's inferred shape (timing is layout/shape-dependent, not
+:class:`Autotuner` times each candidate on a zero-filled input of the
+node's inferred shape (timing is layout/shape-dependent, not
 value-dependent — binary kernels have no data-dependent control flow) and
-caches the winner under a shape/attr signature.  The cache is keyed so
-structurally identical layers across graphs (or across engine restarts
+caches the winner under a shape/attr/device signature.  The cache is keyed
+so structurally identical layers across graphs (or across engine restarts
 sharing a cache dict) reuse measurements instead of re-timing, and the
 resulting backend map is frozen into a new :class:`GraphExecutor` — so the
 serving path never re-times or re-compiles.
+
+The cache additionally persists to disk (``~/.cache/repro/autotune.json``,
+keyed by the same signatures — which embed the device kind) so repeated
+engine startups skip re-timing entirely.  ``REPRO_AUTOTUNE_CACHE=0``
+disables persistence; any other value overrides the cache file path.
 """
 
 from __future__ import annotations
 
+import json
+import os
+import pathlib
+import tempfile
 import time
 from typing import Iterable
 
@@ -25,35 +40,106 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime.executor import BACKENDS, GraphExecutor, eval_node
+from repro.runtime.executor import (BACKENDS, GraphExecutor, eval_node,
+                                    valid_backends)
 from repro.runtime.graph import DISPATCHABLE_OPS, Graph, infer_types
+
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_DEFAULT_CACHE = "~/.cache/repro/autotune.json"
 
 # Default candidates: the pure-XLA formulations everywhere; the Pallas
 # kernels only compete where they are compiled (on TPU) — in interpret mode
 # they are validators, not contenders.
 def default_candidates() -> tuple[str, ...]:
     if jax.default_backend() == "tpu":
-        return ("xla", "xla_pm1", "mxu_pm1", "vpu_popcount")
+        return BACKENDS
     return ("xla", "xla_pm1")
 
 
+def cache_path() -> pathlib.Path | None:
+    """Resolved on-disk cache location; None when persistence is off."""
+    val = os.environ.get(_CACHE_ENV)
+    if val == "0":
+        return None
+    if val:
+        return pathlib.Path(val).expanduser()
+    return pathlib.Path(_DEFAULT_CACHE).expanduser()
+
+
+def _device_kind() -> str:
+    """Concrete accelerator model (e.g. 'TPU v4'), not just the platform:
+    tile winners tuned for one VMEM/lane geometry must not warm-start a
+    different generation."""
+    try:
+        return f"{jax.default_backend()}:{jax.devices()[0].device_kind}"
+    except (IndexError, RuntimeError):
+        return jax.default_backend()
+
+
 def _node_signature(node, in_shape: tuple[int, ...],
-                    candidates: tuple[str, ...] = ()) -> tuple:
+                    candidates: tuple[str, ...] = ()) -> str:
+    """Stable string key: op + static attrs + shapes + candidate set +
+    device kind (strings so the cache round-trips through JSON)."""
     attrs = tuple(sorted((k, v) for k, v in node.attrs.items()
                          if isinstance(v, (int, bool, str, tuple))))
     pshapes = tuple(sorted(
         (k, tuple(np.shape(v))) for k, v in node.params.items()
         if not hasattr(v, "_fields")))
-    return (node.op, attrs, tuple(in_shape), pshapes, candidates,
-            jax.default_backend())
+    return repr((node.op, attrs, tuple(in_shape), pshapes, candidates,
+                 _device_kind()))
+
+
+def _out_rows(node, in_shape: tuple[int, ...]) -> int:
+    """Final output rows of a conv(/pool) node — what block_h tiles."""
+    from repro.core.binary_conv import conv_out_size
+
+    a = node.attrs
+    oh = conv_out_size(in_shape[1], a["kernel"], a["stride"], a["pad"])
+    if node.op == "packed_conv_pool":
+        pp = sum(a.get("pool_pad", (0, 0)))
+        oh = (oh + pp - a["pool_window"]) // a["pool_stride"] + 1
+    return max(oh, 1)
+
+
+def _tile_candidates(backend: str, node,
+                     in_shape: tuple[int, ...]) -> list[dict]:
+    """Shape-derived (block_h, block_w, block_n) sweep for the direct
+    kernels; the im2col backends have no per-node tile knobs here.
+    Candidates are expressed in *effective* (clamped) tile sizes and
+    deduplicated so no configuration is compiled or timed twice."""
+    if backend not in ("vpu_direct", "vpu_direct_pool"):
+        return [{}]
+    n, fh = in_shape[0], _out_rows(node, in_shape)
+    default_bh = min(8, fh)                        # the kernel's default
+    cands: list[dict] = [{}]
+    seen = {default_bh}
+    for bh in (4, 16, fh):
+        eff = min(bh, fh)
+        if eff not in seen:
+            seen.add(eff)
+            cands.append({"block_h": eff})
+    if fh > 8:
+        cands.append({"block_h": default_bh, "block_w": 8})
+    if n > 1:
+        cands.append({"block_n": n})
+    return cands
+
+
+def _label(backend: str, tile: dict) -> str:
+    if not tile:
+        return backend
+    inner = ",".join(f"{k.replace('block_', '')}{v}"
+                     for k, v in sorted(tile.items()))
+    return f"{backend}[{inner}]"
 
 
 class Autotuner:
-    """Times candidates once per node signature; caches winners."""
+    """Times candidates once per node signature; caches winners in memory
+    and (by default) on disk."""
 
     def __init__(self, cache: dict | None = None,
                  candidates: Iterable[str] | None = None,
-                 warmup: int = 1, iters: int = 3):
+                 warmup: int = 1, iters: int = 3, persist: bool = True):
         self.cache: dict = cache if cache is not None else {}
         self.candidates = tuple(candidates if candidates is not None
                                 else default_candidates())
@@ -62,11 +148,42 @@ class Autotuner:
                 raise ValueError(f"unknown candidate backend {c!r}")
         self.warmup = warmup
         self.iters = iters
+        # persist=False forces fresh measurements and writes nothing —
+        # what benchmarks use so reported timings are from *this* run.
+        self.persist = persist
+        self._disk: dict = self._load_disk() if persist else {}
+
+    # ---- persistence -----------------------------------------------------
+    def _load_disk(self) -> dict:
+        path = cache_path()
+        if path is None or not path.exists():
+            return {}
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {}
+
+    def _save_disk(self, new_entries: dict) -> None:
+        path = cache_path()
+        if path is None or not new_entries or not self.persist:
+            return
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            merged = dict(self._load_disk())
+            merged.update(new_entries)
+            fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(merged, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+            self._disk = merged
+        except OSError:
+            pass  # persistence is best-effort; tuning already succeeded
 
     # ---- measurement -----------------------------------------------------
-    def _time_node(self, node, x, backend: str) -> float:
+    def _time_node(self, node, x, backend: str, tile: dict) -> float:
         fn = jax.jit(lambda params, xx: eval_node(
-            node.op, node.attrs, params, [xx], backend=backend))
+            node.op, node.attrs, params, [xx], backend=backend, tile=tile))
         for _ in range(self.warmup):
             jax.block_until_ready(fn(node.params, x))
         times = []
@@ -76,11 +193,43 @@ class Autotuner:
             times.append(time.perf_counter() - t0)
         return float(np.median(times))
 
+    def _tune_node(self, node, in_shape, in_dtype) -> dict:
+        x = jnp.zeros(in_shape, in_dtype)
+        timings: dict[str, float] = {}
+        best = (float("inf"), None, {})
+        for backend in self.candidates:
+            if backend not in valid_backends(node.op):
+                continue
+            for tile in _tile_candidates(backend, node, in_shape):
+                t = self._time_node(node, x, backend, tile)
+                timings[_label(backend, tile)] = t
+                if t < best[0]:
+                    best = (t, backend, tile)
+        if best[1] is None:
+            raise ValueError(
+                f"no candidate in {self.candidates} applies to op "
+                f"{node.op!r}; include a universal backend (e.g. 'xla')")
+        return dict(winner=best[1], tile=best[2],
+                    timings_ms={lbl: round(t * 1e3, 4)
+                                for lbl, t in timings.items()})
+
+    def entry(self, node, in_shape: tuple[int, ...]) -> dict | None:
+        """The cached tuning record for a node signature, if any."""
+        return self.cache.get(
+            _node_signature(node, in_shape, self.candidates))
+
     def tune(self, graph: Graph, input_shape: tuple[int, ...],
              ) -> dict[int, str]:
-        """Pick a backend per dispatchable node; returns the backend map."""
+        """Pick a backend per dispatchable node; returns the backend map.
+        (:meth:`tune_with_tiles` also returns the per-node tile shapes.)"""
+        return self.tune_with_tiles(graph, input_shape)[0]
+
+    def tune_with_tiles(self, graph: Graph, input_shape: tuple[int, ...],
+                        ) -> tuple[dict[int, str], dict[int, dict]]:
         types = infer_types(graph, input_shape)
         choices: dict[int, str] = {}
+        tiles: dict[int, dict] = {}
+        fresh: dict[str, dict] = {}
         for nid in graph.topo_order():
             node = graph.nodes[nid]
             if node.op not in DISPATCHABLE_OPS:
@@ -88,16 +237,19 @@ class Autotuner:
             in_t = types[node.inputs[0]]
             key = _node_signature(node, in_t.shape, self.candidates)
             if key not in self.cache:
-                x = jnp.zeros(in_t.shape, in_t.dtype)
-                timings = {b: self._time_node(node, x, b)
-                           for b in self.candidates}
-                self.cache[key] = dict(
-                    winner=min(timings, key=timings.get),
-                    timings_ms={b: round(t * 1e3, 4)
-                                for b, t in timings.items()})
+                if key in self._disk:       # warm start from a prior run
+                    self.cache[key] = self._disk[key]
+                else:
+                    self.cache[key] = fresh[key] = self._tune_node(
+                        node, in_t.shape, in_t.dtype)
             choices[nid] = self.cache[key]["winner"]
-        return choices
+            tile = self.cache[key].get("tile") or {}
+            if tile:
+                tiles[nid] = dict(tile)
+        self._save_disk(fresh)
+        return choices, tiles
 
     def tuned_executor(self, graph: Graph, input_shape: tuple[int, ...]
                        ) -> GraphExecutor:
-        return GraphExecutor(graph, self.tune(graph, input_shape))
+        choices, tiles = self.tune_with_tiles(graph, input_shape)
+        return GraphExecutor(graph, choices, tiles)

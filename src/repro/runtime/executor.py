@@ -1,21 +1,29 @@
 """Topological graph executor with per-node backend dispatch (DESIGN.md §4.5).
 
 Evaluates a :class:`~repro.runtime.graph.Graph` in its deterministic
-schedule under one ``jax.jit`` closure: the graph structure, static attrs
-and per-node backend choices are compile-time constants; only the parameter
-arrays and the input image are traced operands.  Per-node backends:
+schedule under one ``jax.jit`` closure: the graph structure, static attrs,
+per-node backend choices and kernel tile shapes are compile-time constants;
+only the parameter arrays and the input image are traced operands.
+Per-node backends:
 
-* ``"xla"``           pure-JAX xor+popcount (paper Eqn 1; always available),
-* ``"xla_pm1"``       pure-JAX ±1-matmul reformulation (XLA maps it to the
-                      platform matmul engine),
-* ``"mxu_pm1"``       ±1-matmul routed for the TPU MXU (same numerics as
-                      ``xla_pm1``; distinct name so autotune/benchmarks can
-                      report the intended engine),
-* ``"vpu_popcount"``  the fused Pallas kernel (interpret-mode off-TPU).
+* ``"xla"``             pure-JAX xor+popcount (paper Eqn 1; always available),
+* ``"xla_pm1"``         pure-JAX ±1-matmul reformulation (XLA maps it to the
+                        platform matmul engine),
+* ``"mxu_pm1"``         ±1-matmul routed for the TPU MXU (same numerics as
+                        ``xla_pm1``; distinct name so autotune/benchmarks can
+                        report the intended engine),
+* ``"vpu_popcount"``    the fused im2col Pallas kernel (interpret off-TPU),
+* ``"vpu_direct"``      the direct (im2col-free) Pallas kernel — conv ops
+                        only (DESIGN.md §5),
+* ``"vpu_direct_pool"`` the direct kernel with the OR-pool fused into its
+                        epilogue — ``packed_conv_pool`` nodes only.
 
-All four are bit-exact w.r.t. each other, so backend choice is purely a
+All backends are bit-exact w.r.t. each other, so backend choice is purely a
 performance decision — which is what makes per-node autotuning
-(:mod:`repro.runtime.autotune`) safe.
+(:mod:`repro.runtime.autotune`) safe.  Backends that do not apply to an op
+(e.g. ``vpu_direct`` on ``packed_dense``) degrade along ``_FALLBACK`` when
+the executor is built from a single mode string, and are rejected when
+explicitly assigned per node.
 
 ``trace_count`` increments only when JAX retraces the closure, which the
 tests use to pin the no-recompile-at-serve-time contract.
@@ -35,36 +43,76 @@ from repro.core import (binary_conv, binary_ops, bitplanes,
 from repro.core.bnn_model import _BN_EPS
 from repro.runtime.graph import DISPATCHABLE_OPS, Graph
 
-BACKENDS = ("xla", "xla_pm1", "mxu_pm1", "vpu_popcount")
+BACKENDS = ("xla", "xla_pm1", "mxu_pm1", "vpu_popcount", "vpu_direct",
+            "vpu_direct_pool")
 
 _IMPL = {"xla": "xor", "xla_pm1": "pm1", "mxu_pm1": "pm1"}
+# Graceful degradation when a single mode string hits an op it cannot run.
+_FALLBACK = {"vpu_direct_pool": "vpu_direct", "vpu_direct": "vpu_popcount"}
+
+
+def valid_backends(op: str) -> tuple[str, ...]:
+    """The backends an op can dispatch to (autotune candidate filter)."""
+    if op == "packed_conv_pool":
+        return BACKENDS
+    if op == "packed_conv":
+        return tuple(b for b in BACKENDS if b != "vpu_direct_pool")
+    if op == "packed_dense":
+        return ("xla", "xla_pm1", "mxu_pm1", "vpu_popcount")
+    return ()
+
+
+def resolve_backend(op: str, backend: str) -> str:
+    """Degrade a requested mode along _FALLBACK until the op supports it."""
+    requested = backend
+    while backend not in valid_backends(op):
+        if backend not in _FALLBACK:
+            raise ValueError(
+                f"backend {requested!r} unusable for op {op!r}; want one "
+                f"of {valid_backends(op)} (or 'auto' at the engine)")
+        backend = _FALLBACK[backend]
+    return backend
 
 
 def _pallas_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _eval_packed_conv(a: dict, p: dict, x, backend: str):
+def _pool_attrs(a: dict) -> tuple[int, int, tuple[int, int]] | None:
+    if "pool_window" not in a:
+        return None
+    return (a["pool_window"], a["pool_stride"],
+            tuple(a.get("pool_pad", (0, 0))))
+
+
+def _eval_packed_conv(a: dict, p: dict, x, backend: str, tile: dict):
+    from repro.kernels import ops as kops
+
     k, s, pad = a["kernel"], a["stride"], a["pad"]
     ww = p.get("word_weights")
-    if backend == "vpu_popcount":
-        from repro.kernels import ops as kops
+    pool = _pool_attrs(a)
+    block_kw = dict(tile) if backend.startswith("vpu") else {}
+    if backend == "vpu_direct_pool":
+        # Pool rides the direct kernel's epilogue: the pre-pool conv
+        # output never reaches HBM.
         return kops.fused_binary_conv2d(
-            x, p["w_packed"], p["thresh"], k, k, s, pad,
-            word_weights=ww, mode="vpu_popcount")
-    return binary_conv.binary_conv2d_fused(
-        x, p["w_packed"], p["thresh"], k, k, s, pad,
-        word_weights=ww, impl=_IMPL[backend])
+            x, p["w_packed"], p["thresh"], k, k, s, pad, word_weights=ww,
+            mode="vpu_direct", pool=pool, **block_kw)
+    out = kops.fused_binary_conv2d(
+        x, p["w_packed"], p["thresh"], k, k, s, pad, word_weights=ww,
+        mode=backend, **block_kw)
+    if pool is not None:
+        out = binary_conv.binary_or_maxpool(out, pool[0], pool[1],
+                                            pad=pool[2])
+    return out
 
 
-def _eval_packed_dense(a: dict, p: dict, x, backend: str):
-    flat = x.reshape(x.shape[0], -1)
-    if backend == "vpu_popcount":
-        from repro.kernels import ops as kops
-        return kops.fused_matmul_bn_binarize(
-            flat, p["w_packed"], p["thresh"], mode="vpu_popcount")
-    return binary_conv.binary_dense_fused(flat, p["w_packed"], p["thresh"],
-                                          impl=_IMPL[backend])
+def _eval_packed_dense(a: dict, p: dict, x, backend: str, tile: dict):
+    from repro.kernels import ops as kops
+
+    block_kw = dict(tile) if backend.startswith("vpu") else {}
+    return kops.fused_binary_dense(x, p["w_packed"], p["thresh"],
+                                   mode=backend, **block_kw)
 
 
 def _eval_bn_binarize(a: dict, p: dict, cnt):
@@ -93,24 +141,22 @@ def _eval_maxpool_pm1(a: dict, x):
 
 
 def eval_node(node_op: str, attrs: dict, params: dict, inputs: list,
-              backend: str = "xla"):
+              backend: str = "xla", tile: dict | None = None):
     """Evaluate one node given its already-computed input values."""
     a, p = attrs, params
+    tile = tile or {}
     if node_op == "bitplane_expand":
         planes = bitplanes.pack_bitplanes(inputs[0])
         n, h, w, np_, cw = planes.shape
         return planes.reshape(n, h, w, np_ * cw)
-    if node_op == "packed_conv":
-        return _eval_packed_conv(a, p, inputs[0], backend)
+    if node_op in ("packed_conv", "packed_conv_pool"):
+        return _eval_packed_conv(a, p, inputs[0], backend, tile)
     if node_op == "packed_dense":
-        return _eval_packed_dense(a, p, inputs[0], backend)
+        return _eval_packed_dense(a, p, inputs[0], backend, tile)
     if node_op == "or_pool":
-        x = inputs[0]
-        pad = tuple(a.get("pad", (0, 0)))
-        if pad != (0, 0):
-            # 0-words == all -1 channels: identity under OR-pooling.
-            x = jnp.pad(x, ((0, 0), pad, pad, (0, 0)))
-        return binary_conv.binary_or_maxpool(x, a["window"], a["stride"])
+        return binary_conv.binary_or_maxpool(
+            inputs[0], a["window"], a["stride"],
+            pad=tuple(a.get("pad", (0, 0))))
     if node_op == "conv_counts":
         return binary_conv.binary_conv2d_counts(
             inputs[0], p["w_packed"], a["kernel"], a["kernel"],
@@ -144,25 +190,35 @@ def eval_node(node_op: str, attrs: dict, params: dict, inputs: list,
 class GraphExecutor:
     """Jit-compiled topological evaluator with frozen per-node backends.
 
-    The backend map is part of the compile-time closure: changing it means
-    building a new executor (``with_backends``), never silently retracing
-    an existing one — serve-time calls hit the same compiled function.
+    The backend map and per-node kernel tile shapes are part of the
+    compile-time closure: changing them means building a new executor
+    (``with_backends``), never silently retracing an existing one —
+    serve-time calls hit the same compiled function.
     """
 
     def __init__(self, graph: Graph,
-                 backends: str | Mapping[int, str] = "xla"):
+                 backends: str | Mapping[int, str] = "xla",
+                 tile_configs: Mapping[int, Mapping[str, int]] | None = None):
         graph.validate()
         self.graph = graph
         if isinstance(backends, str):
-            backends = {nid: backends for nid, n in graph.nodes.items()
+            backends = {nid: resolve_backend(n.op, backends)
+                        for nid, n in graph.nodes.items()
                         if n.op in DISPATCHABLE_OPS}
         self.backends: dict[int, str] = {
             nid: b for nid, b in backends.items()
             if graph.nodes[nid].op in DISPATCHABLE_OPS}
         for nid, b in self.backends.items():
+            op = graph.nodes[nid].op
             if b not in BACKENDS:
                 raise ValueError(f"unknown backend {b!r} for node {nid}; "
                                  f"want one of {BACKENDS}")
+            if b not in valid_backends(op):
+                raise ValueError(f"backend {b!r} does not apply to node "
+                                 f"{nid} ({op})")
+        self.tile_configs: dict[int, dict] = {
+            nid: dict(cfg) for nid, cfg in (tile_configs or {}).items()
+            if nid in self.backends and cfg}
         # Params are traced operands (a pytree keyed by node id);
         # IntegratedParams is a NamedTuple and flattens naturally.
         self.arrays = {str(nid): dict(n.params)
@@ -184,16 +240,18 @@ class GraphExecutor:
             env[nid] = eval_node(
                 node.op, node.attrs, arrays.get(str(nid), {}),
                 [env[i] for i in node.inputs],
-                backend=self.backends.get(nid, "xla"))
+                backend=self.backends.get(nid, "xla"),
+                tile=self.tile_configs.get(nid))
         return env[g.output_id]
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
         return self._jitted(self.arrays, x)
 
     # ---- variants --------------------------------------------------------
-    def with_backends(self, backends: str | Mapping[int, str]
-                      ) -> "GraphExecutor":
-        return GraphExecutor(self.graph, backends)
+    def with_backends(self, backends: str | Mapping[int, str],
+                      tile_configs: Mapping[int, Mapping[str, int]]
+                      | None = None) -> "GraphExecutor":
+        return GraphExecutor(self.graph, backends, tile_configs)
 
     def backend_report(self) -> list[dict]:
         rows = []
@@ -202,5 +260,6 @@ class GraphExecutor:
             if node.op in DISPATCHABLE_OPS:
                 rows.append(dict(node=nid, op=node.op,
                                  channels=node.attrs.get("channels"),
-                                 backend=self.backends.get(nid, "xla")))
+                                 backend=self.backends.get(nid, "xla"),
+                                 tile=self.tile_configs.get(nid, {})))
         return rows

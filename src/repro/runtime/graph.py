@@ -26,6 +26,9 @@ op               semantics (layouts in DESIGN.md §4.2)
 input            graph input placeholder; uint8 NHWC image
 bitplane_expand  uint8 (N,H,W,C) → (N,H,W,8·Cw) int32 bit-plane words
 packed_conv      fused conv+BN+binarize on packed words → packed words
+packed_conv_pool packed_conv with an OR-pool epilogue fused in
+                 (``passes.fuse_pool_epilogue``); the pre-pool conv output
+                 is never materialized on the direct-kernel backend
 packed_dense     fused dense+BN+binarize, flattens input → (N, Ow)
 or_pool          max-pool in the packed domain = windowed bitwise OR
 conv_counts      unfused conv: weighted xor-popcounts (N,OH,OW,O) int32
@@ -59,11 +62,12 @@ from repro.core.bnn_model import (BConv, BDense, FloatConv, FloatDense,
 
 # Ops whose output stays in the packed-word domain.
 PACKED_OPS = frozenset({
-    "packed_conv", "packed_dense", "or_pool", "bn_binarize",
-    "threshold_pack", "maxpool_pm1", "concat_packed",
+    "packed_conv", "packed_conv_pool", "packed_dense", "or_pool",
+    "bn_binarize", "threshold_pack", "maxpool_pm1", "concat_packed",
 })
 # Ops the executor can dispatch to more than one backend.
-DISPATCHABLE_OPS = frozenset({"packed_conv", "packed_dense"})
+DISPATCHABLE_OPS = frozenset({"packed_conv", "packed_conv_pool",
+                              "packed_dense"})
 
 
 @dataclasses.dataclass
@@ -181,11 +185,15 @@ def infer_types(graph: Graph,
             t = TensorType(
                 (n, h, w, bitplanes.NUM_PLANES * packing.num_words(c)),
                 jnp.int32)
-        elif node.op in ("packed_conv", "conv_counts"):
+        elif node.op in ("packed_conv", "packed_conv_pool", "conv_counts"):
             oh, ow = _conv_hw(ins[0].shape, a["kernel"], a["stride"],
                               a["pad"])
-            last = (packing.num_words(a["channels"])
-                    if node.op == "packed_conv" else a["channels"])
+            if node.op == "packed_conv_pool":
+                pp = sum(a.get("pool_pad", (0, 0)))
+                oh = (oh + pp - a["pool_window"]) // a["pool_stride"] + 1
+                ow = (ow + pp - a["pool_window"]) // a["pool_stride"] + 1
+            last = (a["channels"] if node.op == "conv_counts"
+                    else packing.num_words(a["channels"]))
             t = TensorType((ins[0].shape[0], oh, ow, last), jnp.int32)
         elif node.op in ("or_pool", "maxpool_pm1"):
             n, h, w, cw = ins[0].shape

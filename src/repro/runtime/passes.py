@@ -18,6 +18,12 @@ into explicit, individually testable rewrites over the operator IR:
   ``maxpool_pm1`` nodes whose input is packed-binary into ``or_pool``,
   keeping pooling inside the packed domain (sign is monotone, so
   binarize-then-OR == max-then-binarize).
+* :func:`fuse_pool_epilogue` — merge ``packed_conv → or_pool`` into the
+  single ``packed_conv_pool`` operator so the direct-conv backend can run
+  the pool in its epilogue and the pre-pool conv output is never
+  materialized (DESIGN.md §5.3).  Not part of :func:`default_pipeline`
+  (whose contract is convergence to the artifact lowering); the serving
+  engine applies it on top.
 
 :func:`default_pipeline` runs them in dependency order; applied to
 :func:`~repro.runtime.graph.lower_trained` output it converges to the same
@@ -40,6 +46,7 @@ _OUT_LAYOUT = {
     "conv_counts": "counts",
     "dense_counts": "counts",
     "packed_conv": "packed",
+    "packed_conv_pool": "packed",
     "packed_dense": "packed",
     "bn_binarize": "packed",
     "threshold_pack": "packed",
@@ -55,6 +62,7 @@ _OUT_LAYOUT = {
 _IN_LAYOUT = {
     "bitplane_expand": "u8",
     "packed_conv": None,  # bitplane when first else packed — checked below
+    "packed_conv_pool": None,
     "conv_counts": None,
     "packed_dense": "packed",
     "dense_counts": "packed",
@@ -70,7 +78,7 @@ _IN_LAYOUT = {
 
 
 def _expected_in_layout(op: str, attrs: dict) -> str | None:
-    if op in ("packed_conv", "conv_counts"):
+    if op in ("packed_conv", "packed_conv_pool", "conv_counts"):
         return "bitplane" if attrs.get("first") else "packed"
     return _IN_LAYOUT.get(op)
 
@@ -178,6 +186,39 @@ def absorb_pools(graph: Graph) -> Graph:
         prod = g.nodes[node.inputs[0]]
         if prod.op in PACKED_OPS:
             node.op = "or_pool"
+    return g
+
+
+def fuse_pool_epilogue(graph: Graph) -> Graph:
+    """Merge ``packed_conv → or_pool`` into fused ``packed_conv_pool``.
+
+    Max-pool on packed binary maps is a windowed OR, and OR distributes
+    over the conv tile boundary, so the pool can ride the conv kernel's
+    epilogue: on the ``vpu_direct_pool`` backend the pre-pool conv output
+    never reaches HBM, and for every backend the planner drops the
+    (larger) unpooled intermediate from the arena.  Fusion requires the
+    conv output to feed *only* the pool (no other consumer may need the
+    unpooled map).
+    """
+    g = graph.copy()
+    cons = g.consumers()
+    for nid, node in list(g.nodes.items()):
+        if node.op != "or_pool" or nid not in g.nodes:
+            continue
+        (src,) = node.inputs
+        prod = g.nodes[src]
+        if prod.op != "packed_conv" or len(cons[src]) != 1:
+            continue
+        attrs = dict(prod.attrs)
+        attrs["pool_window"] = node.attrs["window"]
+        attrs["pool_stride"] = node.attrs["stride"]
+        attrs["pool_pad"] = tuple(node.attrs.get("pad", (0, 0)))
+        attrs["layout"] = node.attrs.get("layout", "packed")
+        # Keep the pool node's id so its consumers stay wired.
+        g.nodes[nid] = node.with_(op="packed_conv_pool", inputs=prod.inputs,
+                                  attrs=attrs, params=dict(prod.params))
+        del g.nodes[src]
+    g.validate()
     return g
 
 

@@ -12,13 +12,25 @@ per-node backend is either fixed by ``matmul_mode`` or chosen by the
 autotuner.  The original flat ``packed_forward`` walk is kept as the
 ``legacy_call`` cross-check oracle.
 
-``matmul_mode`` values (DESIGN.md §3/§4.5):
+``matmul_mode`` values (DESIGN.md §3/§4.5/§5):
 
-* ``"xla"``           pure-JAX xor+popcount (CPU-timeable baseline),
-* ``"xla_pm1"``       pure-JAX ±1-matmul reformulation,
-* ``"vpu_popcount"``  Pallas kernel, paper-faithful (interpret on CPU),
-* ``"mxu_pm1"``       ±1 matmul routed for the TPU MXU, beyond-paper,
-* ``"auto"``          per-node autotune (winners cached per shape signature).
+* ``"xla"``             pure-JAX xor+popcount (CPU-timeable baseline),
+* ``"xla_pm1"``         pure-JAX ±1-matmul reformulation,
+* ``"vpu_popcount"``    im2col Pallas kernel, paper-faithful (interpret on
+                        CPU),
+* ``"mxu_pm1"``         ±1 matmul routed for the TPU MXU, beyond-paper,
+* ``"vpu_direct"``      direct (im2col-free) Pallas conv kernel; dense
+                        layers degrade to ``vpu_popcount``,
+* ``"vpu_direct_pool"`` direct kernel with the OR-pool epilogue fused in
+                        (``packed_conv_pool`` nodes; others degrade),
+* ``"auto"``            per-node autotune — backend *and* direct-kernel
+                        tile shape, winners cached per shape signature and
+                        persisted to disk (``REPRO_AUTOTUNE_CACHE=0``
+                        opts out).
+
+The engine always lowers through :func:`runtime.fuse_pool_epilogue`, so
+conv+pool pairs serve as single ``packed_conv_pool`` nodes and the unpooled
+conv map drops out of the memory plan.
 
 API mirrors the paper's Fig 3 simplicity::
 
@@ -90,7 +102,8 @@ class PhoneBitEngine:
     def _executor(self):
         from repro import runtime
 
-        graph = runtime.lower_packed(self.spec, self.packed, self.input_hw)
+        graph = runtime.fuse_pool_epilogue(
+            runtime.lower_packed(self.spec, self.packed, self.input_hw))
         if self.matmul_mode == "auto":
             tuner = runtime.Autotuner(cache=_AUTOTUNE_CACHE)
             return tuner.tuned_executor(graph, self._plan_shape())

@@ -8,12 +8,22 @@ deterministic stub from ``tests/_hypothesis_stub.py`` so the
 property-based modules still collect and run.
 """
 
+import os
 import pathlib
 import sys
+import tempfile
 
 _SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+# Keep the autotuner's disk cache hermetic: never read/write the real
+# ~/.cache/repro/autotune.json from the test suite (individual tests
+# override this per-case via monkeypatch).
+os.environ.setdefault(
+    "REPRO_AUTOTUNE_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-autotune-"),
+                 "autotune.json"))
 
 try:
     import hypothesis  # noqa: F401
