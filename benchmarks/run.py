@@ -25,8 +25,9 @@ def main(argv: list[str] | None = None) -> None:
     args = parser.parse_args(argv)
 
     from benchmarks import (crossover, fig5_layers, graph_plan,
-                            kernels_bench, roofline, table2_model_size,
-                            table3_runtime, table4_energy)
+                            kernels_bench, roofline, serving_bench,
+                            table2_model_size, table3_runtime,
+                            table4_energy)
 
     if args.smoke:
         kernels_bench.run(smoke=True)
@@ -39,6 +40,7 @@ def main(argv: list[str] | None = None) -> None:
             ("fig5_layers", fig5_layers.run),
             ("graph_plan", graph_plan.run),
             ("kernels_bench", kernels_bench.run),
+            ("serving_bench", serving_bench.run),
             ("crossover", crossover.run),
     ):
         try:

@@ -1,0 +1,174 @@
+"""Serving-path benchmark: sync vs async dispatch, single vs sharded.
+
+Measures end-to-end serving throughput and latency through the
+:class:`~repro.serving.server.InferenceServer` — the whole subsystem
+(scheduler assembly, bucket padding, executable-cache dispatch, result
+scatter), not just the kernel — and writes the machine-readable
+``BENCH_serving.json`` perf artifact:
+
+* **sync vs async**: the synchronous drain loop (block on every batch)
+  against async double-buffered dispatch (batch k+1 dispatched while
+  batch k is in flight).  Same engine, same precompiled executables —
+  the delta is purely the overlap of host-side batch assembly/scatter
+  with device compute.
+* **single vs sharded**: when >1 device is visible, the same stream with
+  data-parallel batch sharding over a host mesh.
+
+Networks are the paper's (YOLOv2-Tiny is fully convolutional, so it also
+runs at reduced resolutions where serving overhead — not conv FLOPs —
+dominates and the async win is largest).
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _serve_stream(engine, hwc, *, requests: int, max_batch: int,
+                  buckets: tuple[int, ...], async_dispatch: bool,
+                  mesh=None) -> dict:
+    from repro.serving import InferenceServer
+
+    server = InferenceServer(engine, max_batch=max_batch, max_wait_s=0.0,
+                             buckets=buckets,
+                             async_dispatch=async_dispatch, mesh=mesh)
+    server.compile_buckets()
+    rng = np.random.default_rng(0)
+    for _ in range(requests):
+        server.submit(rng.integers(0, 256, hwc, dtype=np.uint8))
+    server.drain()
+    return server.metrics()
+
+
+def _best(runs: list[dict]) -> dict:
+    return max(runs, key=lambda m: m["throughput"] or 0)
+
+
+def bench_network(name: str, *, input_hw: int | None = None,
+                  requests: int = 32, max_batch: int = 8,
+                  matmul_mode: str = "xla", trials: int = 2) -> dict:
+    from repro.models import paper_nets
+    from repro.serving import PhoneBitEngine, buckets_for
+
+    spec, (h, w, c), params = paper_nets.init(name)
+    if input_hw:
+        h = w = input_hw
+    engine = PhoneBitEngine.from_trained(params, spec, (h, w),
+                                         matmul_mode=matmul_mode)
+    buckets = buckets_for(max_batch)
+    kw = dict(requests=requests, max_batch=max_batch, buckets=buckets)
+    # Paired measurement: alternate sync/async streams back-to-back and
+    # take the MEDIAN of per-pair throughput ratios.  Machine drift on a
+    # shared host moves both streams of a pair together and cancels in
+    # the ratio, where a best-of comparison across minutes would be
+    # dominated by it; per-mode metrics still report each mode's best
+    # stream.
+    sync_runs, async_runs, ratios = [], [], []
+    for _ in range(trials):
+        s = _serve_stream(engine, (h, w, c), async_dispatch=False, **kw)
+        a = _serve_stream(engine, (h, w, c), async_dispatch=True, **kw)
+        sync_runs.append(s)
+        async_runs.append(a)
+        if s["throughput"] and a["throughput"]:
+            ratios.append(a["throughput"] / s["throughput"])
+    sync, async_ = _best(sync_runs), _best(async_runs)
+    paired = sorted(ratios)[len(ratios) // 2] if ratios else None
+
+    sharded = None
+    if len(jax.devices()) > 1:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(data=len(jax.devices()), model=1)
+        sharded = _best([_serve_stream(engine, (h, w, c),
+                                       async_dispatch=True, mesh=mesh,
+                                       **kw) for _ in range(trials)])
+    row = {
+        "network": name, "input_hw": h, "requests": requests,
+        "max_batch": max_batch, "buckets": list(buckets),
+        "matmul_mode": matmul_mode,
+        "sync": sync, "async": async_, "sharded": sharded,
+        # median of paired ratios — the drift-robust speedup estimate
+        "async_speedup": paired,
+        "async_speedup_pairs": [round(r, 4) for r in ratios],
+        "shard_speedup": (sharded["throughput"] / async_["throughput"]
+                          if sharded and sharded["throughput"]
+                          and async_["throughput"] else None),
+    }
+    return row
+
+
+def run(smoke: bool = False, out: str = "BENCH_serving.json") -> dict:
+    # Double-buffering pays in the overhead-dominated regime — small
+    # per-dispatch device work (single-image buckets, reduced resolution)
+    # where per-request host staging/dispatch/readback is comparable to
+    # compute and async hides it behind the in-flight batch.  At
+    # compute-saturated CPU shapes the device *is* the host (XLA's
+    # threads and the serving loop share cores), so overlap buys nothing
+    # there — that row is reported anyway; the TPU/serving-shard regime
+    # is the small-per-device-work one.
+    if smoke:
+        # CI tripwire: the fully-conv paper net, latency-serving shape.
+        cases = [dict(name="yolov2-tiny", input_hw=32, requests=64,
+                      max_batch=1, trials=5)]
+    else:
+        cases = [
+            dict(name="yolov2-tiny", input_hw=None, requests=16,
+                 max_batch=4),
+            dict(name="yolov2-tiny", input_hw=32, requests=96,
+                 max_batch=1, trials=9),
+            dict(name="alexnet", input_hw=None, requests=16, max_batch=4),
+        ]
+    rows = [bench_network(c.pop("name"), **c) for c in cases]
+
+    csv_rows = [{
+        "network": r["network"], "hw": r["input_hw"],
+        "sync_img_s": r["sync"]["throughput"],
+        "async_img_s": r["async"]["throughput"],
+        "async_speedup": r["async_speedup"],
+        "async_p50_ms": r["async"]["p50_ms"],
+        "async_p95_ms": r["async"]["p95_ms"],
+        "shard_img_s": (r["sharded"] or {}).get("throughput", ""),
+    } for r in rows]
+    emit(csv_rows, "§Serving: sync vs async (vs sharded) throughput")
+
+    report = {
+        "device": f"{jax.default_backend()}:"
+                  f"{jax.devices()[0].device_kind}",
+        "n_devices": len(jax.devices()),
+        "smoke": smoke,
+        "nets": rows,
+        "summary": {
+            "n_nets": len(rows),
+            "async_wins": sum(1 for r in rows
+                              if (r["async_speedup"] or 0) > 1.0),
+            "best_async_speedup": max((r["async_speedup"] or 0)
+                                      for r in rows),
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out} (async wins "
+          f"{report['summary']['async_wins']}/{len(rows)}, best speedup "
+          f"{report['summary']['best_async_speedup']:.2f}x)")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.serving_bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized single case; still writes "
+                         "BENCH_serving.json")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,19 @@
-"""Batched request serving through the scheduler (paper engine + LM).
+"""Batched request serving through the InferenceServer (paper engine + LM).
 
     PYTHONPATH=src python examples/serve_requests.py
 
-Part 1 — PhoneBit engine behind the BatchScheduler: submit single-image
-requests, let the scheduler assemble padded buckets, measure latency and
-throughput (the datacenter-front-end version of the paper's phone engine).
+Part 1 — PhoneBit engine behind the production server (DESIGN.md §7):
+``compile_buckets()`` precompiles one executable per batch bucket (no
+manual warm-up calls), then single-image requests stream through async
+double-buffered dispatch — batch k+1 is on the device while batch k's
+results scatter.  Requests carry deadlines; an overloaded queue sheds
+instead of growing.
 
-Part 2 — continuous-batching LM decode: multiple prompts share one
-sequence-sharded KV cache via slot management.
+Part 2 — continuous-batching LM decode through the *same* protocol:
+submit prompts, drain, read the same p50/p95/served/dropped metrics.
 """
 
-import time
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bnn_model
@@ -21,7 +21,7 @@ from repro.core.bnn_model import BConv, FloatDense, Pool
 from repro.distributed.sharding import rules_for_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer
-from repro.serving import BatchScheduler, PhoneBitEngine
+from repro.serving import InferenceServer, PhoneBitEngine
 from repro.serving.lm_server import LMServer
 
 # ---- Part 1: BNN image serving ------------------------------------------
@@ -31,24 +31,25 @@ spec = [BConv(3, 64, kernel=3, stride=1, pad=1, first=True), Pool(2, 2),
 params = bnn_model.init_params(jax.random.key(0), spec)
 engine = PhoneBitEngine.from_trained(params, spec, (32, 32),
                                      matmul_mode="xla_pm1")
-sched = BatchScheduler(max_batch=8, max_wait_s=0.0, buckets=(1, 2, 4, 8))
+server = InferenceServer(engine, max_batch=8, max_wait_s=0.0,
+                         buckets=(1, 2, 4, 8))
+compile_s = server.compile_buckets()     # one executable per bucket
+print(f"[bnn] compiled buckets {list(compile_s)} in "
+      f"{sum(compile_s.values()):.2f}s; traces so far: "
+      f"{engine.trace_count}")
+
 rng = np.random.default_rng(0)
+requests = [server.submit(rng.integers(0, 256, (32, 32, 3), dtype=np.uint8),
+                          deadline_s=5.0)
+            for _ in range(24)]
+done = server.drain()
+m = server.metrics()
+assert engine.trace_count == len(server.scheduler.buckets)  # zero retraces
+print(f"[bnn] served {m['served']} (dropped {m['dropped']}), "
+      f"p50 {m['p50_ms']:.1f} ms, p95 {m['p95_ms']:.1f} ms, "
+      f"{m['throughput']:.0f} img/s (async double-buffered)")
 
-def run(payloads):
-    return list(np.asarray(engine(jnp.asarray(np.stack(payloads)))))
-
-run([rng.integers(0, 256, (32, 32, 3), dtype=np.uint8)] * 8)  # warmup
-t0 = time.monotonic()
-for _ in range(24):
-    sched.submit(rng.integers(0, 256, (32, 32, 3), dtype=np.uint8))
-done = 0
-while len(sched):
-    done += len(sched.drain(run))
-dt = time.monotonic() - t0
-print(f"[bnn] served {done} requests in {dt * 1e3:.0f} ms "
-      f"({done / dt:.0f} img/s)")
-
-# ---- Part 2: LM continuous batching ---------------------------------------
+# ---- Part 2: LM continuous batching through the same protocol -------------
 cfg = transformer.LMConfig(
     name="serve-demo", n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
     d_head=32, d_ff=256, vocab=512, tie_embeddings=True)
@@ -56,14 +57,14 @@ mesh = make_host_mesh(data=1, model=1)
 rules = rules_for_mesh(mesh)
 with mesh:
     lm_params = transformer.init_params(jax.random.key(1), cfg, ep=1)
-    server = LMServer(cfg=cfg, rules=rules, params=lm_params, n_slots=4,
-                      max_seq=64)
+    lm = LMServer(cfg=cfg, rules=rules, params=lm_params, n_slots=4,
+                  max_seq=64)
     prompts = [list(rng.integers(1, cfg.vocab, 6)) for _ in range(3)]
-    t0 = time.monotonic()
-    outs = [server.generate(p, max_new=8) for p in prompts]
-    dt = time.monotonic() - t0
-    toks = sum(len(o) for o in outs)
-    print(f"[lm] generated {toks} tokens for {len(prompts)} prompts "
-          f"in {dt:.2f}s ({toks / dt:.1f} tok/s); "
-          f"cache utilization {server.manager.utilization:.0%}")
+    lm_reqs = [lm.submit(p, max_new=8) for p in prompts]
+    lm.drain()
+    lm_m = lm.metrics()
+    toks = sum(len(r.result) for r in lm_reqs)
+    print(f"[lm] served {lm_m['served']} prompts, {toks} tokens, "
+          f"p50 {lm_m['p50_ms']:.0f} ms; "
+          f"throughput {lm_m['throughput']:.1f} seq/s")
 print("OK")

@@ -1,12 +1,15 @@
-"""Serving drivers.
+"""Serving drivers on the production serving subsystem (DESIGN.md §7).
 
-Two modes, matching the paper's engine and the LM serving path:
+Both modes front their engine with the shared server protocol
+(submit/poll/drain + metrics):
 
-* ``--mode bnn``  — PhoneBit engine (Fig 2/3): train-or-init a paper
-  network, convert offline, serve batched uint8 images through the
-  BatchScheduler, report latency/throughput.
-* ``--mode lm``   — continuous-batching decode: prefill prompts into KV
-  slots, decode ticks across all active sequences.
+* ``--mode bnn``  — PhoneBit engine (Fig 2/3) behind an
+  :class:`~repro.serving.server.InferenceServer`: per-bucket precompiled
+  executables (no manual warm-up), async double-buffered dispatch
+  (``--sync`` for the blocking baseline), optional data-parallel batch
+  sharding over the host devices (``--shard``).
+* ``--mode lm``   — continuous-batching decode through the LMServer's
+  identical submit/drain surface.
 
     PYTHONPATH=src python -m repro.launch.serve --mode bnn \
         --network yolov2-tiny --requests 32
@@ -16,48 +19,53 @@ Two modes, matching the paper's engine and the LM serving path:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import rules_for_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import paper_nets, transformer
-from repro.serving import BatchScheduler, PhoneBitEngine
+from repro.serving import InferenceServer, PhoneBitEngine, buckets_for
 from repro.serving.lm_server import LMServer
+
+
+def _print_metrics(tag: str, m: dict) -> None:
+    lat = (f"p50 {m['p50_ms']:.1f} ms, p95 {m['p95_ms']:.1f} ms"
+           if m.get("p50_ms") is not None else "no latency samples")
+    thr = (f"{m['throughput']:.1f}/s" if m.get("throughput") else "n/a")
+    print(f"[{tag}] served {m['served']} (dropped {m['dropped']}), "
+          f"{lat}, throughput {thr}")
 
 
 def serve_bnn(args) -> dict:
     spec, (h, w, c), params = paper_nets.init(args.network)
+    if args.input_hw:          # fully-conv nets serve any resolution
+        h = w = args.input_hw
     engine = PhoneBitEngine.from_trained(params, spec, (h, w),
-                                         matmul_mode="xla")
+                                         matmul_mode=args.matmul_mode)
     print(f"{args.network}: packed model {engine.model_bytes / 2**20:.1f} "
-          f"MiB")
-    sched = BatchScheduler(max_batch=args.batch, max_wait_s=0.0,
-                           buckets=(1, 2, 4, 8, 16))
+          f"MiB, input {h}x{w}")
+    mesh = None
+    if args.shard and len(jax.devices()) > 1:
+        mesh = make_host_mesh(data=len(jax.devices()), model=1)
+    server = InferenceServer(
+        engine, max_batch=args.batch, max_wait_s=0.0,
+        buckets=buckets_for(args.batch),
+        async_dispatch=not args.sync, mesh=mesh)
+    compile_s = server.compile_buckets()
+    print(f"compiled buckets {list(compile_s)} in "
+          f"{sum(compile_s.values()):.2f}s")
+
     rng = np.random.default_rng(0)
-
-    def run(payloads):
-        x = jnp.asarray(np.stack(payloads))
-        out = engine(x)
-        return list(np.asarray(out))
-
-    # warmup compile per bucket used
-    _ = run([rng.integers(0, 256, (h, w, c), dtype=np.uint8)]
-            * sched.bucket_for(min(args.batch, args.requests)))
-
-    t0 = time.monotonic()
-    done = 0
-    for i in range(args.requests):
-        sched.submit(rng.integers(0, 256, (h, w, c), dtype=np.uint8))
-    while len(sched):
-        done += len(sched.drain(run))
-    dt = time.monotonic() - t0
-    print(f"served {done} requests in {dt:.2f}s "
-          f"({done / dt:.1f} img/s, {dt / done * 1e3:.1f} ms/img)")
-    return {"requests": done, "throughput": done / dt}
+    for _ in range(args.requests):
+        server.submit(rng.integers(0, 256, (h, w, c), dtype=np.uint8),
+                      deadline_s=args.deadline_s)
+    done = server.drain()
+    m = server.metrics()
+    _print_metrics("bnn", m)
+    assert len(done) + m["dropped"] >= args.requests
+    return m
 
 
 def serve_lm(args) -> dict:
@@ -76,24 +84,35 @@ def serve_lm(args) -> dict:
         server = LMServer(cfg=cfg, rules=rules, params=params,
                           n_slots=args.batch, max_seq=args.max_seq)
         rng = np.random.default_rng(0)
-        t0 = time.monotonic()
-        outs = []
-        for i in range(args.requests):
-            prompt = list(rng.integers(1, cfg.vocab, size=8))
-            outs.append(server.generate(prompt, max_new=args.max_new))
-        dt = time.monotonic() - t0
-        toks = sum(len(o) for o in outs)
-        print(f"generated {toks} tokens for {args.requests} prompts in "
-              f"{dt:.2f}s ({toks / dt:.1f} tok/s)")
-        return {"tokens": toks, "tok_per_s": toks / dt}
+        reqs = [server.submit(list(rng.integers(1, cfg.vocab, size=8)),
+                              max_new=args.max_new)
+                for _ in range(args.requests)]
+        done = server.drain()
+        assert all(r.done for r in reqs) and len(done) == len(reqs)
+        m = server.metrics()
+        toks = sum(len(r.result) for r in reqs if r.result)
+        _print_metrics("lm", m)
+        print(f"[lm] {toks} tokens, kv utilization "
+              f"{m['kv_utilization']:.0%}")
+        return m
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("bnn", "lm"), default="bnn")
     ap.add_argument("--network", default="yolov2-tiny")
+    ap.add_argument("--matmul-mode", default="xla")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--input-hw", type=int, default=0,
+                    help="override input resolution (fully-conv nets; "
+                         "0 = the paper's)")
+    ap.add_argument("--sync", action="store_true",
+                    help="synchronous dispatch (baseline; default is "
+                         "async double-buffered)")
+    ap.add_argument("--shard", action="store_true",
+                    help="data-parallel batch sharding over host devices")
+    ap.add_argument("--deadline-s", type=float, default=None)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args(argv)

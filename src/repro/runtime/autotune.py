@@ -21,6 +21,18 @@ sharing a cache dict) reuse measurements instead of re-timing, and the
 resulting backend map is frozen into a new :class:`GraphExecutor` — so the
 serving path never re-times or re-compiles.
 
+Bucketed serving tunes the same graph at several batch sizes
+(``PhoneBitEngine.compile`` per bucket).  A winner measured at one batch
+is usually still the winner at another — the reduction geometry per
+example is unchanged — *except* when the winning tile spans the batch dim
+(``block_n``).  So each fresh measurement is additionally recorded under a
+batch-agnostic signature (batch dim replaced by a placeholder), and a
+cache miss at a new batch size first consults that record: if the winner's
+tile carries no ``block_n``, it is adopted without re-timing (the entry is
+marked ``reused_across_batch`` so reports can tell a measured winner from
+an inherited one).  Batch-agnostic records persist to disk alongside the
+exact ones under a ``batchless::`` key prefix.
+
 The cache additionally persists to disk (``~/.cache/repro/autotune.json``,
 keyed by the same signatures — which embed the device kind) so repeated
 engine startups skip re-timing entirely.  ``REPRO_AUTOTUNE_CACHE=0``
@@ -89,6 +101,15 @@ def _node_signature(node, in_shape: tuple[int, ...],
                  _device_kind()))
 
 
+def _agnostic_signature(node, in_shape: tuple[int, ...],
+                        candidates: tuple[str, ...] = ()) -> str:
+    """Batch-agnostic variant of :func:`_node_signature`: the batch dim is
+    replaced by a placeholder so winners can transfer across serving
+    buckets (valid unless the winning tile spans the batch — ``block_n``)."""
+    return "batchless::" + _node_signature(
+        node, ("B",) + tuple(in_shape[1:]), candidates)
+
+
 def _out_rows(node, in_shape: tuple[int, ...]) -> int:
     """Final output rows of a conv(/pool) node — what block_h tiles."""
     from repro.core.binary_conv import conv_out_size
@@ -139,8 +160,13 @@ class Autotuner:
 
     def __init__(self, cache: dict | None = None,
                  candidates: Iterable[str] | None = None,
-                 warmup: int = 1, iters: int = 3, persist: bool = True):
+                 warmup: int = 1, iters: int = 3, persist: bool = True,
+                 agnostic_cache: dict | None = None):
         self.cache: dict = cache if cache is not None else {}
+        # batch-agnostic winners (``batchless::`` keys), kept out of
+        # ``cache`` so its per-node-signature shape stays 1:1.
+        self.agnostic_cache: dict = (agnostic_cache
+                                     if agnostic_cache is not None else {})
         self.candidates = tuple(candidates if candidates is not None
                                 else default_candidates())
         for c in self.candidates:
@@ -224,6 +250,13 @@ class Autotuner:
         (:meth:`tune_with_tiles` also returns the per-node tile shapes.)"""
         return self.tune_with_tiles(graph, input_shape)[0]
 
+    def _cross_batch_entry(self, akey: str) -> dict | None:
+        """A winner measured at another batch size, if transferable."""
+        entry = self.agnostic_cache.get(akey) or self._disk.get(akey)
+        if entry and not (entry.get("tile") or {}).get("block_n"):
+            return entry
+        return None
+
     def tune_with_tiles(self, graph: Graph, input_shape: tuple[int, ...],
                         ) -> tuple[dict[int, str], dict[int, dict]]:
         types = infer_types(graph, input_shape)
@@ -236,20 +269,35 @@ class Autotuner:
                 continue
             in_t = types[node.inputs[0]]
             key = _node_signature(node, in_t.shape, self.candidates)
+            akey = _agnostic_signature(node, in_t.shape, self.candidates)
             if key not in self.cache:
                 if key in self._disk:       # warm start from a prior run
                     self.cache[key] = self._disk[key]
+                elif (xfer := self._cross_batch_entry(akey)) is not None:
+                    # Winner measured at another serving bucket; tile has
+                    # no block_n, so it transfers without re-timing.
+                    self.cache[key] = dict(xfer,
+                                           reused_across_batch=True)
                 else:
                     self.cache[key] = fresh[key] = self._tune_node(
                         node, in_t.shape, in_t.dtype)
-            choices[nid] = self.cache[key]["winner"]
-            tile = self.cache[key].get("tile") or {}
+            entry = self.cache[key]
+            if akey not in self.agnostic_cache and \
+                    not entry.get("reused_across_batch"):
+                record = {k: v for k, v in entry.items()
+                          if k != "reused_across_batch"}
+                self.agnostic_cache[akey] = record
+                if key in fresh:
+                    fresh[akey] = record
+            choices[nid] = entry["winner"]
+            tile = entry.get("tile") or {}
             if tile:
                 tiles[nid] = dict(tile)
         self._save_disk(fresh)
         return choices, tiles
 
-    def tuned_executor(self, graph: Graph, input_shape: tuple[int, ...]
-                       ) -> GraphExecutor:
+    def tuned_executor(self, graph: Graph, input_shape: tuple[int, ...],
+                       donate_input: bool = False) -> GraphExecutor:
         choices, tiles = self.tune_with_tiles(graph, input_shape)
-        return GraphExecutor(graph, choices, tiles)
+        return GraphExecutor(graph, choices, tiles,
+                             donate_input=donate_input)

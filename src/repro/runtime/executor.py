@@ -32,6 +32,7 @@ tests use to pin the no-recompile-at-serve-time contract.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Mapping
 
 import jax
@@ -76,6 +77,21 @@ def resolve_backend(op: str, backend: str) -> str:
 
 def _pallas_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+_DONATION_FILTER_INSTALLED = False
+
+
+def _ignore_donation_warning() -> None:
+    """Install (once) a lowest-priority filter for XLA's failed-donation
+    warning — expected on every donated call off-TPU.  ``append=True``
+    keeps caller-installed filters (including ``error``) winning."""
+    global _DONATION_FILTER_INSTALLED
+    if not _DONATION_FILTER_INSTALLED:
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable",
+            append=True)
+        _DONATION_FILTER_INSTALLED = True
 
 
 def _pool_attrs(a: dict) -> tuple[int, int, tuple[int, int]] | None:
@@ -198,9 +214,11 @@ class GraphExecutor:
 
     def __init__(self, graph: Graph,
                  backends: str | Mapping[int, str] = "xla",
-                 tile_configs: Mapping[int, Mapping[str, int]] | None = None):
+                 tile_configs: Mapping[int, Mapping[str, int]] | None = None,
+                 donate_input: bool = False):
         graph.validate()
         self.graph = graph
+        self.donate_input = donate_input
         if isinstance(backends, str):
             backends = {nid: resolve_backend(n.op, backends)
                         for nid, n in graph.nodes.items()
@@ -225,7 +243,15 @@ class GraphExecutor:
                        for nid, n in graph.nodes.items() if n.params}
         self._schedule = graph.topo_order()
         self.trace_count = 0
-        self._jitted = jax.jit(self._run)
+        if donate_input:
+            # The serving path hands each batch's input buffer to the
+            # device for reuse (arg 1 = x; arg 0, the params, is never
+            # donated).  Off-TPU XLA declines uint8 donations with a
+            # warning — donation is permission, not a requirement.
+            _ignore_donation_warning()
+            self._jitted = jax.jit(self._run, donate_argnums=(1,))
+        else:
+            self._jitted = jax.jit(self._run)
 
     # ---- execution -------------------------------------------------------
     def _run(self, arrays, x):
@@ -251,7 +277,8 @@ class GraphExecutor:
     def with_backends(self, backends: str | Mapping[int, str],
                       tile_configs: Mapping[int, Mapping[str, int]]
                       | None = None) -> "GraphExecutor":
-        return GraphExecutor(self.graph, backends, tile_configs)
+        return GraphExecutor(self.graph, backends, tile_configs,
+                             donate_input=self.donate_input)
 
     def backend_report(self) -> list[dict]:
         rows = []

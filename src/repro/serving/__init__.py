@@ -1,14 +1,22 @@
-"""Serving layer.
+"""Serving layer (DESIGN.md §7).
 
 engine      PhoneBitEngine — the paper's deployment story (Fig 2/Fig 3):
-            load a converted artifact, run the packed integer forward
-scheduler   request batching: latency/throughput-bounded batch assembly
+            load a converted artifact, run the packed integer forward;
+            grows ``compile(batch)`` — the per-bucket executable cache
+server      InferenceServer — the production front end: bucketed
+            precompiled executables, async double-buffered dispatch,
+            optional data-parallel batch sharding, p50/p95 metrics
+scheduler   request batching: deadline-aware, latency/throughput-bounded
+            batch assembly, zero-padded to compiled buckets
 kv_cache    paged-lite KV cache manager for LM decode serving
-lm_server   continuous-batching LM decode loop (prefill + decode steps)
+lm_server   continuous-batching LM decode loop speaking the same
+            submit/poll/drain/metrics protocol as InferenceServer
 """
 
 from repro.serving.engine import PhoneBitEngine
-from repro.serving.scheduler import BatchScheduler, Request
 from repro.serving.kv_cache import KVCacheManager
+from repro.serving.scheduler import BatchScheduler, Request, buckets_for
+from repro.serving.server import InferenceServer, Server
 
-__all__ = ["PhoneBitEngine", "BatchScheduler", "Request", "KVCacheManager"]
+__all__ = ["PhoneBitEngine", "BatchScheduler", "Request", "KVCacheManager",
+           "InferenceServer", "Server", "buckets_for"]

@@ -32,6 +32,23 @@ The engine always lowers through :func:`runtime.fuse_pool_epilogue`, so
 conv+pool pairs serve as single ``packed_conv_pool`` nodes and the unpooled
 conv map drops out of the memory plan.
 
+Batched serving (DESIGN.md §7) goes through the **per-bucket executable
+cache**: ``compile(batch_size)`` builds (once) a jit-compiled
+:class:`~repro.runtime.executor.GraphExecutor` for that batch bucket and
+caches it on the engine, so serve time never retraces — mixed-size request
+streams are padded to bucket sizes by the scheduler and always hit an
+already-compiled executable.  Under ``matmul_mode="auto"`` each bucket is
+autotuned at *its own* batch shape; winners measured at one bucket
+transfer to others when valid (no batch-spanning tile), so warming N
+buckets costs ~one tuning pass.  ``compile`` also takes ``donate_input=``
+(the serving path donates each batch's input buffer to the device) and
+``data_parallel=`` (autotune at the per-device shard shape when the server
+shards batches across a mesh).  ``trace_count`` aggregates over all
+compiled buckets — the serve-time no-recompile contract is
+``engine.trace_count`` staying flat while requests flow.  There is no
+manual warm-up protocol: ``InferenceServer.compile_buckets()`` (or any
+first call at a bucket) populates the cache.
+
 API mirrors the paper's Fig 3 simplicity::
 
     engine = PhoneBitEngine.from_artifact("model.npz", spec, (227, 227))
@@ -51,9 +68,11 @@ from repro.core import bnn_model, converter
 
 # Modes whose flat-path impl is the ±1-matmul reformulation.
 _PM1_MODES = ("mxu_pm1", "xla_pm1")
-# Process-wide autotune cache: engines serving structurally identical
-# layers (same shapes/attrs) share measurements.
+# Process-wide autotune caches: engines serving structurally identical
+# layers (same shapes/attrs) share measurements; the agnostic cache
+# carries winners across batch buckets (autotune.py module docstring).
 _AUTOTUNE_CACHE: dict = {}
+_AUTOTUNE_AGNOSTIC: dict = {}
 
 
 @dataclasses.dataclass
@@ -99,27 +118,85 @@ class PhoneBitEngine:
 
     # ---- graph runtime path (default) ------------------------------------
     @functools.cached_property
-    def _executor(self):
+    def _graph(self):
         from repro import runtime
 
-        graph = runtime.fuse_pool_epilogue(
+        return runtime.fuse_pool_epilogue(
             runtime.lower_packed(self.spec, self.packed, self.input_hw))
-        if self.matmul_mode == "auto":
-            tuner = runtime.Autotuner(cache=_AUTOTUNE_CACHE)
-            return tuner.tuned_executor(graph, self._plan_shape())
-        return runtime.GraphExecutor(graph, self.matmul_mode)
 
-    def _plan_shape(self) -> tuple[int, int, int, int]:
+    @functools.cached_property
+    def _compiled(self) -> dict:
+        """The per-bucket executable cache: (batch, donate, dp) → executor."""
+        return {}
+
+    @functools.cached_property
+    def _tuner(self):
+        """One Autotuner per engine: the disk cache is read once, not
+        once per compiled bucket (winners still shared process-wide via
+        the module caches)."""
+        from repro import runtime
+
+        return runtime.Autotuner(cache=_AUTOTUNE_CACHE,
+                                 agnostic_cache=_AUTOTUNE_AGNOSTIC)
+
+    def compile(self, batch_size: int | None = None, *,
+                donate_input: bool = False, data_parallel: int = 1):
+        """Build (once) the executable for one serving bucket.
+
+        Returns the cached :class:`GraphExecutor` for
+        ``(batch_size, donate_input, data_parallel)``, constructing and —
+        under ``matmul_mode="auto"`` — autotuning it on first request.
+        Autotuning happens at the **per-device** shard shape
+        (``batch_size // data_parallel``) so a data-parallel server reuses
+        the winners of the equivalent single-device bucket, and winners
+        transfer across buckets where the tile does not span the batch
+        dim.  Serve-time calls at a compiled bucket never retrace.
+        """
+        from repro import runtime
+
+        bs = batch_size if batch_size is not None else (self.batch_size or 1)
+        if bs < 1:
+            raise ValueError(f"batch_size must be >= 1, got {bs}")
+        if data_parallel > 1 and bs % data_parallel:
+            raise ValueError(
+                f"bucket {bs} not divisible by data_parallel={data_parallel}")
+        key = (bs, donate_input, data_parallel)
+        if key not in self._compiled:
+            if self.matmul_mode == "auto":
+                exe = self._tuner.tuned_executor(
+                    self._graph,
+                    self._plan_shape(max(bs // data_parallel, 1)),
+                    donate_input=donate_input)
+            else:
+                exe = runtime.GraphExecutor(self._graph, self.matmul_mode,
+                                            donate_input=donate_input)
+            self._compiled[key] = exe
+        return self._compiled[key]
+
+    @property
+    def _executor(self):
+        """Default-bucket executor (``batch_size`` or 1) — introspection
+        surface for ``memory_plan``/``backend_choices``."""
+        return self.compile()
+
+    @property
+    def trace_count(self) -> int:
+        """Total jit traces across every compiled bucket (serve-time
+        no-recompile hook: this must stay flat while requests flow)."""
+        return sum(e.trace_count for e in self._compiled.values())
+
+    def _plan_shape(self, batch: int | None = None
+                    ) -> tuple[int, int, int, int]:
         h, w = self.input_hw
         c = next((l.c_in for l in self.spec
                   if isinstance(l, (bnn_model.BConv, bnn_model.FloatConv))),
                  3)
-        return (self.batch_size or 1, h, w, c)
+        return (batch or self.batch_size or 1, h, w, c)
 
     def __call__(self, x_uint8: jnp.ndarray) -> jnp.ndarray:
         h, w = self.input_hw
         assert x_uint8.shape[1:3] == (h, w), (x_uint8.shape, self.input_hw)
-        return self._executor(x_uint8)
+        return self.compile(x_uint8.shape[0])(x_uint8)
 
     # ---- legacy flat path (cross-check oracle) ---------------------------
     @functools.cached_property

@@ -1,10 +1,18 @@
 """Continuous-batching LM decode server.
 
-Serving loop tying the pieces together: the BatchScheduler admits prompts,
-the KVCacheManager assigns cache slots, prefill fills a slot, and one
-jitted decode step advances *all* active slots each tick (continuous
-batching — new sequences join between ticks, finished ones free their slot
-without stalling the rest).
+Serving loop tying the pieces together: submitted prompts queue as
+:class:`Request` objects, the KVCacheManager assigns cache slots, prefill
+fills a slot, and one jitted decode step advances *all* active slots each
+tick (continuous batching — new sequences join between ticks, finished
+ones free their slot without stalling the rest).
+
+The server speaks the same protocol as the BNN
+:class:`~repro.serving.server.InferenceServer` (DESIGN.md §7):
+``submit(prompt)`` → Request, ``poll``, ``step``, ``drain`` and
+``metrics()`` with the same p50/p95/served/dropped/queue-depth
+definitions (latency here is submit → last token).  Deadline-carrying
+requests that expire while waiting for a KV slot are shed at admission
+and counted in ``dropped``.
 
 Simplifications vs a production server (recorded in DESIGN.md): one global
 position per tick (slot positions are tracked but the decode step uses the
@@ -15,6 +23,8 @@ sampling, single-host loop.
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
 from typing import Any, Callable
 
 import jax
@@ -24,6 +34,8 @@ import numpy as np
 from repro.distributed.sharding import Rules
 from repro.models import transformer
 from repro.serving.kv_cache import KVCacheManager
+from repro.serving.scheduler import Request, shed_expired_requests
+from repro.serving.server import ServingMetrics
 
 
 @dataclasses.dataclass
@@ -34,6 +46,7 @@ class LMServer:
     n_slots: int
     max_seq: int
     eos_id: int | None = None
+    clock: Callable[[], float] = time.monotonic
 
     def __post_init__(self):
         self.cache = transformer.init_cache(self.cfg, self.n_slots,
@@ -46,6 +59,11 @@ class LMServer:
         # Single-sequence prefill at a fixed bucket keeps one compilation.
         self._fwd = jax.jit(
             lambda p, t: transformer.forward(p, t, self.cfg, self.rules))
+        # ---- server-protocol state (submit/poll/drain/metrics) ----------
+        self._waiting: deque[Request] = deque()
+        self._by_seq: dict[int, tuple[Request, Any]] = {}
+        self._metrics = ServingMetrics()
+        self.dropped = 0
 
     # ---- admission -------------------------------------------------------
     def add_prompt(self, prompt: list[int], max_new: int = 32):
@@ -59,7 +77,9 @@ class LMServer:
                 self.params, self.cache, toks, jnp.int32(self.pos + i))
         self.pos += len(prompt)
         nxt = int(jnp.argmax(logits[seq.slot]))
-        seq.tokens.append(nxt)
+        # First generated token goes through the manager so ``generated``
+        # counts it — a max_new=1 sequence finishes right here.
+        self.manager.record_token(seq.seq_id, nxt, self.eos_id)
         self.tokens = self.tokens.at[seq.slot, 0].set(nxt)
         return seq
 
@@ -80,6 +100,78 @@ class LMServer:
             self.manager.record_token(seq_id, tok, self.eos_id)
             self.tokens = self.tokens.at[seq.slot, 0].set(tok)
         return out
+
+    # ---- server protocol (same surface as InferenceServer) ---------------
+    def submit(self, prompt: list[int], max_new: int = 16,
+               deadline_s: float | None = None,
+               now: float | None = None) -> Request:
+        """Queue a prompt; it joins the continuous batch when a KV slot
+        frees.  ``request.result`` becomes the generated token list.
+        Invalid requests are rejected here, at the protocol edge — an
+        assertion inside drain() would strand every other queued
+        request."""
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new > self.max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"max_seq ({self.max_seq})")
+        r = Request((prompt, max_new), deadline_s=deadline_s)
+        # one clock domain for arrival and completion (fake-clock tests)
+        r.arrival_s = self.clock() if now is None else now
+        self._waiting.append(r)
+        return r
+
+    def poll(self, request: Request) -> bool:
+        return request.done
+
+    def _admit_waiting(self, now: float | None = None) -> None:
+        now = self.clock() if now is None else now
+        # Shed expired requests anywhere in the queue — a full KV cache
+        # must not protect queued requests from their deadlines.
+        self._waiting, shed = shed_expired_requests(self._waiting, now)
+        self.dropped += len(shed)
+        while self._waiting and self.manager.can_admit():
+            r = self._waiting.popleft()
+            prompt, max_new = r.payload
+            self._metrics.mark_dispatch()
+            seq = self.add_prompt(prompt, max_new=max_new)
+            self._by_seq[seq.seq_id] = (r, seq)
+
+    def serve_tick(self, now: float | None = None) -> list[Request]:
+        """One serving tick: admit waiting prompts into free slots, run a
+        decode step, complete any sequences that finished."""
+        self._admit_waiting(now)
+        self.step()
+        now = self.clock() if now is None else now
+        done: list[Request] = []
+        for seq_id, (r, seq) in list(self._by_seq.items()):
+            if seq_id not in self.manager.active:    # finished + released
+                r.result, r.done = list(seq.tokens), True
+                self._metrics.record([now - r.arrival_s])
+                del self._by_seq[seq_id]
+                done.append(r)
+        return done
+
+    def drain(self, now: float | None = None) -> list[Request]:
+        """Serve until every submitted prompt has completed (or shed)."""
+        done: list[Request] = []
+        while self._waiting or self._by_seq:
+            done += self.serve_tick(now)
+        return done
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._waiting) + len(self._by_seq)
+
+    def metrics(self) -> dict:
+        """Same definitions as InferenceServer (§7.4); latency is submit →
+        last token."""
+        return self._metrics.snapshot(
+            dropped=self.dropped,
+            queue_depth=self.queue_depth,
+            kv_utilization=self.manager.utilization)
 
     def generate(self, prompt: list[int], max_new: int = 16) -> list[int]:
         """Convenience: run one sequence to completion."""

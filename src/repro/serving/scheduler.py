@@ -4,7 +4,19 @@ The paper's engine serves one image at a time on a phone; at datacenter
 scale the same engine fronts a batch scheduler.  Policy: assemble the
 largest batch available up to ``max_batch``, but never hold a request
 longer than ``max_wait_s`` (latency/throughput knob).  Batches are padded
-to the nearest compiled bucket size so XLA never recompiles at serve time.
+to the nearest compiled bucket size so XLA never recompiles at serve time;
+padding is **zero-filled** (shaped like the last real payload) and the
+padded tail of the results is discarded — pad rows cost device FLOPs but
+never replay a real request through a potentially stateful ``run``.
+
+Overload protection: a request may carry a ``deadline_s`` (seconds of
+queue residency it will tolerate).  Expired requests are shed — popped
+with ``done=True, result=None`` and counted in ``dropped`` — so a queue
+growing faster than the engine drains it sheds load instead of growing
+without bound.
+
+Every time-dependent method takes an injectable ``now=`` (monotonic
+seconds) so policy is testable with a fake clock.
 """
 
 from __future__ import annotations
@@ -15,15 +27,51 @@ import time
 from collections import deque
 from typing import Any, Callable
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class Request:
     payload: Any
     arrival_s: float = dataclasses.field(default_factory=time.monotonic)
+    deadline_s: float | None = None   # max queue residency; None = patient
     id: int = dataclasses.field(
         default_factory=itertools.count().__next__)
     result: Any = None
     done: bool = False
+
+    def expired(self, now: float) -> bool:
+        return (self.deadline_s is not None
+                and (now - self.arrival_s) >= self.deadline_s)
+
+
+def _zero_like(payload: Any) -> Any:
+    """A zero payload with the shape/dtype of a real one (batch padding)."""
+    return np.zeros_like(np.asarray(payload))
+
+
+def shed_expired_requests(queue: "deque[Request]", now: float
+                          ) -> tuple["deque[Request]", list[Request]]:
+    """Partition a request queue into (kept, shed-by-deadline); shed
+    requests are completed with ``result=None``.  The one shed policy —
+    used by both the batch scheduler and the LM admission queue."""
+    kept: deque[Request] = deque()
+    shed: list[Request] = []
+    for r in queue:
+        if r.expired(now):
+            r.done, r.result = True, None
+            shed.append(r)
+        else:
+            kept.append(r)
+    return kept, shed
+
+
+def buckets_for(max_batch: int,
+                ladder: tuple[int, ...] = (1, 2, 4, 8, 16)) -> tuple[int, ...]:
+    """The canonical bucket set for a max batch size: the power-of-two
+    ladder below it plus ``max_batch`` itself (so the scheduler invariant
+    ``buckets[-1] >= max_batch`` holds for any value)."""
+    return tuple(sorted({b for b in ladder if b < max_batch} | {max_batch}))
 
 
 @dataclasses.dataclass
@@ -34,11 +82,15 @@ class BatchScheduler:
 
     def __post_init__(self):
         self._queue: deque[Request] = deque()
-        assert tuple(sorted(self.buckets)) == self.buckets
+        self.dropped = 0          # deadline-shed requests (overload stat)
+        assert tuple(sorted(self.buckets)) == tuple(self.buckets)
         assert self.buckets[-1] >= self.max_batch
 
-    def submit(self, payload: Any) -> Request:
-        r = Request(payload)
+    def submit(self, payload: Any, deadline_s: float | None = None,
+               now: float | None = None) -> Request:
+        r = Request(payload, deadline_s=deadline_s)
+        if now is not None:
+            r.arrival_s = now
         self._queue.append(r)
         return r
 
@@ -51,6 +103,17 @@ class BatchScheduler:
                 return b
         return self.buckets[-1]
 
+    # ---- deadline shedding -----------------------------------------------
+    def shed_expired(self, now: float | None = None) -> list[Request]:
+        """Pop every expired request (done, result=None); count them."""
+        if not self._queue:
+            return []
+        now = time.monotonic() if now is None else now
+        self._queue, shed = shed_expired_requests(self._queue, now)
+        self.dropped += len(shed)
+        return shed
+
+    # ---- batch assembly ---------------------------------------------------
     def ready(self, now: float | None = None) -> bool:
         if not self._queue:
             return False
@@ -59,24 +122,45 @@ class BatchScheduler:
         now = time.monotonic() if now is None else now
         return (now - self._queue[0].arrival_s) >= self.max_wait_s
 
-    def next_batch(self, now: float | None = None) -> list[Request] | None:
-        """Pop up to max_batch requests if the policy says go."""
-        if not self.ready(now):
+    def next_batch(self, now: float | None = None,
+                   force: bool = False) -> list[Request] | None:
+        """Shed expired requests, then pop up to max_batch if the policy
+        says go (``force=True`` skips the wait policy — final flush)."""
+        now = time.monotonic() if now is None else now
+        self.shed_expired(now)
+        if not (self._queue if force else self.ready(now)):
             return None
         n = min(len(self._queue), self.max_batch)
         return [self._queue.popleft() for _ in range(n)]
 
-    def drain(self, run: Callable[[list[Any]], list[Any]],
-              now: float | None = None) -> list[Request]:
-        """Assemble, pad to bucket, execute, scatter results."""
-        batch = self.next_batch(now)
+    def padded_batch(self, now: float | None = None, force: bool = False
+                     ) -> tuple[list[Request], list[Any]] | None:
+        """Pop a batch and zero-pad its payloads to the bucket size.
+
+        The single batch-assembly path: every executed payload list is
+        exactly a bucket size, and rows past ``len(batch)`` are padding.
+        """
+        batch = self.next_batch(now, force=force)
         if batch is None:
-            return []
+            return None
         bucket = self.bucket_for(len(batch))
         payloads = [r.payload for r in batch]
         pad = bucket - len(batch)
         if pad:
-            payloads = payloads + [payloads[-1]] * pad
+            payloads = payloads + [_zero_like(payloads[-1])] * pad
+        return batch, payloads
+
+    def drain(self, run: Callable[[list[Any]], list[Any]],
+              now: float | None = None) -> list[Request]:
+        """Assemble, zero-pad to bucket, execute, scatter the real rows.
+
+        ``run`` is always called with exactly a bucket-sized payload list;
+        results beyond ``len(batch)`` are padding output and discarded.
+        """
+        got = self.padded_batch(now)
+        if got is None:
+            return []
+        batch, payloads = got
         results = run(payloads)
         for r, out in zip(batch, results):
             r.result, r.done = out, True

@@ -1,0 +1,263 @@
+"""InferenceServer: the production serving subsystem (DESIGN.md §7).
+
+One object owns the whole serve path the paper's phone loop inlines:
+
+* a :class:`~repro.serving.scheduler.BatchScheduler` assembling
+  deadline-aware, bucket-padded batches;
+* the engine's **per-bucket executable cache** —
+  ``compile_buckets()`` precompiles (and, in ``auto`` mode, autotunes)
+  one :class:`GraphExecutor` per bucket so serve time never retraces;
+* **async double-buffered dispatch** — batch *k+1* is dispatched while
+  batch *k*'s device work is still in flight; the host blocks only when
+  scattering results (``np.asarray`` at the pop of the one-deep pipeline),
+  and each batch's input buffer is donated to the device;
+* optional **data-parallel batch sharding** — given a mesh, inputs are
+  placed with ``jax.sharding.NamedSharding(mesh, P(data_axis))`` so XLA
+  splits every bucket across the data axis; buckets are rounded up to
+  shard evenly and autotuning runs at the per-device shard shape (reusing
+  the single-device winners).
+
+The server surface is the protocol both serving paths share (the LM
+decode server implements the same one): ``submit`` / ``poll`` / ``step``
+/ ``drain`` plus ``metrics()`` (p50/p95 latency, queue depth, throughput,
+dropped count — definitions in DESIGN.md §7.4).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.scheduler import BatchScheduler, Request
+
+
+@runtime_checkable
+class Server(Protocol):
+    """What a serving front end looks like, BNN or LM."""
+
+    def submit(self, payload: Any, **kw) -> Request: ...
+
+    def poll(self, request: Request) -> bool: ...
+
+    def drain(self) -> list[Request]: ...
+
+    def metrics(self) -> dict: ...
+
+
+def percentile(sorted_vals: list[float], p: float) -> float | None:
+    """Nearest-rank percentile of an ascending list (None when empty):
+    the smallest value with at least ``p`` of the sample at or below it,
+    i.e. index ``ceil(p*n) - 1``."""
+    n = len(sorted_vals)
+    if not n:
+        return None
+    return sorted_vals[max(0, min(n - 1, math.ceil(p * n) - 1))]
+
+
+class ServingMetrics:
+    """Latency/throughput bookkeeping shared by both servers (§7.4): one
+    definition of p50/p95, the busy window, and the metrics dict, so the
+    two protocol implementations cannot drift.  The busy window uses the
+    owner's (injectable) clock — under a fake clock, throughput reports
+    simulated time, the same domain as the latency percentiles."""
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self.latencies: list[float] = []
+        self.served = 0
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+
+    def mark_dispatch(self) -> None:
+        """First device work entered flight: the busy window opens."""
+        if self._t_first is None:
+            self._t_first = self._clock()
+
+    def record(self, latencies: list[float]) -> None:
+        """A batch of requests completed with these submit→done times."""
+        self.latencies.extend(latencies)
+        self.served += len(latencies)
+        self._t_last = self._clock()
+
+    def snapshot(self, *, dropped: int, queue_depth: int,
+                 **extra) -> dict:
+        lat = sorted(self.latencies)
+        busy = (self._t_last - self._t_first
+                if self._t_first is not None and self._t_last is not None
+                else None)
+        return {
+            "served": self.served,
+            "dropped": dropped,
+            "queue_depth": queue_depth,
+            "p50_ms": None if not lat else percentile(lat, 0.50) * 1e3,
+            "p95_ms": None if not lat else percentile(lat, 0.95) * 1e3,
+            "throughput": (self.served / busy if busy else None),
+            **extra,
+        }
+
+
+class _InFlight:
+    """One dispatched batch: requests + the device array still computing."""
+
+    __slots__ = ("batch", "out")
+
+    def __init__(self, batch: list[Request], out):
+        self.batch = batch
+        self.out = out
+
+
+class InferenceServer:
+    """Batched image-inference front end over a PhoneBitEngine.
+
+    Parameters
+    ----------
+    engine:          a :class:`~repro.serving.engine.PhoneBitEngine` (or
+                     anything with ``compile(bs, donate_input=,
+                     data_parallel=) -> callable`` and ``_plan_shape``).
+    buckets:         compiled batch sizes; mixed-size traffic is padded up
+                     to the nearest one.
+    async_dispatch:  double-buffer dispatch (the default); ``False`` gives
+                     the synchronous drain loop (benchmark baseline).
+    preprocess:      optional per-payload host transform (decode / crop /
+                     normalize) applied at batch staging.  Under async
+                     dispatch batch k+1's preprocessing runs while batch
+                     k's device work is in flight — host preprocessing is
+                     the classic serving cost double-buffering hides.
+    mesh/data_axis:  optional device mesh for data-parallel sharding.
+    clock:           injectable monotonic clock (tests use a fake).
+    """
+
+    def __init__(self, engine, *, max_batch: int = 8,
+                 max_wait_s: float = 0.0,
+                 buckets: tuple[int, ...] = (1, 2, 4, 8),
+                 async_dispatch: bool = True,
+                 donate_input: bool = True,
+                 preprocess: Callable[[np.ndarray], np.ndarray]
+                 | None = None,
+                 mesh=None, data_axis: str = "data",
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = engine
+        self.preprocess = preprocess
+        self.mesh, self.data_axis = mesh, data_axis
+        self.data_parallel = int(mesh.shape[data_axis]) if mesh is not None \
+            else 1
+        if self.data_parallel > 1:
+            dp = self.data_parallel
+            buckets = tuple(sorted({-(-b // dp) * dp for b in buckets}))
+            max_batch = max(max_batch, buckets[0])
+        self.scheduler = BatchScheduler(
+            max_batch=max_batch, max_wait_s=max_wait_s,
+            buckets=tuple(buckets))
+        self.async_dispatch = async_dispatch
+        self.donate_input = donate_input
+        self.clock = clock
+        self._pending: _InFlight | None = None
+        self._metrics = ServingMetrics(clock)
+
+    # ---- executable cache -------------------------------------------------
+    def _executable(self, bucket: int):
+        return self.engine.compile(bucket, donate_input=self.donate_input,
+                                   data_parallel=self.data_parallel)
+
+    def compile_buckets(self) -> dict[int, float]:
+        """Precompile (and autotune) every bucket; returns seconds spent
+        per bucket.  After this, serving any mixed-size request stream
+        triggers zero retraces (``engine.trace_count`` stays flat)."""
+        timings: dict[int, float] = {}
+        for b in self.scheduler.buckets:
+            t0 = time.perf_counter()
+            exe = self._executable(b)
+            x = self._place(np.zeros(self.engine._plan_shape(b), np.uint8))
+            jax.block_until_ready(exe(x))
+            timings[b] = time.perf_counter() - t0
+        return timings
+
+    # ---- placement --------------------------------------------------------
+    def _place(self, x_np: np.ndarray):
+        if self.mesh is None:
+            return jnp.asarray(x_np)
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        return jax.device_put(x_np, NamedSharding(self.mesh,
+                                                  P(self.data_axis)))
+
+    # ---- request lifecycle ------------------------------------------------
+    def submit(self, payload: Any, deadline_s: float | None = None,
+               now: float | None = None) -> Request:
+        # Arrival is stamped from the server's clock so latency samples
+        # stay in one clock domain when a fake clock is injected.
+        now = self.clock() if now is None else now
+        return self.scheduler.submit(payload, deadline_s=deadline_s,
+                                     now=now)
+
+    def poll(self, request: Request) -> bool:
+        return request.done
+
+    # ---- dispatch / scatter ----------------------------------------------
+    def _dispatch(self, batch: list[Request],
+                  payloads: list[Any]) -> _InFlight:
+        rows = [np.asarray(p) for p in payloads]
+        if self.preprocess is not None:     # pads go through it too
+            rows = [self.preprocess(r) for r in rows]
+        x = self._place(np.stack(rows))
+        out = self._executable(x.shape[0])(x)   # async: returns immediately
+        self._metrics.mark_dispatch()
+        return _InFlight(batch, out)
+
+    def _scatter(self, flight: _InFlight) -> list[Request]:
+        host = np.asarray(flight.out)           # the only blocking point
+        now = self.clock()
+        for r, row in zip(flight.batch, host):
+            r.result, r.done = row, True
+        self._metrics.record([now - r.arrival_s for r in flight.batch])
+        return flight.batch
+
+    def step(self, now: float | None = None,
+             force: bool = False) -> list[Request]:
+        """One serving tick: dispatch the next batch (policy permitting),
+        then scatter the previously in-flight one.  Under async dispatch
+        the new batch's device work overlaps the old batch's readback;
+        synchronously each batch completes before the next is assembled.
+        Returns the requests completed this tick."""
+        now = self.clock() if now is None else now
+        got = self.scheduler.padded_batch(now, force=force)
+        flight = self._dispatch(*got) if got is not None else None
+        if not self.async_dispatch and flight is not None:
+            return self._scatter(flight)
+        done: list[Request] = []
+        if self._pending is not None:
+            done = self._scatter(self._pending)
+        self._pending = flight
+        return done
+
+    def drain(self, now: float | None = None) -> list[Request]:
+        """Serve until the queue is empty and nothing is in flight
+        (skipping the batch-wait policy: drain is a flush).  Returns the
+        requests completed during the drain."""
+        done: list[Request] = []
+        while len(self.scheduler) or self._pending is not None:
+            done += self.step(now, force=True)
+        return done
+
+    # ---- observability ----------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        inflight = len(self._pending.batch) if self._pending else 0
+        return len(self.scheduler) + inflight
+
+    def metrics(self) -> dict:
+        """p50/p95 request latency (submit→scatter, ms), served/dropped
+        counts, live queue depth, and throughput over the busy window
+        (first dispatch → last scatter)."""
+        return self._metrics.snapshot(
+            dropped=self.scheduler.dropped,
+            queue_depth=self.queue_depth,
+            async_dispatch=self.async_dispatch,
+            data_parallel=self.data_parallel,
+            buckets=list(self.scheduler.buckets))
