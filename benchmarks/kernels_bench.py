@@ -190,5 +190,16 @@ def run(smoke: bool = False, path: pathlib.Path | None = None) -> dict:
     return report
 
 
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="benchmarks.kernels_bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes; still writes "
+                         "BENCH_kernels.json")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke)
+
+
 if __name__ == "__main__":
-    run()
+    main()

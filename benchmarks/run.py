@@ -5,8 +5,9 @@ writes the machine-readable ``BENCH_kernels.json`` perf artifact), and the
 roofline reader (which consumes cached dry-run artifacts if present).
 Each harness prints a CSV block.
 
-``--smoke`` runs only the kernel microbench at CI-sized shapes — a fast
-regression tripwire that still writes ``BENCH_kernels.json``.
+``--smoke`` runs the kernel microbench and the end-to-end workload bench
+at CI-sized shapes — a fast regression tripwire that still writes the
+``BENCH_kernels.json`` and ``BENCH_workloads.json`` artifacts.
 """
 
 from __future__ import annotations
@@ -19,18 +20,19 @@ import traceback
 def main(argv: list[str] | None = None) -> None:
     parser = argparse.ArgumentParser(prog="benchmarks.run")
     parser.add_argument("--smoke", action="store_true",
-                        help="kernel microbench only, tiny shapes "
-                             "(CI tripwire; still writes "
-                             "BENCH_kernels.json)")
+                        help="kernel microbench + workload bench, tiny "
+                             "shapes (CI tripwire; still writes "
+                             "BENCH_kernels.json / BENCH_workloads.json)")
     args = parser.parse_args(argv)
 
     from benchmarks import (crossover, fig5_layers, graph_plan,
                             kernels_bench, roofline, serving_bench,
                             table2_model_size, table3_runtime,
-                            table4_energy)
+                            table4_energy, workloads_bench)
 
     if args.smoke:
         kernels_bench.run(smoke=True)
+        workloads_bench.run(smoke=True)
         return
 
     t3_rows = None
@@ -41,6 +43,7 @@ def main(argv: list[str] | None = None) -> None:
             ("graph_plan", graph_plan.run),
             ("kernels_bench", kernels_bench.run),
             ("serving_bench", serving_bench.run),
+            ("workloads_bench", workloads_bench.run),
             ("crossover", crossover.run),
     ):
         try:

@@ -1,0 +1,133 @@
+"""End-to-end workload benchmark: image-in -> labels/boxes-out per backend.
+
+Times the *whole* workload path (DESIGN.md §8) — letterbox / center-crop
+preprocessing of an off-network-size frame, the packed forward through
+the graph runtime, and the jit-compiled postprocess head (top-k or
+YOLO decode + NMS) — for each executor backend, and writes the
+machine-readable ``BENCH_workloads.json`` perf artifact.  The breakdown
+columns (pre/forward/post) show where each backend's latency actually
+goes: the decode + NMS head is a fixed cost, so backend wins on the
+forward translate almost 1:1 to image->boxes wins.  Each column is an
+independently timed median (``common.time_fn``), so on a shared host the
+parts need not sum exactly to ``e2e_ms`` — compare within a column.
+
+Paper nets run at paper resolution where that is tractable on the host
+(AlexNet 227, YOLOv2-Tiny 416 — cf. ``table3_runtime``'s CPU caveat);
+VGG16 and the interpret-mode Pallas backends run on the conformance-
+scale tiny variants, same topology class, honest label in the rows.
+
+    PYTHONPATH=src python -m benchmarks.workloads_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+
+def bench_case(name: str, *, variant: str, backends: tuple[str, ...],
+               input_hw=None, iters: int = 3, warmup: int = 1
+               ) -> list[dict]:
+    from repro import workloads
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for backend in backends:
+        wl = workloads.get(name, variant=variant, matmul_mode=backend,
+                           input_hw=input_hw)
+        h, w = wl.input_hw
+        # Off-network frame size: preprocessing does real resize work.
+        raw = jnp.asarray(rng.integers(0, 256, (h + h // 2, 2 * w, 3)),
+                          jnp.uint8)
+        pre = jax.jit(wl.preprocess)
+        x = pre(raw)[None]
+        feat = wl.engine.raw(x)
+        head = jax.jit(wl.postprocess)
+
+        def e2e(img):
+            return wl.engine(pre(img)[None])
+
+        kw = dict(warmup=warmup, iters=iters)
+        row = dict(
+            workload=wl.name, task=wl.task, backend=backend,
+            input_hw=h, raw_hw=int(raw.shape[0]),
+            pre_ms=time_fn(pre, raw, **kw) * 1e3,
+            fwd_ms=time_fn(wl.engine.raw, x, **kw) * 1e3,
+            post_ms=time_fn(head, feat, **kw) * 1e3,
+            e2e_ms=time_fn(e2e, raw, **kw) * 1e3,
+        )
+        rows.append(row)
+    return rows
+
+
+def run(smoke: bool = False, out: str = "BENCH_workloads.json") -> dict:
+    if smoke:
+        cases = [
+            dict(name="alexnet_imagenet", variant="tiny",
+                 backends=("xla", "xla_pm1")),
+            dict(name="vgg16_imagenet", variant="tiny",
+                 backends=("xla", "xla_pm1")),
+            dict(name="yolov2_tiny_voc", variant="tiny",
+                 backends=("xla", "xla_pm1", "vpu_direct_pool")),
+        ]
+    else:
+        cases = [
+            dict(name="alexnet_imagenet", variant="paper",
+                 backends=("xla", "xla_pm1", "mxu_pm1"), iters=2),
+            dict(name="vgg16_imagenet", variant="tiny",
+                 backends=("xla", "xla_pm1", "mxu_pm1", "vpu_popcount",
+                           "vpu_direct", "vpu_direct_pool")),
+            dict(name="yolov2_tiny_voc", variant="paper", input_hw=416,
+                 backends=("xla", "xla_pm1", "mxu_pm1"), iters=2),
+            dict(name="yolov2_tiny_voc", variant="tiny",
+                 backends=("xla", "xla_pm1", "vpu_popcount",
+                           "vpu_direct", "vpu_direct_pool")),
+        ]
+    rows: list[dict] = []
+    for c in cases:
+        rows += bench_case(c.pop("name"), **c)
+
+    emit([{k: (f"{v:.3f}" if isinstance(v, float) else v)
+           for k, v in r.items()} for r in rows],
+         "§Workloads: image-in -> predictions-out latency per backend")
+
+    winners = {}
+    for r in rows:
+        key = f"{r['workload']}@{r['input_hw']}"
+        if key not in winners or r["e2e_ms"] < winners[key]["e2e_ms"]:
+            winners[key] = dict(backend=r["backend"], e2e_ms=r["e2e_ms"])
+    report = {
+        "device": f"{jax.default_backend()}:"
+                  f"{jax.devices()[0].device_kind}",
+        "smoke": smoke,
+        "rows": rows,
+        "summary": {
+            "n_rows": len(rows),
+            "winners": winners,
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out} ({len(rows)} rows; winners: "
+          + ", ".join(f"{k}:{v['backend']}" for k, v in winners.items())
+          + ")")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="benchmarks.workloads_bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny conformance variants only; still writes "
+                         "BENCH_workloads.json")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,11 +8,17 @@ Both modes front their engine with the shared server protocol
   executables (no manual warm-up), async double-buffered dispatch
   (``--sync`` for the blocking baseline), optional data-parallel batch
   sharding over the host devices (``--shard``).
+* ``--workload``  — serve a registered end-to-end workload
+  (``repro.workloads``): arbitrary-size images go through the workload's
+  preprocess hook, and the server scatters *decoded* predictions (top-k
+  labels / NMS'd boxes) instead of raw logits.
 * ``--mode lm``   — continuous-batching decode through the LMServer's
   identical submit/drain surface.
 
     PYTHONPATH=src python -m repro.launch.serve --mode bnn \
         --network yolov2-tiny --requests 32
+    PYTHONPATH=src python -m repro.launch.serve --mode bnn \
+        --workload yolov2_tiny_voc --input-hw 64 --requests 8
     PYTHONPATH=src python -m repro.launch.serve --mode lm --requests 4
 """
 
@@ -39,32 +45,56 @@ def _print_metrics(tag: str, m: dict) -> None:
 
 
 def serve_bnn(args) -> dict:
-    spec, (h, w, c), params = paper_nets.init(args.network)
-    if args.input_hw:          # fully-conv nets serve any resolution
-        h = w = args.input_hw
-    engine = PhoneBitEngine.from_trained(params, spec, (h, w),
-                                         matmul_mode=args.matmul_mode)
-    print(f"{args.network}: packed model {engine.model_bytes / 2**20:.1f} "
-          f"MiB, input {h}x{w}")
+    workload = None
+    if args.workload:
+        from repro import workloads
+
+        workload = workloads.get(args.workload,
+                                 matmul_mode=args.matmul_mode,
+                                 input_hw=args.input_hw or None)
+        engine, (h, w) = workload.engine, workload.input_hw
+        print(f"{workload.name}: packed model "
+              f"{workload.model_bytes / 2**20:.1f} MiB, input {h}x{w}, "
+              f"task {workload.task}")
+    else:
+        spec, (h, w, c), params = paper_nets.init(args.network)
+        if args.input_hw:      # fully-conv nets serve any resolution
+            h = w = args.input_hw
+        engine = PhoneBitEngine.from_trained(params, spec, (h, w),
+                                             matmul_mode=args.matmul_mode)
+        print(f"{args.network}: packed model "
+              f"{engine.model_bytes / 2**20:.1f} MiB, input {h}x{w}")
     mesh = None
     if args.shard and len(jax.devices()) > 1:
         mesh = make_host_mesh(data=len(jax.devices()), model=1)
     server = InferenceServer(
         engine, max_batch=args.batch, max_wait_s=0.0,
         buckets=buckets_for(args.batch),
-        async_dispatch=not args.sync, mesh=mesh)
+        async_dispatch=not args.sync, mesh=mesh,
+        preprocess=workload.preprocess_hook if workload else None)
     compile_s = server.compile_buckets()
     print(f"compiled buckets {list(compile_s)} in "
           f"{sum(compile_s.values()):.2f}s")
 
     rng = np.random.default_rng(0)
+    # Workload requests arrive at an off-network size to exercise the
+    # preprocess hook; raw-engine requests arrive network-sized.
+    req_hw = (h + h // 2, w * 2) if workload else (h, w)
+    reqs = []
     for _ in range(args.requests):
-        server.submit(rng.integers(0, 256, (h, w, c), dtype=np.uint8),
-                      deadline_s=args.deadline_s)
-    done = server.drain()
+        reqs.append(server.submit(
+            rng.integers(0, 256, (*req_hw, 3), dtype=np.uint8),
+            deadline_s=args.deadline_s))
+    server.drain()
     m = server.metrics()
     _print_metrics("bnn", m)
-    assert len(done) + m["dropped"] >= args.requests
+    if workload is not None:
+        first = next((r for r in reqs if r.result is not None), None)
+        if first is not None:
+            preds = workload.format(first.result)
+            print(f"[bnn] request 0 -> {len(preds)} predictions; "
+                  f"top: {preds[:3]}")
+    assert sum(r.done for r in reqs) >= args.requests
     return m
 
 
@@ -101,6 +131,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("bnn", "lm"), default="bnn")
     ap.add_argument("--network", default="yolov2-tiny")
+    ap.add_argument("--workload", default=None,
+                    help="serve a registered end-to-end workload "
+                         "(repro.workloads: e.g. yolov2_tiny_voc) — "
+                         "preprocess hook + decoded predictions")
     ap.add_argument("--matmul-mode", default="xla")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)

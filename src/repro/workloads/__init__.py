@@ -1,0 +1,32 @@
+"""End-to-end paper workloads (DESIGN.md §8).
+
+preprocess    letterbox / center-crop-resize uint8 transforms (jit-able,
+              serving-hook adaptable) + box coordinate mapping
+postprocess   top-k classification head, YOLOv2 decode, fixed-size pure
+              ``lax`` NMS (compiles into the serve path)
+workload      the ``Workload`` bundle (preprocess + engine + postprocess),
+              ``WorkloadEngine`` (per-bucket executables serving decoded
+              rows), and the registry: ``workloads.get("yolov2_tiny_voc")``
+"""
+
+from repro.workloads.postprocess import (DetectConfig, VOC_CLASSES,
+                                         YOLOV2_TINY_VOC_ANCHORS,
+                                         decode_yolo, detect_head,
+                                         detections_to_dicts, iou_matrix,
+                                         nms_fixed, topk_head)
+from repro.workloads.preprocess import (as_server_hook, center_crop_resize,
+                                        letterbox, letterbox_boxes,
+                                        letterbox_params, unletterbox_boxes)
+from repro.workloads.workload import (Workload, WorkloadEngine,
+                                      checkpoint_params, get, names,
+                                      register)
+
+__all__ = [
+    "Workload", "WorkloadEngine", "get", "names", "register",
+    "checkpoint_params",
+    "DetectConfig", "VOC_CLASSES", "YOLOV2_TINY_VOC_ANCHORS",
+    "decode_yolo", "detect_head", "detections_to_dicts", "iou_matrix",
+    "nms_fixed", "topk_head",
+    "as_server_hook", "center_crop_resize", "letterbox", "letterbox_boxes",
+    "letterbox_params", "unletterbox_boxes",
+]

@@ -1,0 +1,212 @@
+"""Postprocess heads: top-k classification and YOLOv2 decode + NMS.
+
+Both heads are pure ``jnp``/``lax`` functions of statically-shaped inputs
+with **fixed-size outputs**, so they jit into the serve path (DESIGN.md
+§8.2): one compiled executable per batch bucket covers forward *and*
+decode, and the server scatters one dense row per request.
+
+Row formats (everything a plain float32 array so the serving scatter path
+stays a single ``np.asarray``):
+
+* classification — ``(k, 2)`` rows ``[class_index, probability]``,
+  probability-descending;
+* detection      — ``(max_det, 6)`` rows ``[x1, y1, x2, y2, score,
+  class_index]`` in network-input pixels, score-descending; rows past the
+  surviving detections are all-zero (``score > 0`` is the validity mask).
+
+The detection head implements the YOLOv2 decode (arXiv:1612.08242 §2):
+the 13x13x125 map reshapes to 5 anchors x (tx, ty, tw, th, to, 20 class
+logits); box centers are ``sigmoid(txy)`` offset by the cell index, sizes
+are anchor-scaled ``exp(twh)``, objectness is ``sigmoid(to)`` and class
+scores are ``softmax`` — each box scored by its best class (the standard
+single-label decode).  NMS is the greedy algorithm on the top-``max_det``
+candidates, expressed as a ``fori_loop`` over a precomputed IoU matrix so
+it compiles (no data-dependent shapes anywhere).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# YOLOv2-Tiny VOC anchor priors, in grid-cell units (darknet cfg).
+YOLOV2_TINY_VOC_ANCHORS = ((1.08, 1.19), (3.42, 4.41), (6.63, 11.38),
+                           (9.42, 5.11), (16.62, 10.52))
+
+VOC_CLASSES = (
+    "aeroplane", "bicycle", "bird", "boat", "bottle", "bus", "car", "cat",
+    "chair", "cow", "diningtable", "dog", "horse", "motorbike", "person",
+    "pottedplant", "sheep", "sofa", "train", "tvmonitor")
+
+# Score assigned to candidates below score_thresh: far below any real
+# conf*prob in (0, 1], and recognizable after top_k as "not a detection".
+_NEG = jnp.float32(-1e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectConfig:
+    """Static decode/NMS parameters (part of the jit closure)."""
+    anchors: tuple[tuple[float, float], ...] = YOLOV2_TINY_VOC_ANCHORS
+    n_classes: int = 20
+    score_thresh: float = 0.3
+    iou_thresh: float = 0.45
+    max_det: int = 16
+    class_names: tuple[str, ...] | None = VOC_CLASSES
+
+    @property
+    def channels(self) -> int:
+        return len(self.anchors) * (5 + self.n_classes)
+
+
+# --------------------------------------------------------------------------
+# Classification head
+# --------------------------------------------------------------------------
+
+def topk_head(logits: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(N, n_classes) logits -> (N, k, 2) rows [class_index, probability]."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = lax.top_k(probs, min(k, logits.shape[-1]))
+    return jnp.stack([idx.astype(jnp.float32), vals], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# YOLOv2 decode
+# --------------------------------------------------------------------------
+
+def decode_yolo(feat: jnp.ndarray, cfg: DetectConfig,
+                input_hw: tuple[int, int]
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(N, Hg, Wg, A*(5+C)) raw map -> (boxes, scores, classes).
+
+    boxes: (N, Hg*Wg*A, 4) x1y1x2y2 in network-input pixels (clipped);
+    scores: (N, Hg*Wg*A) = objectness * best-class probability;
+    classes: (N, Hg*Wg*A) int32 best-class index.
+    """
+    n, hg, wg, ch = feat.shape
+    a = len(cfg.anchors)
+    assert ch == cfg.channels, (ch, cfg.channels)
+    f = feat.reshape(n, hg, wg, a, 5 + cfg.n_classes)
+
+    xy = jax.nn.sigmoid(f[..., 0:2])                     # in-cell offset
+    cx = jnp.arange(wg, dtype=jnp.float32)[None, None, :, None]
+    cy = jnp.arange(hg, dtype=jnp.float32)[None, :, None, None]
+    bx = (xy[..., 0] + cx) / wg                          # normalized center
+    by = (xy[..., 1] + cy) / hg
+    anchors = jnp.asarray(cfg.anchors, jnp.float32)      # (A, 2) grid units
+    bw = anchors[:, 0] * jnp.exp(f[..., 2]) / wg
+    bh = anchors[:, 1] * jnp.exp(f[..., 3]) / hg
+
+    conf = jax.nn.sigmoid(f[..., 4])
+    probs = jax.nn.softmax(f[..., 5:], axis=-1)
+    cls_idx = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    scores = conf * jnp.max(probs, axis=-1)
+
+    ih, iw = input_hw
+    x1 = jnp.clip((bx - bw / 2) * iw, 0, iw)
+    y1 = jnp.clip((by - bh / 2) * ih, 0, ih)
+    x2 = jnp.clip((bx + bw / 2) * iw, 0, iw)
+    y2 = jnp.clip((by + bh / 2) * ih, 0, ih)
+    boxes = jnp.stack([x1, y1, x2, y2], axis=-1)
+
+    m = hg * wg * a
+    return (boxes.reshape(n, m, 4), scores.reshape(n, m),
+            cls_idx.reshape(n, m))
+
+
+# --------------------------------------------------------------------------
+# Fixed-size greedy NMS (pure lax)
+# --------------------------------------------------------------------------
+
+def iou_matrix(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise IoU of (M, 4) x (K, 4) x1y1x2y2 boxes -> (M, K)."""
+    lt = jnp.maximum(a[:, None, :2], b[None, :, :2])
+    rb = jnp.minimum(a[:, None, 2:], b[None, :, 2:])
+    inter = jnp.prod(jnp.clip(rb - lt, 0, None), axis=-1)
+    area_a = jnp.prod(jnp.clip(a[:, 2:] - a[:, :2], 0, None), axis=-1)
+    area_b = jnp.prod(jnp.clip(b[:, 2:] - b[:, :2], 0, None), axis=-1)
+    union = area_a[:, None] + area_b[None, :] - inter
+    return jnp.where(union > 0, inter / union, 0.0)
+
+
+def nms_fixed(boxes: jnp.ndarray, scores: jnp.ndarray,
+              classes: jnp.ndarray | None = None, *,
+              iou_thresh: float = 0.45, score_thresh: float = 0.0,
+              max_det: int = 16) -> jnp.ndarray:
+    """Greedy NMS over one image's (M, 4) boxes -> (max_det, 6) rows
+    ``[x1, y1, x2, y2, score, class]``, score-descending, zero-padded.
+
+    Exactly the classic sequential algorithm — candidates visited in
+    score order, each kept iff its IoU with every already-kept box is
+    <= ``iou_thresh`` — restricted to the top-``max_det`` candidates so
+    everything is fixed-size and compiles.  With ``classes`` given, NMS
+    is class-aware (boxes of different classes never suppress each other,
+    via the per-class coordinate-offset trick).  Invariants (tested):
+    kept boxes have pairwise IoU <= ``iou_thresh`` (per class), scores
+    >= ``score_thresh`` *and* > 0 (the validity-mask convention), and
+    there are at most ``max_det`` of them.
+    """
+    m = boxes.shape[0]
+    k = min(max_det, m)
+    if classes is None:
+        classes = jnp.zeros((m,), jnp.int32)
+    # score > 0 is the row-validity convention, so a zero/negative score
+    # can never occupy a survivor slot even at score_thresh=0.
+    s = jnp.where((scores >= score_thresh) & (scores > 0), scores, _NEG)
+    top_s, idx = lax.top_k(s, k)
+    cand = boxes[idx]
+    cand_cls = classes[idx]
+
+    # Class-aware: translate each class into its own disjoint region so
+    # cross-class IoU is exactly 0 in one shared matrix.
+    span = jnp.max(jnp.abs(boxes)) + 1.0
+    shifted = cand + (cand_cls.astype(boxes.dtype) * 4.0 * span)[:, None]
+    ious = iou_matrix(shifted, shifted)
+    valid = top_s > _NEG / 2                  # above score_thresh
+
+    def body(i, keep):
+        overlapped = keep & (ious[i] > iou_thresh) & \
+            (jnp.arange(k) != i)
+        return keep.at[i].set(valid[i] & ~jnp.any(overlapped))
+
+    keep = lax.fori_loop(0, k, body, jnp.zeros((k,), bool))
+
+    rows = jnp.concatenate(
+        [cand, top_s[:, None], cand_cls.astype(jnp.float32)[:, None]],
+        axis=-1)
+    rows = jnp.where(keep[:, None], rows, 0.0)
+    # Compact: surviving rows first (they are already score-descending,
+    # and jnp.argsort on the drop mask is stable), zeros after.
+    rows = rows[jnp.argsort(~keep, stable=True)]
+    if k < max_det:
+        rows = jnp.pad(rows, ((0, max_det - k), (0, 0)))
+    return rows
+
+
+def detect_head(feat: jnp.ndarray, cfg: DetectConfig,
+                input_hw: tuple[int, int]) -> jnp.ndarray:
+    """Raw YOLO map -> (N, max_det, 6) decoded detections (see module
+    docstring for the row format).  Batched via vmap; jit-able."""
+    boxes, scores, classes = decode_yolo(feat, cfg, input_hw)
+    return jax.vmap(
+        lambda b, s, c: nms_fixed(
+            b, s, c, iou_thresh=cfg.iou_thresh,
+            score_thresh=cfg.score_thresh, max_det=cfg.max_det)
+    )(boxes, scores, classes)
+
+
+def detections_to_dicts(rows, cfg: DetectConfig) -> list[dict]:
+    """One image's (max_det, 6) rows -> readable dicts (valid rows only)."""
+    import numpy as np
+
+    out = []
+    for x1, y1, x2, y2, score, cls in np.asarray(rows):
+        if score <= 0:
+            continue
+        cls = int(cls)
+        name = (cfg.class_names[cls] if cfg.class_names else str(cls))
+        out.append(dict(box=[float(x1), float(y1), float(x2), float(y2)],
+                        score=float(score), class_id=cls, label=name))
+    return out

@@ -1,0 +1,137 @@
+"""Image preprocessing for the paper workloads (DESIGN.md §8.1).
+
+The engine consumes raw ``uint8`` HWC pixels — the /255 normalization and
+the first layer's BN are folded into the bit-plane layer's integer
+thresholds at conversion time (DESIGN.md §3.3/§3.4) — so every transform
+here maps an arbitrary-size uint8 image to a network-size uint8 image:
+
+* :func:`letterbox`          — aspect-preserving resize onto a gray canvas
+                               (detection; the YOLO convention), with
+                               :func:`letterbox_boxes` /
+                               :func:`unletterbox_boxes` mapping box
+                               coordinates between the two frames;
+* :func:`center_crop_resize` — shorter-side resize + center crop
+                               (classification; the AlexNet/VGG eval
+                               convention).
+
+All transforms are pure ``jnp`` functions of statically-shaped inputs, so
+they jit (one trace per distinct input size) and compose into the serving
+path via :func:`as_server_hook`, which adapts a transform to
+``InferenceServer``'s per-payload ``preprocess=`` hook (numpy in/out,
+jit-cached).  The scheduler's zero-filled padding rows pass through the
+same hook, so pads reach the engine at the network shape like every real
+payload.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# Gray letterbox fill: the YOLO convention (114 in most implementations).
+LETTERBOX_FILL = 114
+
+
+# --------------------------------------------------------------------------
+# Letterbox (detection)
+# --------------------------------------------------------------------------
+
+def letterbox_params(in_hw: tuple[int, int], out_hw: tuple[int, int]
+                     ) -> tuple[float, tuple[int, int], tuple[int, int]]:
+    """The static geometry of a letterbox: (scale, (top, left), (nh, nw)).
+
+    One definition shared by the image transform and the box mappers, so
+    coordinates always round-trip with the pixels they refer to.
+    """
+    h, w = in_hw
+    oh, ow = out_hw
+    scale = min(oh / h, ow / w)
+    nh, nw = min(int(round(h * scale)), oh), min(int(round(w * scale)), ow)
+    top, left = (oh - nh) // 2, (ow - nw) // 2
+    return scale, (top, left), (nh, nw)
+
+
+def letterbox(img: jnp.ndarray, out_hw: tuple[int, int],
+              fill: int = LETTERBOX_FILL) -> jnp.ndarray:
+    """Aspect-preserving resize of an (H, W, C) uint8 image onto a
+    ``fill``-gray (out_h, out_w, C) canvas, content centered."""
+    h, w, c = img.shape
+    oh, ow = out_hw
+    _, (top, left), (nh, nw) = letterbox_params((h, w), out_hw)
+    resized = jax.image.resize(img.astype(jnp.float32), (nh, nw, c),
+                               method="bilinear")
+    canvas = jnp.full((oh, ow, c), float(fill), jnp.float32)
+    canvas = lax.dynamic_update_slice(canvas, resized, (top, left, 0))
+    return jnp.clip(jnp.round(canvas), 0, 255).astype(jnp.uint8)
+
+
+def letterbox_boxes(boxes: np.ndarray, in_hw: tuple[int, int],
+                    out_hw: tuple[int, int]) -> np.ndarray:
+    """Map (..., 4) x1y1x2y2 boxes from original-image pixels to
+    letterboxed network pixels."""
+    scale, (top, left), _ = letterbox_params(in_hw, out_hw)
+    boxes = np.asarray(boxes, np.float32)
+    return boxes * scale + np.array([left, top, left, top], np.float32)
+
+
+def unletterbox_boxes(boxes: np.ndarray, in_hw: tuple[int, int],
+                      out_hw: tuple[int, int]) -> np.ndarray:
+    """Inverse of :func:`letterbox_boxes`: network-frame boxes back to
+    original-image pixels, clipped to the image bounds."""
+    scale, (top, left), _ = letterbox_params(in_hw, out_hw)
+    boxes = np.asarray(boxes, np.float32)
+    out = (boxes - np.array([left, top, left, top], np.float32)) / scale
+    h, w = in_hw
+    return np.clip(out, 0, np.array([w, h, w, h], np.float32))
+
+
+# --------------------------------------------------------------------------
+# Center crop (classification)
+# --------------------------------------------------------------------------
+
+def center_crop_resize(img: jnp.ndarray,
+                       out_hw: tuple[int, int]) -> jnp.ndarray:
+    """Shorter-side resize then center crop to (out_h, out_w), uint8 in/out.
+
+    The shorter side is resized to ``ceil(max(out_hw) * 8 / 7)`` — the
+    256-for-224 eval convention, generalized so it holds at any (test-size)
+    resolution — then the center (out_h, out_w) window is cropped.
+    """
+    h, w, c = img.shape
+    oh, ow = out_hw
+    short = -(-max(oh, ow) * 8 // 7)          # ceil; 256 when out is 224
+    scale = short / min(h, w)
+    nh = max(int(round(h * scale)), oh)
+    nw = max(int(round(w * scale)), ow)
+    resized = jax.image.resize(img.astype(jnp.float32), (nh, nw, c),
+                               method="bilinear")
+    out = lax.dynamic_slice(resized, ((nh - oh) // 2, (nw - ow) // 2, 0),
+                            (oh, ow, c))
+    return jnp.clip(jnp.round(out), 0, 255).astype(jnp.uint8)
+
+
+# --------------------------------------------------------------------------
+# Serving hook adapter
+# --------------------------------------------------------------------------
+
+def as_server_hook(transform: Callable[[jnp.ndarray], jnp.ndarray]
+                   ) -> Callable[[np.ndarray], np.ndarray]:
+    """Adapt a jnp image transform to ``InferenceServer(preprocess=...)``.
+
+    The hook takes one numpy payload and returns the network-size uint8
+    numpy image; the underlying transform is jit-compiled once per
+    distinct input shape (a fixed-size request stream compiles exactly
+    once — engine trace counts are unaffected either way).
+    """
+    jitted = jax.jit(transform)
+
+    @functools.wraps(transform)
+    def hook(payload: np.ndarray) -> np.ndarray:
+        return np.asarray(jitted(jnp.asarray(payload)))
+
+    return hook

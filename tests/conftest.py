@@ -33,3 +33,19 @@ except ImportError:
 
     sys.modules["hypothesis"] = _hypothesis_stub
     sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="rewrite tests/golden/ fixtures from today's outputs "
+             "(workload conformance harness) instead of comparing")
+
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def regen_golden(request) -> bool:
+    """True when the run should regenerate golden fixtures in place."""
+    return request.config.getoption("--regen-golden")

@@ -1,0 +1,223 @@
+"""Cross-backend workload conformance harness (DESIGN.md §8.4).
+
+The machinery behind ``tests/test_workloads.py``:
+
+* **conformance workloads** — the three paper nets at conformance scale
+  (tiny topology-preserving variants; the real YOLOv2-Tiny spec is also
+  swept at reduced resolution since it is fully convolutional), built
+  from seeded checkpoints so every run reconstructs identical bits;
+* **backend sweep** — run one workload's raw network output and decoded
+  predictions under every executor backend and assert bit-exactness
+  against the ``xla`` reference (pairwise equality follows);
+* **served-bucket sweep** — stream requests through an
+  ``InferenceServer`` at every bucket size and assert each served row is
+  bit-exact vs the engine's ``cross_check`` oracle (which itself asserts
+  graph == legacy-flat), with zero serve-time retraces;
+* **golden fixtures** — tiny seeded inputs and expected outputs per net
+  in ``tests/golden/*.npz``.  The *packed* artifact (the last packed
+  layer's channel-packed words — integer end to end) is compared
+  bit-exactly; the float head and decoded predictions use tight
+  tolerances so fixtures survive BLAS/XLA version changes.  Regenerate
+  with ``pytest tests/test_workloads.py --regen-golden``.
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import workloads
+from repro.core import bnn_model, converter
+from repro.runtime.executor import BACKENDS
+from repro.workloads import DetectConfig
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+
+# Low-threshold detect config so seeded random weights still yield boxes.
+CONFORMANCE_DETECT = DetectConfig(score_thresh=0.02, iou_thresh=0.45,
+                                  max_det=8)
+
+SEED = 7
+
+
+def conformance_workload(name: str, *, matmul_mode: str = "xla"
+                         ) -> workloads.Workload:
+    """One conformance-scale workload, deterministic in (name, SEED)."""
+    kw: dict = dict(variant="tiny", seed=SEED, matmul_mode=matmul_mode)
+    if name == "yolov2_tiny_voc":
+        kw["detect"] = CONFORMANCE_DETECT
+    return workloads.get(name, **kw)
+
+
+CONFORMANCE_NAMES = ("alexnet_imagenet", "vgg16_imagenet",
+                     "yolov2_tiny_voc")
+
+
+def seeded_batch(wl: workloads.Workload, batch: int = 2,
+                 seed: int = SEED) -> jnp.ndarray:
+    """Network-size uint8 inputs, deterministic in (shape, seed)."""
+    h, w = wl.input_hw
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 256, (batch, h, w, 3)), jnp.uint8)
+
+
+def packed_tail(wl: workloads.Workload, x: jnp.ndarray) -> np.ndarray:
+    """The last packed layer's output words: the integer (bit-exact)
+    engine artifact, before the float head touches anything."""
+    spec = wl.spec
+    cut = len(spec)
+    while cut > 0 and isinstance(spec[cut - 1],
+                                 (bnn_model.FloatDense,
+                                  bnn_model.FloatConv)):
+        cut -= 1
+    packed = converter.convert(wl.params, spec, wl.input_hw)
+    out = bnn_model.packed_forward(packed[:cut], spec[:cut], x)
+    assert out.dtype in (jnp.int32, jnp.uint32), out.dtype  # packed words
+    return np.asarray(out)
+
+
+# --------------------------------------------------------------------------
+# Sweeps
+# --------------------------------------------------------------------------
+
+def sweep_backends(name: str, x: jnp.ndarray | None = None,
+                   backends: tuple[str, ...] = BACKENDS) -> dict:
+    """Every backend's (raw, decoded) outputs for one workload; asserts
+    bit-exactness vs the ``xla`` reference and returns the reference."""
+    ref_wl = conformance_workload(name, matmul_mode="xla")
+    x = seeded_batch(ref_wl) if x is None else x
+
+    def raw_and_decoded(wl):
+        # One forward per backend: decode the raw output directly rather
+        # than re-running the (interpret-mode-slow) network via engine().
+        raw = wl.engine.raw(x)
+        return np.asarray(raw), np.asarray(wl.engine._head_jit(raw))
+
+    ref_raw, ref_dec = raw_and_decoded(ref_wl)
+    for backend in backends:
+        if backend == "xla":
+            continue
+        got_raw, got_dec = raw_and_decoded(
+            conformance_workload(name, matmul_mode=backend))
+        np.testing.assert_array_equal(
+            got_raw, ref_raw,
+            err_msg=f"{name}: raw output diverges on {backend}")
+        np.testing.assert_array_equal(
+            got_dec, ref_dec,
+            err_msg=f"{name}: decoded predictions diverge on {backend}")
+    return dict(raw=ref_raw, decoded=ref_dec, x=np.asarray(x))
+
+
+def sweep_served_buckets(wl: workloads.Workload,
+                         buckets: tuple[int, ...] = (1, 2, 4),
+                         n_requests: int = 6, raw_hw=(44, 60)) -> None:
+    """Serve off-network-size requests through every bucket size and
+    assert each decoded row is bit-exact vs the cross_check oracle, with
+    zero serve-time retraces.
+
+    The reference reproduces each group's exact padded batch layout
+    (same preprocessing hook, same zero-fill rows): XLA float kernels
+    may differ in the last ulp between *row positions* within a batch,
+    so bit-exactness is defined against the batch the server actually
+    executed — which cross_check then also pins against the legacy flat
+    path.
+    """
+    server = wl.server(max_batch=max(buckets), max_wait_s=0.0,
+                       buckets=buckets)
+    server.compile_buckets()
+    before = wl.engine.trace_count
+    rng = np.random.default_rng(SEED)
+    imgs = [rng.integers(0, 256, (*raw_hw, 3), dtype=np.uint8)
+            for _ in range(n_requests)]
+
+    # Mixed group sizes force every bucket — groups that land between
+    # bucket sizes serve zero-padded.
+    groups: list[tuple[list, list]] = []        # (requests, padded batch)
+    served = 0
+    for group in (1, 2, n_requests - 3):
+        if group <= 0:
+            continue
+        batch = imgs[served:served + group]
+        reqs = [server.submit(im) for im in batch]
+        server.drain()
+        served += group
+        bucket = server.scheduler.bucket_for(group)
+        groups.append(
+            (reqs, batch + [np.zeros_like(batch[-1])] * (bucket - group)))
+    assert served == n_requests
+    assert wl.engine.trace_count == before, "serve-time retrace"
+    assert server.metrics()["served"] == n_requests
+
+    # References after the trace assertion: cross_check compiles its own
+    # (non-donated) executors, which is warmup, not a serve-time retrace.
+    for reqs, padded in groups:
+        x = jnp.asarray(np.stack([wl.preprocess_hook(p) for p in padded]))
+        ref = np.asarray(wl.engine.cross_check(x))
+        for req, expect in zip(reqs, ref):
+            np.testing.assert_array_equal(np.asarray(req.result), expect)
+
+
+# --------------------------------------------------------------------------
+# Golden fixtures
+# --------------------------------------------------------------------------
+
+def golden_path(name: str) -> pathlib.Path:
+    return GOLDEN_DIR / f"{name}.npz"
+
+
+def compute_golden(name: str) -> dict[str, np.ndarray]:
+    """The golden payload for one net: seeded input, packed-tail words,
+    raw float output, decoded predictions."""
+    wl = conformance_workload(name)
+    x = seeded_batch(wl)
+    return dict(x=np.asarray(x),
+                packed_tail=packed_tail(wl, x),
+                raw=np.asarray(wl.engine.raw(x)),
+                decoded=np.asarray(wl.engine(x)))
+
+
+def save_golden(name: str, payload: dict[str, np.ndarray]) -> pathlib.Path:
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    path = golden_path(name)
+    np.savez_compressed(path, **payload)
+    return path
+
+
+def load_golden(name: str) -> dict[str, np.ndarray]:
+    with np.load(golden_path(name)) as z:
+        return {k: z[k] for k in z.files}
+
+
+def check_golden(name: str, *, regen: bool = False) -> None:
+    """Compare today's outputs against the checked-in fixture.
+
+    The input and the packed tail must match bit-for-bit (pure integer
+    path).  The float head and decoded boxes/probabilities get 1e-4
+    absolute tolerance; decoded class indices and the detection validity
+    mask must match exactly.
+    """
+    fresh = compute_golden(name)
+    if regen or not golden_path(name).exists():
+        save_golden(name, fresh)
+    golden = load_golden(name)
+    assert set(golden) == set(fresh), (set(golden), set(fresh))
+    np.testing.assert_array_equal(fresh["x"], golden["x"])
+    np.testing.assert_array_equal(
+        fresh["packed_tail"], golden["packed_tail"],
+        err_msg=f"{name}: packed integer artifact regressed")
+    np.testing.assert_allclose(fresh["raw"], golden["raw"],
+                               rtol=0, atol=1e-4)
+    got_d, want_d = fresh["decoded"], golden["decoded"]
+    assert got_d.shape == want_d.shape
+    if conformance_workload(name).task == "classify":
+        # rows are [class_index, probability]: indices exact, probs close
+        np.testing.assert_array_equal(got_d[..., 0], want_d[..., 0])
+    else:
+        # rows are [x1 y1 x2 y2 score class]: the surviving-detection
+        # mask and each survivor's class must match exactly
+        np.testing.assert_array_equal(got_d[..., 4] > 0,
+                                      want_d[..., 4] > 0)
+        np.testing.assert_array_equal(got_d[..., 5], want_d[..., 5])
+    np.testing.assert_allclose(got_d, want_d, rtol=0, atol=1e-4)

@@ -5,6 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import bnn_model, converter, packing
 from repro.core.bnn_model import BConv, BDense, FloatConv, FloatDense, Pool
@@ -444,3 +445,66 @@ class TestEngineGraphPath:
         np.testing.assert_array_equal(
             np.asarray(GraphExecutor(ga, "xla")(x)),
             np.asarray(GraphExecutor(gt, "xla")(x)))
+
+
+# --------------------------------------------------------------------------
+# Differential backend fuzz (workload-conformance satellite)
+# --------------------------------------------------------------------------
+
+def _random_spec(rng: np.random.Generator) -> tuple[list, int]:
+    """A random small-but-legal network: bit-plane first conv, 1-3 hidden
+    packed conv blocks (random kernel/channels, optional pool), then
+    either a packed-dense + float-dense tail or a 1x1 float-conv head.
+    Returns (spec, input_hw)."""
+    hw0 = hw = int(rng.choice([8, 16]))
+    c = int(rng.choice([16, 24, 32]))
+    spec = [BConv(3, c, kernel=3, stride=1, pad=1, first=True)]
+    for _ in range(int(rng.integers(1, 4))):
+        kernel = int(rng.choice([1, 3]))
+        c_out = int(rng.choice([16, 32, 40]))
+        spec.append(BConv(c, c_out, kernel=kernel, stride=1,
+                          pad=kernel // 2))
+        c = c_out
+        if hw >= 8 and rng.random() < 0.5:
+            spec.append(Pool(2, 2))
+            hw //= 2
+    if rng.random() < 0.5:
+        spec.append(BDense(hw * hw * c, 32))
+        spec.append(FloatDense(32, 10))
+    else:
+        spec.append(FloatConv(c, 8, kernel=1, stride=1, pad=0))
+    return spec, hw0
+
+
+class TestDifferentialFuzz:
+    """Random graph specs executed on every valid backend, asserting
+    bit-exactness pairwise (via the shared xla reference — equality is
+    transitive).  The Pallas backends run in interpret mode off-TPU, so
+    shapes stay small."""
+
+    @given(st.integers(0, 10**9))
+    @settings(max_examples=4, deadline=None)
+    def test_random_spec_all_backend_pairs(self, seed):
+        rng = np.random.default_rng(seed)
+        spec, hw0 = _random_spec(rng)
+        params = _randomize_bn(
+            bnn_model.init_params(jax.random.key(seed % (2**31)), spec),
+            seed=seed % 7919)
+        packed = converter.convert(params, spec, (hw0, hw0))
+        # Pool-fused graph so conv+pool pairs exercise packed_conv_pool
+        # (every backend accepts it; string modes degrade where needed).
+        g = runtime.fuse_pool_epilogue(lower_packed(spec, packed,
+                                                    (hw0, hw0)))
+        x = jnp.asarray(rng.integers(0, 256, (2, hw0, hw0, 3)), jnp.uint8)
+        ref = np.asarray(GraphExecutor(g, "xla")(x))
+        np.testing.assert_array_equal(        # graph == flat oracle
+            ref, np.asarray(bnn_model.packed_forward(packed, spec, x)))
+        for backend in ("xla_pm1", "mxu_pm1"):
+            np.testing.assert_array_equal(
+                np.asarray(GraphExecutor(g, backend)(x)), ref,
+                err_msg=f"{backend} diverges on spec {spec}")
+        # interpret-mode Pallas backends: batch 1 keeps them fast
+        for backend in ("vpu_popcount", "vpu_direct", "vpu_direct_pool"):
+            got = np.asarray(GraphExecutor(g, backend)(x[:1]))
+            np.testing.assert_array_equal(
+                got, ref[:1], err_msg=f"{backend} diverges on spec {spec}")

@@ -90,6 +90,34 @@ class TestSchedulerPolicy:
         assert [r.payload for r in batch] == ["a", "c"]
         assert doomed.done and s.dropped == 1
 
+    def test_deadline_shedding_wall_clock(self):
+        """Smoke the shed policy against the REAL monotonic clock (every
+        other policy test injects a fake one, so a regression in the
+        default clock path could hide).  Margins are generous — the
+        doomed deadline (50 ms) is 5x shorter than the sleep (250 ms),
+        and the patient deadline (60 s) is ~240x longer — so scheduler
+        slowness cannot flip the outcome."""
+        import time as _time
+
+        s = BatchScheduler(max_batch=4, max_wait_s=0.0, buckets=(1, 2, 4))
+        patient = s.submit("p", deadline_s=60.0)
+        doomed = s.submit("d", deadline_s=0.05)
+        _time.sleep(0.25)
+        batch = s.next_batch()                     # no now=: real clock
+        assert [r.payload for r in batch] == ["p"]
+        assert doomed.done and doomed.result is None
+        assert s.dropped == 1 and not patient.result
+
+    def test_max_wait_wall_clock(self):
+        """ready() flips from False to True by real elapsed time."""
+        import time as _time
+
+        s = BatchScheduler(max_batch=8, max_wait_s=0.1, buckets=(1, 8))
+        s.submit("a")
+        assert not s.ready()          # 100 ms cannot have elapsed yet
+        _time.sleep(0.3)
+        assert s.ready()
+
     def test_drain_only_calls_run_at_bucket_sizes(self):
         buckets = (1, 2, 4, 8)
         s = BatchScheduler(max_batch=8, max_wait_s=0.0, buckets=buckets)

@@ -1,0 +1,329 @@
+"""Workload subsystem tests (DESIGN.md §8).
+
+Preprocessing geometry, NMS/decode math (property-based + numpy
+references), the Workload/WorkloadEngine surface, golden-fixture
+regressions per paper net, and the cross-backend / served-bucket
+conformance sweeps driven by ``tests/harness.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import harness
+from repro import workloads
+from repro.workloads import (DetectConfig, decode_yolo, detect_head,
+                             iou_matrix, letterbox, letterbox_boxes,
+                             nms_fixed, topk_head, unletterbox_boxes)
+
+
+# --------------------------------------------------------------------------
+# Preprocessing
+# --------------------------------------------------------------------------
+
+class TestPreprocess:
+    def test_letterbox_geometry(self):
+        img = jnp.asarray(np.full((100, 50, 3), 200, np.uint8))
+        out = np.asarray(letterbox(img, (64, 64)))
+        assert out.shape == (64, 64, 3) and out.dtype == np.uint8
+        # 100x50 scales by 0.64 -> 64x32 content, 16px gray bars each side
+        assert (out[:, :16] == workloads.preprocess.LETTERBOX_FILL).all()
+        assert (out[:, -16:] == workloads.preprocess.LETTERBOX_FILL).all()
+        assert (out[:, 16:48] == 200).all()
+
+    def test_letterbox_network_size_is_identity(self):
+        rng = np.random.default_rng(0)
+        img = rng.integers(0, 256, (64, 64, 3), dtype=np.uint8)
+        out = np.asarray(letterbox(jnp.asarray(img), (64, 64)))
+        np.testing.assert_array_equal(out, img)
+
+    def test_center_crop_resize(self):
+        rng = np.random.default_rng(1)
+        img = rng.integers(0, 256, (37, 91, 3), dtype=np.uint8)
+        out = np.asarray(workloads.center_crop_resize(jnp.asarray(img),
+                                                      (16, 16)))
+        assert out.shape == (16, 16, 3) and out.dtype == np.uint8
+
+    def test_server_hook_matches_transform(self):
+        wl = harness.conformance_workload("yolov2_tiny_voc")
+        rng = np.random.default_rng(2)
+        img = rng.integers(0, 256, (50, 70, 3), dtype=np.uint8)
+        np.testing.assert_array_equal(
+            wl.preprocess_hook(img),
+            np.asarray(wl.preprocess(jnp.asarray(img))))
+
+    @given(st.integers(8, 200), st.integers(8, 200),
+           st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_letterbox_box_roundtrip_within_1px(self, h, w, seed):
+        """Box coords mapped into the letterbox frame and back land
+        within 1px of where they started (the satellite invariant)."""
+        rng = np.random.default_rng(seed)
+        x1, y1 = rng.uniform(0, w - 1), rng.uniform(0, h - 1)
+        box = np.array([[x1, y1, rng.uniform(x1, w), rng.uniform(y1, h)]])
+        fwd = letterbox_boxes(box, (h, w), (64, 64))
+        back = unletterbox_boxes(fwd, (h, w), (64, 64))
+        assert np.abs(back - box).max() < 1.0
+
+
+# --------------------------------------------------------------------------
+# NMS invariants (property-based)
+# --------------------------------------------------------------------------
+
+def _random_boxes(rng, n, extent=100.0):
+    x1y1 = rng.uniform(0, extent * 0.8, (n, 2))
+    wh = rng.uniform(1, extent * 0.4, (n, 2))
+    return np.concatenate([x1y1, x1y1 + wh], -1).astype(np.float32)
+
+
+def _valid_rows(rows):
+    rows = np.asarray(rows)
+    return rows[rows[:, 4] > 0]
+
+
+class TestNMSInvariants:
+    @given(st.integers(2, 24), st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_permutation_invariance(self, n, seed):
+        rng = np.random.default_rng(seed)
+        boxes = _random_boxes(rng, n)
+        scores = rng.uniform(0.01, 1, n).astype(np.float32)
+        perm = rng.permutation(n)
+        a = _valid_rows(nms_fixed(jnp.asarray(boxes), jnp.asarray(scores),
+                                  iou_thresh=0.5, max_det=n))
+        b = _valid_rows(nms_fixed(jnp.asarray(boxes[perm]),
+                                  jnp.asarray(scores[perm]),
+                                  iou_thresh=0.5, max_det=n))
+        np.testing.assert_array_equal(a, b)
+
+    @given(st.integers(2, 24), st.floats(0.1, 0.9),
+           st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_kept_boxes_iou_bounded(self, n, iou_t, seed):
+        """The defining greedy-NMS invariant: no two surviving boxes of
+        the same class overlap by more than the threshold."""
+        rng = np.random.default_rng(seed)
+        kept = _valid_rows(nms_fixed(
+            jnp.asarray(_random_boxes(rng, n)),
+            jnp.asarray(rng.uniform(0.01, 1, n).astype(np.float32)),
+            iou_thresh=iou_t, max_det=n))
+        if len(kept) > 1:
+            ious = np.array(iou_matrix(jnp.asarray(kept[:, :4]),
+                                       jnp.asarray(kept[:, :4])))
+            np.fill_diagonal(ious, 0)
+            assert ious.max() <= iou_t + 1e-6
+
+    @given(st.integers(2, 24), st.integers(1, 6), st.floats(0.0, 0.8),
+           st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_k_cap_and_score_floor(self, n, max_det, score_t, seed):
+        rng = np.random.default_rng(seed)
+        rows = np.asarray(nms_fixed(
+            jnp.asarray(_random_boxes(rng, n)),
+            jnp.asarray(rng.uniform(0.01, 1, n).astype(np.float32)),
+            iou_thresh=0.5, score_thresh=score_t, max_det=max_det))
+        assert rows.shape == (max_det, 6)
+        kept = _valid_rows(rows)
+        assert len(kept) <= max_det
+        assert (kept[:, 4] >= score_t).all()
+        # survivors first, score-descending; padding rows all-zero
+        assert (kept[:, 4] == np.sort(kept[:, 4])[::-1]).all()
+        assert (rows[len(kept):] == 0).all()
+
+    @given(st.integers(2, 16), st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_matches_numpy_greedy_reference(self, n, seed):
+        rng = np.random.default_rng(seed)
+        boxes = _random_boxes(rng, n)
+        scores = rng.uniform(0.01, 1, n).astype(np.float32)
+        iou_t = 0.45
+        order = np.argsort(-scores, kind="stable")
+        keep: list[int] = []
+        for i in order:
+            ious = np.asarray(iou_matrix(jnp.asarray(boxes[i][None]),
+                                         jnp.asarray(boxes[keep])))
+            if not keep or (ious <= iou_t).all():
+                keep.append(int(i))
+        expect = np.concatenate(
+            [boxes[keep], scores[keep, None],
+             np.zeros((len(keep), 1), np.float32)], -1)
+        got = _valid_rows(nms_fixed(jnp.asarray(boxes),
+                                    jnp.asarray(scores),
+                                    iou_thresh=iou_t, max_det=n))
+        np.testing.assert_array_equal(got, expect)
+
+    def test_zero_score_never_occupies_a_slot(self):
+        """score > 0 is the validity mask: a candidate scored exactly 0
+        must not survive even at score_thresh=0."""
+        boxes = jnp.asarray([[0, 0, 5, 5], [20, 20, 30, 30]], jnp.float32)
+        scores = jnp.asarray([0.0, 0.4], jnp.float32)
+        rows = np.asarray(nms_fixed(boxes, scores, iou_thresh=0.5,
+                                    score_thresh=0.0, max_det=2))
+        kept = _valid_rows(rows)
+        assert len(kept) == 1 and kept[0, 4] == np.float32(0.4)
+        assert (rows[1:] == 0).all()
+
+    def test_class_aware_nms_keeps_cross_class_overlaps(self):
+        boxes = jnp.asarray([[0, 0, 10, 10], [0, 0, 10, 10]], jnp.float32)
+        scores = jnp.asarray([0.9, 0.8], jnp.float32)
+        same = _valid_rows(nms_fixed(boxes, scores,
+                                     jnp.asarray([1, 1], jnp.int32),
+                                     iou_thresh=0.5, max_det=2))
+        diff = _valid_rows(nms_fixed(boxes, scores,
+                                     jnp.asarray([1, 2], jnp.int32),
+                                     iou_thresh=0.5, max_det=2))
+        assert len(same) == 1 and len(diff) == 2
+
+
+# --------------------------------------------------------------------------
+# YOLO decode math
+# --------------------------------------------------------------------------
+
+class TestDecode:
+    def test_decode_matches_numpy_reference(self):
+        cfg = DetectConfig(anchors=((1.0, 2.0), (3.0, 1.5)), n_classes=3,
+                           class_names=None)
+        rng = np.random.default_rng(4)
+        feat = rng.normal(0, 1.5, (2, 3, 4, cfg.channels)).astype(
+            np.float32)
+        boxes, scores, classes = decode_yolo(jnp.asarray(feat), cfg,
+                                             (48, 64))
+        f = feat.reshape(2, 3, 4, 2, 8)
+        sig = lambda v: 1 / (1 + np.exp(-v))
+        e = np.exp(f[..., 5:] - f[..., 5:].max(-1, keepdims=True))
+        probs = e / e.sum(-1, keepdims=True)
+        bx = (sig(f[..., 0]) + np.arange(4)[None, None, :, None]) / 4
+        by = (sig(f[..., 1]) + np.arange(3)[None, :, None, None]) / 3
+        anchors = np.array(cfg.anchors, np.float32)
+        bw = anchors[:, 0] * np.exp(f[..., 2]) / 4
+        bh = anchors[:, 1] * np.exp(f[..., 3]) / 3
+        score_ref = sig(f[..., 4]) * probs.max(-1)
+        x1 = np.clip((bx - bw / 2) * 64, 0, 64)
+        y1 = np.clip((by - bh / 2) * 48, 0, 48)
+        np.testing.assert_allclose(np.asarray(scores).reshape(2, 3, 4, 2),
+                                   score_ref, rtol=0, atol=1e-5)
+        np.testing.assert_array_equal(
+            np.asarray(classes).reshape(2, 3, 4, 2), probs.argmax(-1))
+        got_boxes = np.asarray(boxes).reshape(2, 3, 4, 2, 4)
+        np.testing.assert_allclose(got_boxes[..., 0], x1, rtol=0,
+                                   atol=1e-4)
+        np.testing.assert_allclose(got_boxes[..., 1], y1, rtol=0,
+                                   atol=1e-4)
+
+    def test_detect_head_fixed_shape_and_validity(self):
+        cfg = DetectConfig(n_classes=20, score_thresh=0.01, max_det=7)
+        rng = np.random.default_rng(5)
+        feat = jnp.asarray(rng.normal(0, 2, (3, 2, 2, cfg.channels)),
+                           jnp.float32)
+        rows = np.asarray(detect_head(feat, cfg, (32, 32)))
+        assert rows.shape == (3, 7, 6)
+        valid = rows[..., 4] > 0
+        assert valid.any()
+        assert (rows[..., :4] >= 0).all() and (rows[..., :4] <= 32).all()
+        assert (rows[~valid] == 0).all()
+
+    def test_topk_head(self):
+        logits = jnp.asarray([[0.0, 2.0, 1.0, -1.0]])
+        rows = np.asarray(topk_head(logits, 3))
+        assert rows.shape == (1, 3, 2)
+        np.testing.assert_array_equal(rows[0, :, 0], [1, 2, 0])
+        assert (np.diff(rows[0, :, 1]) <= 0).all()
+        np.testing.assert_allclose(rows[0, :, 1].sum(), 1.0, atol=0.2)
+
+
+# --------------------------------------------------------------------------
+# Workload surface
+# --------------------------------------------------------------------------
+
+class TestWorkloadSurface:
+    def test_registry(self):
+        assert set(workloads.names()) >= {"alexnet_imagenet",
+                                          "vgg16_imagenet",
+                                          "yolov2_tiny_voc"}
+        with pytest.raises(KeyError, match="unknown workload"):
+            workloads.get("resnet50")
+        with pytest.raises(ValueError, match="dense layers fixed"):
+            workloads.get("alexnet_imagenet", variant="tiny", input_hw=64)
+
+    def test_checkpoint_params_deterministic(self):
+        wl1 = harness.conformance_workload("alexnet_imagenet")
+        wl2 = harness.conformance_workload("alexnet_imagenet")
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                       np.asarray(b)),
+            wl1.params, wl2.params)
+
+    def test_engine_composes_head(self):
+        wl = harness.conformance_workload("vgg16_imagenet")
+        x = harness.seeded_batch(wl)
+        np.testing.assert_array_equal(
+            np.asarray(wl.engine(x)),
+            np.asarray(jax.jit(wl.postprocess)(wl.engine.raw(x))))
+
+    def test_engine_trace_count_covers_head(self):
+        wl = harness.conformance_workload("alexnet_imagenet")
+        x = harness.seeded_batch(wl, batch=1)
+        wl.engine(x)
+        n = wl.engine.trace_count
+        assert n >= 2                      # forward + head
+        wl.engine(x)
+        assert wl.engine.trace_count == n  # cached executable, no retrace
+
+    def test_predict_and_format(self):
+        wl = harness.conformance_workload("yolov2_tiny_voc")
+        rng = np.random.default_rng(6)
+        preds = wl.predict([rng.integers(0, 256, (40, 56, 3),
+                                         dtype=np.uint8)])
+        dets = wl.format(preds[0])
+        assert all({"box", "score", "class_id", "label"} <= set(d)
+                   for d in dets)
+        wc = harness.conformance_workload("alexnet_imagenet")
+        rows = wc.predict([rng.integers(0, 256, (20, 20, 3),
+                                        dtype=np.uint8)])
+        top = wc.format(rows[0])
+        assert len(top) == wc.top_k
+        assert all(0 <= t["prob"] <= 1 for t in top)
+
+
+# --------------------------------------------------------------------------
+# Golden-file regressions (regen: pytest --regen-golden)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", harness.CONFORMANCE_NAMES)
+def test_golden_fixture(name, regen_golden):
+    harness.check_golden(name, regen=regen_golden)
+
+
+# --------------------------------------------------------------------------
+# Conformance sweeps: all backends x all workloads, served buckets
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", harness.CONFORMANCE_NAMES)
+def test_all_backends_bit_exact(name):
+    harness.sweep_backends(name)
+
+
+def test_served_buckets_detect():
+    harness.sweep_served_buckets(
+        harness.conformance_workload("yolov2_tiny_voc"))
+
+
+def test_served_buckets_classify():
+    harness.sweep_served_buckets(
+        harness.conformance_workload("alexnet_imagenet"))
+
+
+def test_paper_yolo_serves_image_to_boxes():
+    """The acceptance path: the real YOLOv2-Tiny spec (reduced resolution
+    — fully convolutional) behind workloads.get -> InferenceServer, with
+    zero serve-time retraces and cross_check-exact decoded rows."""
+    wl = workloads.get("yolov2_tiny_voc", input_hw=64,
+                       detect=harness.CONFORMANCE_DETECT,
+                       seed=harness.SEED)
+    assert wl.name == "yolov2_tiny_voc"
+    # buckets (1, 4) with groups (1, 2, 1): the middle group of 2 serves
+    # zero-padded to bucket 4.
+    harness.sweep_served_buckets(wl, buckets=(1, 4), n_requests=4,
+                                 raw_hw=(96, 128))
