@@ -1,4 +1,8 @@
-"""Shared benchmark utilities: timing, CSV emission, tiny-model helpers.
+"""Shared benchmark utilities: CSV emission (+ timer re-exports).
+
+The timers live in :mod:`benchmarks.timing` (one implementation of the
+min-of-budget and median estimators instead of per-harness copies);
+``time_fn`` is re-exported here for the existing call sites.
 
 CPU-timing caveat: these harnesses time the pure-JAX ("xla") execution
 path on the host CPU — meaningful for RELATIVE comparisons (binary vs
@@ -8,23 +12,7 @@ Absolute TPU numbers come from the dry-run roofline (benchmarks/roofline).
 
 from __future__ import annotations
 
-import time
-from typing import Callable
-
-import jax
-import numpy as np
-
-
-def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds per call (after compile warmup)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+from benchmarks.timing import time_fn, time_stable  # noqa: F401
 
 
 def emit(rows: list[dict], title: str) -> None:

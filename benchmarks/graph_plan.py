@@ -23,8 +23,9 @@ import jax
 from benchmarks.common import emit
 from repro.core import bnn_model, converter
 from repro.models import paper_nets
-from repro.runtime import (Autotuner, fuse_pool_epilogue, infer_types,
-                           lower_packed, plan_memory)
+from repro.runtime import (Autotuner, chain_report, fuse_pool_epilogue,
+                           infer_types, lower_packed, partition_chains,
+                           plan_memory)
 from repro.runtime.autotune import _node_signature
 
 _HW = 104  # 416 / 4
@@ -86,6 +87,16 @@ def run(net: str = "yolov2-tiny") -> list[dict]:
                    f"{plan.naive_bytes()} B, "
                    f"{plan.naive_bytes() / max(plan.peak_bytes(), 1):.2f}x "
                    f"reuse)")
+
+    # Chain-fusion regions (DESIGN.md §9): which runs fuse into single
+    # megakernel calls, their VMEM arena plans, and the HBM boundary
+    # traffic each region removes vs the per-node path.
+    chains = partition_chains(graph, in_shape, types=types)
+    region_rows = chain_report(chains)
+    total_avoided = sum(r["hbm_bytes_avoided"] for r in region_rows)
+    emit(region_rows, f"Graph plan — megakernel regions, {net} "
+                      f"({len(region_rows)} chains, {total_avoided} HBM "
+                      f"bytes avoided per forward)")
     return rows
 
 

@@ -1,6 +1,6 @@
 """Per-kernel microbenchmarks → machine-readable ``BENCH_kernels.json``.
 
-Two comparisons per fig5 (YOLOv2-Tiny) binary conv layer, both bit-exact
+Three comparisons per fig5 (YOLOv2-Tiny) binary conv layer, all bit-exact
 by construction, so the deltas are pure execution-engine effects:
 
 * **reduction**: the whole-tile vectorized xor+popcount reduction
@@ -9,6 +9,15 @@ by construction, so the deltas are pure execution-engine effects:
   ``xnor_popcount_matmul``, on the layer's im2col matmul shape.
 * **conv path**: the direct (im2col-free) fused kernel vs the im2col
   fused kernel on the layer's conv shape.
+* **chain**: the megakernel region starting at the layer (the layer's
+  conv+pool plus the *next* graph node, DESIGN.md §9) as one Pallas call
+  with VMEM-resident intermediates, vs the per-node ``vpu_direct`` path
+  (direct kernel per conv, packed OR-pool between) — plus the HBM bytes
+  the fusion avoids at each interior boundary.
+
+Plus one **packing** row: the first-layer bit-plane split+pack kernel
+(``bitplane_pack``) at conv1's input shape, so packing perf is tracked
+alongside the conv kernels.
 
 The JSON artifact records per-kernel latency, effective GB/s and the
 backend winner so the perf trajectory is tracked across PRs (every run
@@ -31,10 +40,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import time_stable as _time_stable
 from repro.core import binary_conv, layer_integration, packing
-from repro.core.bnn_model import BConv
+from repro.core.bnn_model import BConv, Pool
+from repro.core.packing import num_words
 from repro.kernels import ops as kops
+from repro.kernels.chain_conv import StageSpec
 from repro.kernels.direct_conv_bn_binarize import direct_conv_bn_binarize
+from repro.runtime.regions import stages_hbm_bytes_avoided
 from repro.kernels.xnor_popcount_matmul import xnor_popcount_matmul
 from repro.models import paper_nets
 
@@ -51,24 +64,6 @@ def _interpret() -> bool:
 
 def _gbps(nbytes: int, seconds: float) -> float:
     return nbytes / max(seconds, 1e-12) / 1e9
-
-
-def _time_stable(fn, *args, budget_s: float = 0.3, max_iters: int = 24,
-                 warmup: int = 2) -> float:
-    """Minimum wall seconds per call, repeating until a time budget is
-    spent.  Min (not median) is the noise-robust microbenchmark estimator
-    on a shared host: external interference only ever adds time."""
-    import time as _time
-
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    best, spent, it = float("inf"), 0.0, 0
-    while spent < budget_s and it < max_iters:
-        t0 = _time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        dt = _time.perf_counter() - t0
-        best, spent, it = min(best, dt), spent + dt, it + 1
-    return best
 
 
 def _bench_layer(layer: BConv, h: int, m_red: int, rng,
@@ -152,41 +147,156 @@ def _bench_layer(layer: BConv, h: int, m_red: int, rng,
     )
 
 
+def _synth_conv(layer: BConv, rng):
+    """Synthetic packed weights + integer epilogue for one conv layer."""
+    kk = layer.kernel
+    w = jnp.asarray(rng.choice([-1.0, 1.0],
+                               (kk, kk, layer.c_in, layer.c_out))
+                    .astype(np.float32))
+    wp = binary_conv.pack_conv_weights(w)
+    t = jnp.asarray(rng.integers(0, kk * kk * layer.c_in, layer.c_out),
+                    jnp.int32)
+    s = jnp.asarray(rng.integers(0, 2, layer.c_out).astype(bool))
+    return wp, layer_integration.IntegratedParams(t, s)
+
+
+def _bench_chain_row(span: list[tuple[BConv, Pool | None]], h: int, rng,
+                     budget: float) -> dict:
+    """Megakernel region vs the per-node ``vpu_direct`` path over the same
+    span: each conv(+pool) graph node plus its successor, one Pallas call
+    (intermediates in the VMEM arena) vs one direct kernel per conv with
+    the packed OR-pool between (every boundary through HBM).  Both paths
+    are asserted bit-exact before timing."""
+    c_in = span[0][0].c_in
+    x = jnp.asarray(packing.pack_signs(
+        jnp.asarray(rng.choice([-1.0, 1.0], (1, h, h, c_in))
+                    .astype(np.float32)), axis=-1))
+
+    stages: list[StageSpec] = []
+    arrays: list = []
+    pernode_ops: list = []
+    for conv, pool in span:
+        wp, p = _synth_conv(conv, rng)
+        stages.append(StageSpec("conv", conv.kernel, conv.stride,
+                                conv.pad, conv.pad, channels=conv.c_out))
+        arrays += [wp, None, p.threshold, p.sign_flip]
+        pernode_ops.append(("conv", wp, p, conv))
+        if pool is not None:
+            stages.append(StageSpec("pool", pool.window, pool.stride,
+                                    pool.pad[0], pool.pad[1],
+                                    channels=conv.c_out))
+            pernode_ops.append(("pool", pool))
+
+    stages_t, arrays_t = tuple(stages), tuple(arrays)
+
+    @jax.jit
+    def pernode(xx):
+        y = xx
+        for op in pernode_ops:
+            if op[0] == "conv":
+                _, wp, p, conv = op
+                y = kops.fused_binary_conv2d(
+                    y, wp, p, conv.kernel, conv.kernel, conv.stride,
+                    conv.pad, mode="vpu_direct")
+            else:
+                pool = op[1]
+                y = binary_conv.binary_or_maxpool(y, pool.window,
+                                                  pool.stride,
+                                                  pad=tuple(pool.pad))
+        return y
+
+    chain = jax.jit(lambda xx: kops.chain_forward(xx, stages_t, arrays_t))
+    np.testing.assert_array_equal(np.asarray(chain(x)),
+                                  np.asarray(pernode(x)))
+
+    t_chain = _time_stable(chain, x, budget_s=budget, warmup=1)
+    t_node = _time_stable(pernode, x, budget_s=budget, warmup=1)
+
+    # HBM traffic the fusion avoids, via the canonical accounting shared
+    # with graph_plan's region report.
+    avoided = stages_hbm_bytes_avoided(stages_t,
+                                       (1, h, h, num_words(c_in)))
+
+    return dict(
+        span="+".join(f"{c.c_in}>{c.c_out}" + ("p" if p else "")
+                      for c, p in span),
+        n_stages=len(stages_t),
+        chain_ms=round(t_chain * 1e3, 3),
+        pernode_ms=round(t_node * 1e3, 3),
+        chain_speedup=round(t_node / max(t_chain, 1e-12), 2),
+        hbm_bytes_avoided=int(avoided),
+        winner="vpu_chain" if t_chain < t_node else "vpu_direct")
+
+
+def _bench_packing(h: int, rng, budget: float) -> dict:
+    """First-layer bit-plane split + channel pack at conv1's input shape."""
+    from repro.core.bitplanes import NUM_PLANES
+
+    x = jnp.asarray(rng.integers(0, 256, (1, h, h, 3)), jnp.uint8)
+    f = jax.jit(lambda xx: kops.bitplane_pack(xx))
+    t = _time_stable(f, x, budget_s=budget, warmup=1)
+    nbytes = int(x.size) + 4 * h * h * NUM_PLANES * num_words(3)
+    return dict(grid=h, c_in=3,
+                pack_ms=round(t * 1e3, 3),
+                gbps=round(_gbps(nbytes, t), 4))
+
+
 def run(smoke: bool = False, path: pathlib.Path | None = None) -> dict:
     spec, _ = paper_nets.get("yolov2-tiny")
-    convs = [l for l in spec if isinstance(l, BConv)]
+    convs: list[tuple[BConv, Pool | None]] = []
+    for j, l in enumerate(spec):
+        if isinstance(l, BConv):
+            nxt = spec[j + 1] if j + 1 < len(spec) else None
+            convs.append((l, nxt if isinstance(nxt, Pool) else None))
     scale, cap, m_cap = (52, 4, 1024) if smoke else (16, 13, 4096)
     iters = 1 if smoke else 5
+    budget = 0.15 if smoke else 0.3
     rng = np.random.default_rng(0)
 
     layers = {}
-    for i, (layer, size) in enumerate(zip(convs, _SIZES), start=1):
+    for i, ((layer, pool), size) in enumerate(zip(convs, _SIZES), start=1):
         if layer.first:
             continue  # conv1 rides the bit-plane path; not a like-for-like
         h = min(max(size // scale, 4), cap)
         m_red = min(max((size // 4) ** 2, 169), m_cap)
-        layers[f"conv{i}"] = _bench_layer(layer, h, m_red, rng, iters)
+        row = _bench_layer(layer, h, m_red, rng, iters)
+        # Chain row: this graph node plus its successor (the last conv
+        # spans nothing and runs as a single-stage region — no interior
+        # boundary, so no HBM win is claimed for it).
+        span = convs[i - 1:i + 1]
+        row["chain"] = _bench_chain_row(span, h, rng, budget)
+        layers[f"conv{i}"] = row
+
+    pack_h = min(max(_SIZES[0] // scale, 4), cap * 2)
+    packing_row = _bench_packing(pack_h, rng, budget)
 
     report = dict(
-        schema="bench-kernels-v1",
+        schema="bench-kernels-v2",
         device_kind=jax.default_backend(),
         pallas_interpret=_interpret(),
         smoke=smoke,
         layers=layers,
+        packing=packing_row,
         summary=dict(
             vector_wins=sum(r["reduction"]["winner"] == "vector"
                             for r in layers.values()),
             direct_wins=sum(r["conv"]["winner"] == "vpu_direct"
                             for r in layers.values()),
+            chain_wins=sum(r["chain"]["winner"] == "vpu_chain"
+                           for r in layers.values()),
+            hbm_bytes_avoided=sum(r["chain"]["hbm_bytes_avoided"]
+                                  for r in layers.values()),
             n_layers=len(layers)),
     )
     out = path or BENCH_PATH
     out.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
+    s = report["summary"]
     print(f"# §Kernels — wrote {out} "
-          f"({report['summary']['vector_wins']}/{len(layers)} layers: "
-          f"vectorized reduction wins; "
-          f"{report['summary']['direct_wins']}/{len(layers)}: direct conv "
-          f"wins)")
+          f"({s['vector_wins']}/{len(layers)} layers: vectorized "
+          f"reduction wins; {s['direct_wins']}/{len(layers)}: direct conv "
+          f"wins; {s['chain_wins']}/{len(layers)}: chain wins, "
+          f"{s['hbm_bytes_avoided']} HBM bytes avoided; packing "
+          f"{packing_row['pack_ms']}ms @ grid {packing_row['grid']})")
     return report
 
 

@@ -1,0 +1,48 @@
+"""Shared benchmark timers (single home; see the satellite note in
+``benchmarks/common.py``).
+
+Two estimators, two regimes:
+
+* :func:`time_stable` — **min of a time budget**: repeat until
+  ``budget_s`` wall seconds are spent (capped at ``max_iters``) and
+  return the *minimum*.  The noise-robust microbenchmark estimator on a
+  shared host, where external interference only ever adds time.  Used by
+  the kernel microbenchmarks.
+* :func:`time_fn` — **median of N**: the cheaper estimator for
+  macro-level rows (whole-workload latency) where each call is expensive
+  and drift is handled at a higher level (paired streams, ratios).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_stable(fn: Callable, *args, budget_s: float = 0.3,
+                max_iters: int = 24, warmup: int = 2) -> float:
+    """Minimum wall seconds per call over a spent-time budget."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best, spent, it = float("inf"), 0.0, 0
+    while spent < budget_s and it < max_iters:
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        dt = time.perf_counter() - t0
+        best, spent, it = min(best, dt), spent + dt, it + 1
+    return best
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (after compile warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))

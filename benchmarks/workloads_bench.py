@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit
+from benchmarks.timing import time_fn
 
 
 def bench_case(name: str, *, variant: str, backends: tuple[str, ...],
@@ -74,7 +75,8 @@ def run(smoke: bool = False, out: str = "BENCH_workloads.json") -> dict:
             dict(name="vgg16_imagenet", variant="tiny",
                  backends=("xla", "xla_pm1")),
             dict(name="yolov2_tiny_voc", variant="tiny",
-                 backends=("xla", "xla_pm1", "vpu_direct_pool")),
+                 backends=("xla", "xla_pm1", "vpu_direct_pool",
+                           "vpu_chain")),
         ]
     else:
         cases = [
@@ -82,12 +84,12 @@ def run(smoke: bool = False, out: str = "BENCH_workloads.json") -> dict:
                  backends=("xla", "xla_pm1", "mxu_pm1"), iters=2),
             dict(name="vgg16_imagenet", variant="tiny",
                  backends=("xla", "xla_pm1", "mxu_pm1", "vpu_popcount",
-                           "vpu_direct", "vpu_direct_pool")),
+                           "vpu_direct", "vpu_direct_pool", "vpu_chain")),
             dict(name="yolov2_tiny_voc", variant="paper", input_hw=416,
                  backends=("xla", "xla_pm1", "mxu_pm1"), iters=2),
             dict(name="yolov2_tiny_voc", variant="tiny",
                  backends=("xla", "xla_pm1", "vpu_popcount",
-                           "vpu_direct", "vpu_direct_pool")),
+                           "vpu_direct", "vpu_direct_pool", "vpu_chain")),
         ]
     rows: list[dict] = []
     for c in cases:

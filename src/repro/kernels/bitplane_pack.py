@@ -33,6 +33,9 @@ def _pack_w(width: int) -> jnp.ndarray:
 def _kernel(x_ref, o_ref, *, channels: int):
     x = x_ref[...].astype(jnp.int32)          # (1, bh, bw, C)
     cw = num_words(channels)
+    # One iota+shift for the whole kernel; per-word slices view into it
+    # (this used to be re-emitted 8*Cw times per block).
+    pack_w = _pack_w(WORD_BITS)
     words = []
     for n in range(NUM_PLANES):
         bits = (x >> n) & 1                   # (1, bh, bw, C)
@@ -40,7 +43,7 @@ def _kernel(x_ref, o_ref, *, channels: int):
             lo = wi * WORD_BITS
             hi = min(lo + WORD_BITS, channels)
             chunk = bits[..., lo:hi]
-            words.append(jnp.sum(chunk * _pack_w(hi - lo), axis=-1,
+            words.append(jnp.sum(chunk * pack_w[..., :hi - lo], axis=-1,
                                  dtype=jnp.int32))
     o_ref[...] = jnp.stack(words, axis=-1)    # (1, bh, bw, 8*Cw)
 

@@ -1,0 +1,325 @@
+"""Pallas TPU megakernel: a multi-layer binary-conv chain in one call.
+
+PhoneBit's layer-integration thesis (§V-C) taken one level up: PR 2's
+direct kernel fused conv+BN+binarize+pool *within* a layer, but every
+layer boundary still round-trips a packed activation through HBM and pays
+a kernel dispatch.  On a 32x-compressed tensor that boundary traffic and
+dispatch overhead rival the compute (daBNN, 1908.05858, measures the same
+shift on ARM once the binary ops are cheap).  This kernel executes a whole
+*region* — a static chain of conv / pool stages — in a single
+``pallas_call``:
+
+* the chain **entry** streams one packed NHWC input tile into VMEM via the
+  same overlapping-halo ``pl.Unblocked`` element-offset reads as the
+  direct kernel;
+* every **interior** stage output is stored to a flat VMEM scratch
+  **arena** at the byte offset the memory planner assigned
+  (:func:`repro.runtime.memory.vmem_plan` — lifetime-aware first-fit, so
+  stage i and stage i+2 ping-pong into shared space), and the next stage
+  reads its input back from that offset — HBM is touched only at the
+  chain's entry and exit;
+* conv stages walk KH x KW as in-VMEM shifted strided reads feeding the
+  whole-tile vectorized xor+popcount reduction, then apply the integer
+  threshold + in-register 32-channel bit-pack; pool stages are windowed
+  bitwise ORs over resident words.
+
+Tiling couples the stages through **halo growth**: to emit a
+``(block_h, block_w)`` tile of the *final* stage, stage k must produce a
+tile grown backwards through every later kernel window and stride, so the
+entry tile (and the per-stage recompute overlap between adjacent grid
+steps) grows with chain depth — which is why per-chain tile shapes are a
+new autotuning search space (DESIGN.md §9.3).  The default tile is the
+whole spatial map (no recompute; region formation already guaranteed the
+arena fits the VMEM budget).
+
+Correctness at tile and image borders: every position is computed in the
+final stage's coordinate frame and mapped backwards affinely
+(``origin = hi * step - offset``), so interior tiles read real neighbor
+data while border tiles run past a stage's valid extent.  Out-of-range
+positions of each interior stage are masked to zero words before the
+arena store — the zero word is 32 channels of -1, which is simultaneously
+this codebase's conv-padding convention and the OR-pool identity
+(DESIGN.md §3.2), so the masked store *is* the next stage's padding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import WORD_BITS, num_words
+from repro.kernels.fused_conv_bn_binarize import threshold_pack
+from repro.kernels.xnor_popcount_matmul import compiler_params, tile_counts
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One static chain stage.  ``kind`` is ``"conv"`` (fused binary conv +
+    integer threshold + pack; ``kernel``/``stride``/``pad_*`` are the conv
+    geometry, ``channels`` the valid output channels) or ``"pool"``
+    (windowed OR over packed words; ``kernel`` is the pool window).
+    Hashable so a chain spec can be a jit-static argument."""
+    kind: str
+    kernel: int
+    stride: int
+    pad_lo: int = 0
+    pad_hi: int = 0
+    channels: int = 0
+    first: bool = False
+
+    def out_size(self, size: int) -> int:
+        return (size + self.pad_lo + self.pad_hi - self.kernel) \
+            // self.stride + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class _Geometry:
+    """Host-side tile geometry for one (chain, tile-shape) pairing."""
+    out_tile: tuple[tuple[int, int], ...]   # per-stage output tile (th, tw)
+    out_step: tuple[tuple[int, int], ...]   # tile-origin step per grid inc
+    out_off: tuple[tuple[int, int], ...]    # tile-origin static offset
+    valid_hw: tuple[tuple[int, int], ...]   # per-stage valid output extent
+    entry_tile: tuple[int, int]
+    entry_step: tuple[int, int]
+    entry_off: tuple[int, int]              # == top/left pre-pad of entry
+    final_hw: tuple[int, int]
+
+
+def chain_geometry(stages: tuple[StageSpec, ...], h: int, w: int,
+                   block_h: int | None, block_w: int | None) -> _Geometry:
+    """Backward halo propagation: from the final (block_h, block_w) output
+    tile, grow each stage's required tile through its window and stride.
+    Tile origins are affine in the grid index: ``origin = gi*step - off``.
+    """
+    hs, ws = [h], [w]
+    for st in stages:
+        hs.append(st.out_size(hs[-1]))
+        ws.append(st.out_size(ws[-1]))
+    fh, fw = hs[-1], ws[-1]
+    th, tw = min(block_h or fh, fh), min(block_w or fw, fw)
+
+    out_tile, out_step, out_off, valid = [], [], [], []
+    mh, oh, mw, ow = th, 0, tw, 0
+    for k in reversed(range(len(stages))):
+        st = stages[k]
+        out_tile.append((th, tw))
+        out_step.append((mh, mw))
+        out_off.append((oh, ow))
+        valid.append((hs[k + 1], ws[k + 1]))
+        th = (th - 1) * st.stride + st.kernel
+        tw = (tw - 1) * st.stride + st.kernel
+        mh, oh = mh * st.stride, oh * st.stride + st.pad_lo
+        mw, ow = mw * st.stride, ow * st.stride + st.pad_lo
+    return _Geometry(
+        out_tile=tuple(reversed(out_tile)),
+        out_step=tuple(reversed(out_step)),
+        out_off=tuple(reversed(out_off)),
+        valid_hw=tuple(reversed(valid)),
+        entry_tile=(th, tw), entry_step=(mh, mw), entry_off=(oh, ow),
+        final_hw=(fh, fw))
+
+
+def chain_word_counts(stages: tuple[StageSpec, ...], cw_in: int
+                      ) -> list[int]:
+    """Packed word count entering each stage (index 0 = chain input) and
+    leaving the last (index len(stages))."""
+    cws = [cw_in]
+    for st in stages:
+        cws.append(num_words(st.channels) if st.kind == "conv" else cws[-1])
+    return cws
+
+
+def _conv_stage(x, st: StageSpec, w, ww, t, s, *, out_h: int, out_w: int,
+                cw: int):
+    """(bn, ih, iw, cw) resident tile -> (bn, out_h, out_w, nw) words:
+    KHxKW in-VMEM shifted reads + vectorized popcount + threshold/pack."""
+    bn = x.shape[0]
+    npos = bn * out_h * out_w
+    acc = jnp.zeros((npos, w.shape[0]), jnp.int32)
+    k = st.kernel
+    for di in range(k):
+        for dj in range(k):
+            tap = di * k + dj
+            patch = jax.lax.slice(
+                x, (0, di, dj, 0),
+                (bn, di + (out_h - 1) * st.stride + 1,
+                 dj + (out_w - 1) * st.stride + 1, cw),
+                (1, st.stride, st.stride, 1))
+            acc += tile_counts(patch.reshape(npos, cw),
+                               w[:, tap * cw:(tap + 1) * cw],
+                               ww[tap * cw:(tap + 1) * cw])
+    words = threshold_pack(acc, t[None, :], s[None, :])
+    return words.reshape(bn, out_h, out_w, -1)
+
+
+def _pool_stage(x, st: StageSpec, *, out_h: int, out_w: int):
+    """Windowed bitwise OR over packed words (max-pool in the packed
+    domain); zero words are the OR identity, so masked pad positions in
+    the resident tile never distort the max."""
+    out = None
+    for i in range(st.kernel):
+        for j in range(st.kernel):
+            s = jax.lax.slice(
+                x, (0, i, j, 0),
+                (x.shape[0], i + (out_h - 1) * st.stride + 1,
+                 j + (out_w - 1) * st.stride + 1, x.shape[3]),
+                (1, st.stride, st.stride, 1))
+            out = s if out is None else (out | s)
+    return out
+
+
+def _mask_invalid(y, hi, wi, step, off, valid):
+    """Zero positions outside the stage's valid output extent.  The tile
+    origin is ``gi*step - off`` (dynamic in the grid index), so border
+    tiles cover pad-region coordinates — zeroing them reproduces the
+    packed-domain padding convention for the next stage."""
+    row0 = hi * step[0] - off[0]
+    col0 = wi * step[1] - off[1]
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, y.shape, 2)
+    ok = ((rows >= 0) & (rows < valid[0]) &
+          (cols >= 0) & (cols < valid[1]))
+    return jnp.where(ok, y, 0)
+
+
+def _kernel(*refs, stages: tuple[StageSpec, ...], geo: _Geometry,
+            cws: tuple[int, ...], arena_offsets: tuple[int, ...]):
+    """One grid step: walk the whole chain for one final-output tile.
+    ``refs`` = entry tile, 4 refs per conv stage (w, ww, t, s), output
+    tile, then the flat int32 VMEM arena scratch."""
+    hi, wi = pl.program_id(1), pl.program_id(2)
+    x_ref, refs = refs[0], refs[1:]
+    arena_ref = refs[-1]
+    o_ref = refs[-2]
+    param_refs = refs[:-2]
+
+    x = x_ref[...]
+    pi = 0
+    last = len(stages) - 1
+    for k, st in enumerate(stages):
+        th, tw = geo.out_tile[k]
+        if st.kind == "conv":
+            w, ww, t, s = (param_refs[pi][...], param_refs[pi + 1][...],
+                           param_refs[pi + 2][...], param_refs[pi + 3][...])
+            pi += 4
+            y = _conv_stage(x, st, w, ww, t, s, out_h=th, out_w=tw,
+                            cw=cws[k])
+        else:
+            y = _pool_stage(x, st, out_h=th, out_w=tw)
+        if k == last:
+            o_ref[...] = y
+        else:
+            # Interior boundary: mask pad-region positions to zero words,
+            # store at the planner's arena offset, and hand the next stage
+            # its input straight back out of VMEM — HBM never sees it.
+            y = _mask_invalid(y, hi, wi, geo.out_step[k], geo.out_off[k],
+                              geo.valid_hw[k])
+            bn = y.shape[0]
+            size = bn * th * tw * cws[k + 1]
+            off = arena_offsets[k]
+            arena_ref[off:off + size] = y.reshape(-1)
+            x = arena_ref[off:off + size].reshape(bn, th, tw, cws[k + 1])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stages", "block_h", "block_w", "block_n",
+                     "arena_offsets", "arena_words", "interpret"))
+def chain_conv(x_packed: jnp.ndarray, stages: tuple[StageSpec, ...],
+               stage_arrays: tuple[jnp.ndarray, ...],
+               *, block_h: int | None = None, block_w: int | None = None,
+               block_n: int = 1,
+               arena_offsets: tuple[int, ...] | None = None,
+               arena_words: int | None = None,
+               interpret: bool = False) -> jnp.ndarray:
+    """Run a static conv/pool chain in one Pallas call.
+
+    x_packed: (N, H, W, Cw) int32 packed words (bit-plane words for a
+        first-layer entry).
+    stages: static chain spec; ``stage_arrays`` carries, per conv stage in
+        order, ``(w_packed (O, K*K*Cw), word_weights (K*K*Cw,) | None,
+        threshold (O,), sign_flip (O,))`` — pool stages carry nothing.
+    arena_offsets / arena_words: int32-element offsets per interior stage
+        output and total scratch extent, normally from the memory
+        planner's :func:`~repro.runtime.memory.vmem_plan`; defaulted to a
+        dense no-reuse layout when omitted (kernel-level tests).
+    Returns (N, FH, FW, ceil(O_last/32)) int32 (pool chains keep Cw).
+    """
+    n, h, w_in, cw0 = x_packed.shape
+    geo = chain_geometry(stages, h, w_in, block_h, block_w)
+    fh, fw = geo.final_hw
+    bh, bw = geo.out_tile[-1]
+    bn = max(1, min(block_n, n))
+    cws = tuple(chain_word_counts(stages, cw0))
+
+    if arena_offsets is None:
+        offs, total = [], 0
+        for k in range(len(stages) - 1):
+            offs.append(total)
+            th, tw = geo.out_tile[k]
+            total += bn * th * tw * cws[k + 1]
+        arena_offsets, arena_words = tuple(offs), total
+
+    # Pad + widen per-stage operands: output channels to word multiples
+    # with threshold=-1 / sign=0 so pad bits are 0 (pack_bits semantics).
+    ops: list[jnp.ndarray] = []
+    ai = 0
+    for st in stages:
+        if st.kind != "conv":
+            continue
+        w_p, ww, t, s = stage_arrays[ai:ai + 4]
+        ai += 4
+        o, pw = w_p.shape
+        o_pad = num_words(st.channels) * WORD_BITS
+        if ww is None:
+            ww = jnp.ones((pw,), jnp.int32)
+        ops += [jnp.pad(w_p, ((0, o_pad - o), (0, 0))),
+                ww.astype(jnp.int32),
+                jnp.pad(t.astype(jnp.int32), (0, o_pad - o),
+                        constant_values=-1),
+                jnp.pad(s.astype(jnp.int32), (0, o_pad - o))]
+
+    gn, gh, gw = pl.cdiv(n, bn), pl.cdiv(fh, bh), pl.cdiv(fw, bw)
+    ih, iw = geo.entry_tile
+    rstep, cstep = geo.entry_step
+    top, left = geo.entry_off
+    # Entry pre-pad: the chain's cumulative left/top pad plus bottom/right
+    # slack so every grown halo read stays in bounds (0-words == -1
+    # channels == the packed-domain conv pad).
+    need_h = (gh - 1) * rstep + ih
+    need_w = (gw - 1) * cstep + iw
+    x_packed = jnp.pad(x_packed, (
+        (0, gn * bn - n),
+        (top, max(0, need_h - h - top)),
+        (left, max(0, need_w - w_in - left)),
+        (0, 0)))
+
+    nw_out = cws[-1]
+    in_specs = [pl.BlockSpec(
+        (bn, ih, iw, cw0),
+        lambda ni, hi, wi: (ni * bn, hi * rstep, wi * cstep, 0),
+        indexing_mode=pl.Unblocked())]
+    for arr in ops:
+        shape = arr.shape
+        in_specs.append(pl.BlockSpec(
+            shape, lambda ni, hi, wi, _nd=len(shape): (0,) * _nd))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, stages=stages, geo=geo, cws=cws,
+                          arena_offsets=arena_offsets),
+        grid=(gn, gh, gw),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bn, bh, bw, nw_out),
+                               lambda ni, hi, wi: (ni, hi, wi, 0)),
+        out_shape=jax.ShapeDtypeStruct((gn * bn, gh * bh, gw * bw, nw_out),
+                                       jnp.int32),
+        scratch_shapes=[pltpu.VMEM((max(arena_words, 1),), jnp.int32)],
+        interpret=interpret,
+        **compiler_params(interpret, ("parallel",) * 3),
+    )(x_packed, *ops)
+    return out[:n, :fh, :fw, :]

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core import binary_conv, binary_ops, layer_integration, packing
 from repro.kernels import (bitplane_pack as _bitplane_pack_mod,
+                           chain_conv as _chain_mod,
                            direct_conv_bn_binarize as _direct_mod,
                            fused_conv_bn_binarize as _fused_mod,
                            mxu_pm1_matmul as _mxu_mod,
@@ -138,6 +139,16 @@ def fused_binary_conv2d(x_packed: jnp.ndarray, w_packed: jnp.ndarray,
         out = binary_conv.binary_or_maxpool(out, pool[0], pool[1],
                                             pad=tuple(pool[2]))
     return out
+
+
+def chain_forward(x_packed: jnp.ndarray, stages, stage_arrays,
+                  **kw) -> jnp.ndarray:
+    """Run a fused conv/pool chain (one region) in a single megakernel
+    call with VMEM-resident intermediates (DESIGN.md §9); the region-level
+    counterpart of :func:`fused_binary_conv2d`."""
+    return _chain_mod.chain_conv(x_packed, tuple(stages),
+                                 tuple(stage_arrays),
+                                 interpret=_interpret(), **kw)
 
 
 def bitplane_pack(x: jnp.ndarray, **kw) -> jnp.ndarray:

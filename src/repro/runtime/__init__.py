@@ -13,24 +13,32 @@ fast engine.
                epilogue fusion, OR-pool absorption — as testable rewrites
     memory     static lifetime analysis + arena planning (peak_bytes)
     executor   jit-compiled topological evaluator, per-node backends
-    autotune   times backend candidates per node, caches winners
+    autotune   times backend candidates per node/chain, caches winners
+    regions    chain-fusion region formation: runs of packed ops fused
+               into single megakernel calls with VMEM-resident
+               intermediates at planner offsets (DESIGN.md §9)
 """
 
 from repro.runtime.autotune import (Autotuner, cache_path,
                                     default_candidates)
-from repro.runtime.executor import (BACKENDS, GraphExecutor,
-                                    valid_backends)
+from repro.runtime.executor import (ALL_MODES, BACKENDS, CHAIN_BACKEND,
+                                    GraphExecutor, valid_backends)
 from repro.runtime.graph import (DISPATCHABLE_OPS, Graph, Node, TensorType,
                                  infer_types, lower_packed, lower_trained)
-from repro.runtime.memory import MemoryPlan, plan_memory
+from repro.runtime.memory import MemoryPlan, VmemPlan, plan_memory, vmem_plan
 from repro.runtime.passes import (absorb_pools, assign_layouts,
                                   default_pipeline, fuse_epilogues,
                                   fuse_pool_epilogue, integrate_bn)
+from repro.runtime.regions import (Chain, build_chain, chain_executor,
+                                   chain_report, partition_chains)
 
 __all__ = [
-    "Autotuner", "BACKENDS", "DISPATCHABLE_OPS", "Graph", "GraphExecutor",
-    "MemoryPlan", "Node", "TensorType", "absorb_pools", "assign_layouts",
-    "cache_path", "default_candidates", "default_pipeline",
-    "fuse_epilogues", "fuse_pool_epilogue", "infer_types", "integrate_bn",
-    "lower_packed", "lower_trained", "plan_memory", "valid_backends",
+    "ALL_MODES", "Autotuner", "BACKENDS", "CHAIN_BACKEND", "Chain",
+    "DISPATCHABLE_OPS", "Graph", "GraphExecutor", "MemoryPlan", "Node",
+    "TensorType", "VmemPlan", "absorb_pools", "assign_layouts",
+    "build_chain", "cache_path", "chain_executor", "chain_report",
+    "default_candidates", "default_pipeline", "fuse_epilogues",
+    "fuse_pool_epilogue", "infer_types", "integrate_bn", "lower_packed",
+    "lower_trained", "partition_chains", "plan_memory", "valid_backends",
+    "vmem_plan",
 ]

@@ -33,6 +33,12 @@ marked ``reused_across_batch`` so reports can tell a measured winner from
 an inherited one).  Batch-agnostic records persist to disk alongside the
 exact ones under a ``batchless::`` key prefix.
 
+Fused regions (DESIGN.md §9) get their own sweep: :meth:`tune_chains`
+times the chain megakernel over per-chain tile shapes — a new search
+space, since a chain tile couples every stage through halo growth — and
+caches winners under ``chain::``-prefixed chain-shaped signatures (stage
+specs + entry shape + device kind) in the same stores.
+
 The cache additionally persists to disk (``~/.cache/repro/autotune.json``,
 keyed by the same signatures — which embed the device kind) so repeated
 engine startups skip re-timing entirely.  ``REPRO_AUTOTUNE_CACHE=0``
@@ -152,6 +158,39 @@ def _label(backend: str, tile: dict) -> str:
     inner = ",".join(f"{k.replace('block_', '')}{v}"
                      for k, v in sorted(tile.items()))
     return f"{backend}[{inner}]"
+
+
+def _chain_signature(chain) -> str:
+    """Chain-shaped cache key: the stage-spec tuple + head input shape +
+    device kind, ``chain::``-prefixed so per-node and per-chain records
+    share one disk cache without colliding."""
+    return "chain::" + repr((chain.signature_key(), _device_kind()))
+
+
+def _chain_tile_candidates(chain) -> list[dict]:
+    """Per-chain tile sweep.  Chain tiles couple the stages through halo
+    growth (a smaller final tile shrinks every interior tile but raises
+    the recompute overlap fraction), so the sweep is over the *final*
+    tile: whole-map (no recompute — the default), a few spatial splits,
+    and a batch-spanning tile.  Candidates whose VMEM plan no longer fits
+    the chain's budget are dropped before timing."""
+    from repro.kernels.chain_conv import chain_geometry
+    from repro.runtime.regions import plan_chain_vmem
+
+    n, h, w = chain.in_shape[0], chain.in_shape[1], chain.in_shape[2]
+    fh = chain_geometry(chain.stages, h, w, None, None).final_hw[0]
+    cands: list[dict] = [{}]
+    seen = {fh}
+    for bh in (4, 8, 16, max(1, fh // 2)):
+        eff = min(bh, fh)
+        if eff not in seen:
+            seen.add(eff)
+            cands.append({"block_h": eff})
+    if n > 1:
+        cands.append({"block_n": n})
+    return [t for t in cands
+            if plan_chain_vmem(chain.stages, chain.in_shape, tile=t,
+                               budget=chain.plan.budget).fits()]
 
 
 class Autotuner:
@@ -301,3 +340,68 @@ class Autotuner:
         choices, tiles = self.tune_with_tiles(graph, input_shape)
         return GraphExecutor(graph, choices, tiles,
                              donate_input=donate_input)
+
+    # ---- chain (region) tuning -------------------------------------------
+    def _time_chain(self, chain, stage_arrays, x, tile: dict) -> float:
+        from repro.kernels import ops as kops
+
+        offs, words = chain.arena(tile)
+        fn = jax.jit(lambda arrs, xx: kops.chain_forward(
+            xx, chain.stages, arrs, arena_offsets=offs, arena_words=words,
+            **tile))
+        for _ in range(self.warmup):
+            jax.block_until_ready(fn(stage_arrays, x))
+        times = []
+        for _ in range(self.iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(stage_arrays, x))
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
+
+    def _tune_chain(self, chain, graph: Graph) -> dict:
+        from repro.runtime.regions import chain_stage_arrays
+
+        arrays = chain_stage_arrays(
+            chain, {str(nid): graph.nodes[nid].params
+                    for nid in chain.node_ids})
+        x = jnp.zeros(chain.in_shape, jnp.int32)
+        timings: dict[str, float] = {}
+        best = (float("inf"), {})
+        for tile in _chain_tile_candidates(chain):
+            t = self._time_chain(chain, arrays, x, tile)
+            timings[_label("vpu_chain", tile)] = t
+            if t < best[0]:
+                best = (t, tile)
+        return dict(winner="vpu_chain", tile=best[1],
+                    timings_ms={lbl: round(t * 1e3, 4)
+                                for lbl, t in timings.items()})
+
+    def tune_chains(self, graph: Graph, chains) -> None:
+        """Pick a tile shape per chain (set in place on ``chain.tile``).
+        Winners cache/persist under chain-shaped ``chain::`` signatures —
+        structurally identical regions across graphs or restarts reuse
+        the measurement, exactly like per-node winners."""
+        from repro.runtime.regions import plan_chain_vmem
+
+        fresh: dict[str, dict] = {}
+        for chain in chains:
+            key = _chain_signature(chain)
+            if key not in self.cache:
+                if key in self._disk:
+                    self.cache[key] = self._disk[key]
+                else:
+                    self.cache[key] = fresh[key] = self._tune_chain(
+                        chain, graph)
+            tile = dict(self.cache[key].get("tile") or {})
+            # The signature does not embed the VMEM budget, so a winner
+            # cached under a larger budget may no longer fit this
+            # chain's: re-check, and degrade to the default tile (which
+            # region formation already proved fits) rather than compile
+            # an over-budget arena.
+            if tile and not plan_chain_vmem(chain.stages, chain.in_shape,
+                                            tile=tile,
+                                            budget=chain.plan.budget
+                                            ).fits():
+                tile = {}
+            chain.tile = tile
+        self._save_disk(fresh)

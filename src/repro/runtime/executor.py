@@ -18,6 +18,13 @@ Per-node backends:
 * ``"vpu_direct_pool"`` the direct kernel with the OR-pool fused into its
                         epilogue — ``packed_conv_pool`` nodes only.
 
+Above the per-node backends sits the region-level ``"vpu_chain"`` mode
+(DESIGN.md §9): the executor accepts ``regions=`` — chains formed by
+:mod:`repro.runtime.regions` — and evaluates each whole region in one
+Pallas megakernel call with VMEM-resident intermediates; member nodes are
+skipped in the schedule and nodes outside every region degrade per-node
+along ``_FALLBACK``.
+
 All backends are bit-exact w.r.t. each other, so backend choice is purely a
 performance decision — which is what makes per-node autotuning
 (:mod:`repro.runtime.autotune`) safe.  Backends that do not apply to an op
@@ -33,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Mapping
+from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -46,10 +53,16 @@ from repro.runtime.graph import DISPATCHABLE_OPS, Graph
 
 BACKENDS = ("xla", "xla_pm1", "mxu_pm1", "vpu_popcount", "vpu_direct",
             "vpu_direct_pool")
+# The region-level megakernel mode (DESIGN.md §9): not a per-node backend
+# — chains are evaluated whole via ``regions`` — but a valid engine
+# ``matmul_mode``; per-node leftovers degrade along _FALLBACK.
+CHAIN_BACKEND = "vpu_chain"
+ALL_MODES = BACKENDS + (CHAIN_BACKEND,)
 
 _IMPL = {"xla": "xor", "xla_pm1": "pm1", "mxu_pm1": "pm1"}
 # Graceful degradation when a single mode string hits an op it cannot run.
-_FALLBACK = {"vpu_direct_pool": "vpu_direct", "vpu_direct": "vpu_popcount"}
+_FALLBACK = {"vpu_chain": "vpu_direct_pool",
+             "vpu_direct_pool": "vpu_direct", "vpu_direct": "vpu_popcount"}
 
 
 def valid_backends(op: str) -> tuple[str, ...]:
@@ -215,10 +228,21 @@ class GraphExecutor:
     def __init__(self, graph: Graph,
                  backends: str | Mapping[int, str] = "xla",
                  tile_configs: Mapping[int, Mapping[str, int]] | None = None,
-                 donate_input: bool = False):
+                 donate_input: bool = False,
+                 regions: Sequence[Any] | None = None):
         graph.validate()
         self.graph = graph
         self.donate_input = donate_input
+        # Fused regions (runtime.regions.Chain): each is evaluated whole by
+        # the chain megakernel when the schedule reaches its head; member
+        # nodes are skipped and the result binds to the tail's id.
+        self.regions = tuple(regions or ())
+        self._region_head = {c.head: c for c in self.regions}
+        self._region_members = {nid for c in self.regions
+                                for nid in c.node_ids}
+        if len(self._region_members) != sum(len(c.node_ids)
+                                            for c in self.regions):
+            raise ValueError("regions overlap")
         if isinstance(backends, str):
             backends = {nid: resolve_backend(n.op, backends)
                         for nid, n in graph.nodes.items()
@@ -263,6 +287,14 @@ class GraphExecutor:
             if node.op == "input":
                 env[nid] = x
                 continue
+            if nid in self._region_members:
+                if nid in self._region_head:
+                    from repro.runtime import regions as _regions
+
+                    chain = self._region_head[nid]
+                    env[chain.tail] = _regions.eval_chain(
+                        chain, arrays, env[node.inputs[0]])
+                continue
             env[nid] = eval_node(
                 node.op, node.attrs, arrays.get(str(nid), {}),
                 [env[i] for i in node.inputs],
@@ -278,12 +310,22 @@ class GraphExecutor:
                       tile_configs: Mapping[int, Mapping[str, int]]
                       | None = None) -> "GraphExecutor":
         return GraphExecutor(self.graph, backends, tile_configs,
-                             donate_input=self.donate_input)
+                             donate_input=self.donate_input,
+                             regions=self.regions)
 
     def backend_report(self) -> list[dict]:
         rows = []
         for nid in self._schedule:
             node = self.graph.nodes[nid]
+            if nid in self._region_members:
+                chain = self._region_head.get(nid)
+                if chain is not None:
+                    rows.append(dict(
+                        node="+".join(map(str, chain.node_ids)), op="chain",
+                        channels=self.graph.nodes[chain.tail]
+                                     .attrs.get("channels"),
+                        backend=CHAIN_BACKEND, tile=dict(chain.tile)))
+                continue
             if node.op in DISPATCHABLE_OPS:
                 rows.append(dict(node=nid, op=node.op,
                                  channels=node.attrs.get("channels"),

@@ -14,15 +14,20 @@ offset in a single arena via lifetime-aware first-fit.  ``peak_bytes()``
 ``naive_bytes()`` is the no-reuse sum — the gap between them is the
 planner's win, reported per-node by ``report()`` for the benchmarks.
 
-The plan is *advisory* on the XLA path (XLA does its own buffer
-assignment); it is the contract a future donation/buffer-aliasing executor
-and the roofline model consume, and the test suite checks its invariant:
+On the XLA per-node path the plan is advisory (XLA does its own buffer
+assignment).  On the chain-fusion path (:mod:`repro.runtime.regions`,
+DESIGN.md §9) it is *load-bearing*: :func:`vmem_plan` runs the same
+lifetime-aware first-fit over a chain's interior intermediates, and the
+resulting offsets are the addresses at which the megakernel
+(:mod:`repro.kernels.chain_conv`) stores and reloads each stage inside
+its VMEM scratch arena.  The test suite checks the shared invariant:
 no two overlapping-lifetime buffers may overlap in the arena.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from repro.runtime.graph import Graph, TensorType, infer_types
 
@@ -77,6 +82,30 @@ class MemoryPlan:
         return rows
 
 
+def _first_fit(intervals: list[tuple[int, int, int, int]]
+               ) -> tuple[dict[int, int], int]:
+    """Lifetime-aware first-fit over ``(birth, death, size, key)`` rows:
+    place each buffer at the lowest offset that does not collide with an
+    already-placed buffer of overlapping lifetime.  Returns
+    ``(offsets_by_key, arena_size)``."""
+    placed: list[tuple[int, int, int, int]] = []  # (offset, size, birth, death)
+    offsets: dict[int, int] = {}
+    arena = 0
+    for birth, death, size, key in sorted(intervals):
+        overlapping = sorted(
+            (off, sz) for off, sz, b2, d2 in placed
+            if not (d2 < birth or b2 > death))
+        offset = 0
+        for off, sz in overlapping:
+            if offset + size <= off:
+                break
+            offset = max(offset, off + sz)
+        placed.append((offset, size, birth, death))
+        offsets[key] = offset
+        arena = max(arena, offset + size)
+    return offsets, arena
+
+
 def plan_memory(graph: Graph, input_shape: tuple[int, ...],
                 types: dict[int, TensorType] | None = None) -> MemoryPlan:
     """Lifetime analysis + first-fit arena assignment over the schedule.
@@ -98,24 +127,7 @@ def plan_memory(graph: Graph, input_shape: tuple[int, ...],
         death = max((pos[u] for u in users), default=pos[nid])
         intervals.append((pos[nid], death, _align(types[nid].nbytes), nid))
 
-    # First-fit by birth order: place each buffer at the lowest offset that
-    # does not collide with an already-placed buffer of overlapping lifetime.
-    placed: list[tuple[int, int, int, int]] = []  # (offset, size, birth, death)
-    offsets: dict[int, int] = {}
-    arena = 0
-    for birth, death, size, nid in sorted(intervals):
-        overlapping = sorted(
-            (off, sz) for off, sz, b2, d2 in placed
-            if not (d2 < birth or b2 > death))
-        offset = 0
-        for off, sz in overlapping:
-            if offset + size <= off:
-                break
-            offset = max(offset, off + sz)
-        placed.append((offset, size, birth, death))
-        offsets[nid] = offset
-        arena = max(arena, offset + size)
-
+    offsets, arena = _first_fit(intervals)
     buffers = {
         nid: BufferPlan(node_id=nid, op=graph.nodes[nid].op,
                         shape=types[nid].shape, nbytes=size,
@@ -123,3 +135,57 @@ def plan_memory(graph: Graph, input_shape: tuple[int, ...],
         for birth, death, size, nid in intervals
     }
     return MemoryPlan(schedule=schedule, buffers=buffers, arena_bytes=arena)
+
+
+# --------------------------------------------------------------------------
+# Per-chain VMEM arena planning (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VmemPlan:
+    """The VMEM scratch-arena plan for one fused chain.
+
+    ``offsets``/``arena_bytes`` describe only the chain's *interior*
+    intermediates (one per stage boundary, in chain order); the kernel's
+    other VMEM residents — entry tile, weights, final tile, accumulator —
+    are summed into ``fixed_bytes`` and count against the budget but live
+    outside the planned arena (Pallas allocates them as operand blocks).
+    """
+    offsets: tuple[int, ...]     # byte offset per interior intermediate
+    sizes: tuple[int, ...]       # aligned byte size per intermediate
+    arena_bytes: int             # planned arena extent (0 when no interior)
+    fixed_bytes: int             # non-arena VMEM the chain also occupies
+    budget: int | None           # byte budget this plan was checked against
+
+    def total_bytes(self) -> int:
+        return self.arena_bytes + self.fixed_bytes
+
+    def fits(self) -> bool:
+        return self.budget is None or self.total_bytes() <= self.budget
+
+    def naive_bytes(self) -> int:
+        """No-reuse sum of the interior intermediates."""
+        return sum(self.sizes)
+
+
+def vmem_plan(sizes: Sequence[int], *, budget: int | None = None,
+              fixed_bytes: int = 0) -> VmemPlan:
+    """Plan one chain's VMEM scratch arena (the per-chain planning mode).
+
+    ``sizes[i]`` is the byte size of the chain's i-th interior
+    intermediate — stage i's output tile, produced at chain step i and
+    consumed at step i+1.  Lifetimes are therefore ``[i, i+1]``, and the
+    same lifetime-aware first-fit used for the HBM arena assigns offsets:
+    with three or more stages, buffers i and i+2 ping-pong into shared
+    space.  The returned offsets are what
+    :mod:`repro.kernels.chain_conv` uses to address its flat VMEM
+    scratch; ``fits()`` is the region-formation gate
+    (:mod:`repro.runtime.regions` splits chains whose plan exceeds the
+    budget, spilling the cut boundary to HBM).
+    """
+    intervals = [(i, i + 1, _align(sz), i) for i, sz in enumerate(sizes)]
+    offsets, arena = _first_fit(intervals)
+    return VmemPlan(
+        offsets=tuple(offsets[i] for i in range(len(sizes))),
+        sizes=tuple(_align(sz) for sz in sizes),
+        arena_bytes=arena, fixed_bytes=fixed_bytes, budget=budget)

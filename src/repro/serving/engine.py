@@ -23,6 +23,11 @@ autotuner.  The original flat ``packed_forward`` walk is kept as the
                         layers degrade to ``vpu_popcount``,
 * ``"vpu_direct_pool"`` direct kernel with the OR-pool epilogue fused in
                         (``packed_conv_pool`` nodes; others degrade),
+* ``"vpu_chain"``       chain-fusion megakernel regions (DESIGN.md §9):
+                        maximal runs of packed conv/pool ops execute as
+                        single Pallas calls with VMEM-resident
+                        intermediates at planner offsets; ops outside a
+                        region degrade per-node,
 * ``"auto"``            per-node autotune — backend *and* direct-kernel
                         tile shape, winners cached per shape signature and
                         persisted to disk (``REPRO_AUTOTUNE_CACHE=0``
@@ -166,6 +171,18 @@ class PhoneBitEngine:
                 exe = self._tuner.tuned_executor(
                     self._graph,
                     self._plan_shape(max(bs // data_parallel, 1)),
+                    donate_input=donate_input)
+            elif self.matmul_mode == "vpu_chain":
+                # Region-fused serving (DESIGN.md §9): chains of packed
+                # ops run as single megakernel calls.  Per-chain tile
+                # shapes are autotuned on TPU only — interpret-mode
+                # timings are validators, not contenders (same policy as
+                # ``default_candidates``).
+                exe = runtime.chain_executor(
+                    self._graph,
+                    self._plan_shape(max(bs // data_parallel, 1)),
+                    tuner=(self._tuner if jax.default_backend() == "tpu"
+                           else None),
                     donate_input=donate_input)
             else:
                 exe = runtime.GraphExecutor(self._graph, self.matmul_mode,

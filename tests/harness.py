@@ -30,7 +30,7 @@ import numpy as np
 
 from repro import workloads
 from repro.core import bnn_model, converter
-from repro.runtime.executor import BACKENDS
+from repro.runtime.executor import ALL_MODES, BACKENDS  # noqa: F401
 from repro.workloads import DetectConfig
 
 GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
@@ -83,7 +83,7 @@ def packed_tail(wl: workloads.Workload, x: jnp.ndarray) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 def sweep_backends(name: str, x: jnp.ndarray | None = None,
-                   backends: tuple[str, ...] = BACKENDS) -> dict:
+                   backends: tuple[str, ...] = ALL_MODES) -> dict:
     """Every backend's (raw, decoded) outputs for one workload; asserts
     bit-exactness vs the ``xla`` reference and returns the reference."""
     ref_wl = conformance_workload(name, matmul_mode="xla")

@@ -1,0 +1,44 @@
+"""Unit test for the shared benchmark timers (benchmarks/timing.py)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks import timing  # noqa: E402
+
+
+class _FakeClock:
+    """Deterministic perf_counter: consecutive calls return the given
+    instants, so each timed iteration sees a scripted duration."""
+
+    def __init__(self, instants):
+        self.instants = list(instants)
+
+    def __call__(self):
+        return self.instants.pop(0)
+
+
+def test_time_stable_min_budget_and_cap(monkeypatch):
+    # Three scripted iterations of 5s, 3s, 7s.  With a 10s budget the
+    # loop runs while spent < budget: 5 (spent 5), 3 (spent 8), 7 (spent
+    # 15, loop exits) — and returns the MINIMUM, not mean/median.
+    monkeypatch.setattr(timing.time, "perf_counter",
+                        _FakeClock([0, 5, 5, 8, 8, 15]))
+    assert timing.time_stable(lambda: 0, budget_s=10, warmup=0) == 3
+
+    # max_iters caps the repeat count even with budget left.
+    monkeypatch.setattr(timing.time, "perf_counter",
+                        _FakeClock([0, 2, 2, 3]))
+    assert timing.time_stable(lambda: 0, budget_s=100, max_iters=2,
+                              warmup=0) == 1
+
+    # time_fn is the median estimator: durations 5, 1, 9 -> 5.
+    monkeypatch.setattr(timing.time, "perf_counter",
+                        _FakeClock([0, 5, 5, 6, 6, 15]))
+    assert timing.time_fn(lambda: 0, warmup=0, iters=3) == 5
+
+    # common.py re-exports both (back-compat import surface)
+    from benchmarks import common
+    assert common.time_fn is timing.time_fn
+    assert common.time_stable is timing.time_stable

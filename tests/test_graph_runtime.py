@@ -508,3 +508,39 @@ class TestDifferentialFuzz:
             got = np.asarray(GraphExecutor(g, backend)(x[:1]))
             np.testing.assert_array_equal(
                 got, ref[:1], err_msg=f"{backend} diverges on spec {spec}")
+
+    @given(st.integers(0, 10**9))
+    @settings(max_examples=4, deadline=None)
+    def test_random_chain_splits_bit_exact(self, seed):
+        """Chain-fusion axis (DESIGN.md §9): the same random graphs, but
+        executed through megakernel regions split at *random* chain
+        boundaries — every split must stay bit-exact vs the per-node xla
+        reference (each cut boundary spills to HBM; the fused interiors
+        live in the VMEM arena)."""
+        rng = np.random.default_rng(seed)
+        spec, hw0 = _random_spec(rng)
+        params = _randomize_bn(
+            bnn_model.init_params(jax.random.key(seed % (2**31)), spec),
+            seed=seed % 7919)
+        packed = converter.convert(params, spec, (hw0, hw0))
+        g = runtime.fuse_pool_epilogue(lower_packed(spec, packed,
+                                                    (hw0, hw0)))
+        x = jnp.asarray(rng.integers(0, 256, (1, hw0, hw0, 3)), jnp.uint8)
+        ref = np.asarray(GraphExecutor(g, "xla")(x))
+
+        split = []
+        for chain in runtime.partition_chains(g, x.shape, min_nodes=1):
+            ids = chain.node_ids
+            cuts = {0, len(ids)}
+            if len(ids) > 1:
+                cuts.update(int(rng.integers(1, len(ids)))
+                            for _ in range(int(rng.integers(0, 3))))
+            cuts = sorted(cuts)
+            split += [runtime.build_chain(g, ids[a:b], x.shape)
+                      for a, b in zip(cuts, cuts[1:])]
+        assert split, f"no chainable run in spec {spec}"
+        ex = GraphExecutor(g, "vpu_chain", regions=split)
+        np.testing.assert_array_equal(
+            np.asarray(ex(x)), ref,
+            err_msg=f"chain split {[c.node_ids for c in split]} diverges "
+                    f"on spec {spec}")
