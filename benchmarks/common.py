@@ -13,6 +13,10 @@ Absolute TPU numbers come from the dry-run roofline (benchmarks/roofline).
 from __future__ import annotations
 
 from benchmarks.timing import time_fn, time_stable  # noqa: F401
+# Every BENCH_*.json goes out through the provenance-stamping writer
+# (DESIGN.md §10.4): a ``meta`` block with git sha, jax/jaxlib versions,
+# device kind/count, backend list and a UTC timestamp.
+from repro.obs.provenance import write_bench  # noqa: F401
 
 
 def emit(rows: list[dict], title: str) -> None:

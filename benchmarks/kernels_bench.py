@@ -33,13 +33,13 @@ interpret-mode timings tractable.
 
 from __future__ import annotations
 
-import json
 import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import write_bench
 from benchmarks.timing import time_stable as _time_stable
 from repro.core import binary_conv, layer_integration, packing
 from repro.core.bnn_model import BConv, Pool
@@ -289,7 +289,7 @@ def run(smoke: bool = False, path: pathlib.Path | None = None) -> dict:
             n_layers=len(layers)),
     )
     out = path or BENCH_PATH
-    out.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
+    report = write_bench(out, report, sort_keys=True)
     s = report["summary"]
     print(f"# §Kernels — wrote {out} "
           f"({s['vector_wins']}/{len(layers)} layers: vectorized "

@@ -24,12 +24,11 @@ dominates and the async win is largest).
 from __future__ import annotations
 
 import argparse
-import json
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 
 
 def _serve_stream(engine, hwc, *, requests: int, max_batch: int,
@@ -153,8 +152,7 @@ def run(smoke: bool = False, out: str = "BENCH_serving.json") -> dict:
                                       for r in rows),
         },
     }
-    with open(out, "w") as f:
-        json.dump(report, f, indent=1)
+    report = write_bench(out, report)
     print(f"wrote {out} (async wins "
           f"{report['summary']['async_wins']}/{len(rows)}, best speedup "
           f"{report['summary']['best_async_speedup']:.2f}x)")

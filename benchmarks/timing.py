@@ -19,7 +19,8 @@ import time
 from typing import Callable
 
 import jax
-import numpy as np
+
+from repro.obs.metrics import percentile
 
 
 def time_stable(fn: Callable, *args, budget_s: float = 0.3,
@@ -45,4 +46,6 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    # Canonical latency math (repro.obs.metrics): nearest-rank p50 ==
+    # the median for the odd iteration counts benchmarks use.
+    return float(percentile(sorted(times), 0.5))

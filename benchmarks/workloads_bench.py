@@ -22,13 +22,12 @@ scale tiny variants, same topology class, honest label in the rows.
 from __future__ import annotations
 
 import argparse
-import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench
 from benchmarks.timing import time_fn
 
 
@@ -114,8 +113,7 @@ def run(smoke: bool = False, out: str = "BENCH_workloads.json") -> dict:
             "winners": winners,
         },
     }
-    with open(out, "w") as f:
-        json.dump(report, f, indent=1)
+    report = write_bench(out, report)
     print(f"wrote {out} ({len(rows)} rows; winners: "
           + ", ".join(f"{k}:{v['backend']}" for k, v in winners.items())
           + ")")

@@ -32,6 +32,7 @@ import numpy as np
 from repro.distributed.sharding import rules_for_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import paper_nets, transformer
+from repro.obs import trace as obs_trace
 from repro.serving import InferenceServer, PhoneBitEngine, buckets_for
 from repro.serving.lm_server import LMServer
 
@@ -149,10 +150,22 @@ def main(argv=None):
     ap.add_argument("--deadline-s", type=float, default=None)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record serving-stage spans and write a "
+                         "Chrome/Perfetto trace-event JSON here "
+                         "(chrome://tracing / ui.perfetto.dev)")
     args = ap.parse_args(argv)
-    if args.mode == "bnn":
-        return serve_bnn(args)
-    return serve_lm(args)
+    tracer = obs_trace.install() if args.trace_out else None
+    try:
+        if args.mode == "bnn":
+            return serve_bnn(args)
+        return serve_lm(args)
+    finally:
+        if tracer is not None:
+            obs_trace.uninstall()
+            tracer.export(args.trace_out)
+            print(f"wrote {len(tracer.events)} trace events to "
+                  f"{args.trace_out}")
 
 
 if __name__ == "__main__":

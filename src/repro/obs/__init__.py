@@ -1,0 +1,32 @@
+"""Unified observability layer (DESIGN.md §10).
+
+    trace       span tracing with Chrome/Perfetto trace-event export;
+                disabled by default behind a no-op fast path
+    metrics     counters/gauges/histograms/events registry + the one
+                canonical percentile/summary implementation, and the
+                ServingMetrics view both servers share
+    flight      bounded ring buffer of recent request records (postmortems)
+    provenance  the ``meta`` block stamped into every BENCH_*.json
+
+The contract: with tracing disabled (the default) the hot path sees one
+global read per instrumentation site and zero jit retraces; enabling it
+adds host-side spans only (never anything traced), so served results
+stay bit-exact and ``trace_count`` stays flat — both pinned by
+``tests/test_obs.py``.
+"""
+
+from repro.obs import metrics, trace
+from repro.obs.flight import FlightRecorder
+from repro.obs.metrics import (MetricsRegistry, ServingMetrics,
+                               get_registry, percentile, summarize,
+                               use_registry)
+from repro.obs.provenance import provenance_meta, stamp, write_bench
+from repro.obs.trace import (Tracer, get_tracer, install, span, uninstall,
+                             validate_trace)
+
+__all__ = [
+    "FlightRecorder", "MetricsRegistry", "ServingMetrics", "Tracer",
+    "get_registry", "get_tracer", "install", "metrics", "percentile",
+    "provenance_meta", "span", "stamp", "summarize", "trace", "uninstall",
+    "use_registry", "validate_trace", "write_bench",
+]

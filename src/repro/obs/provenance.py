@@ -1,0 +1,96 @@
+"""Benchmark provenance: the ``meta`` block every ``BENCH_*.json``
+carries (DESIGN.md §10.5).
+
+A benchmark number without its context — which commit, which jax, which
+device — is not comparable across runs; the bench trajectory only
+becomes a trajectory once every artifact is stamped.  ``stamp(report)``
+adds a ``meta`` dict with git sha, jax/jaxlib versions, device
+kind/count, timestamp, and the executor backend list; every writer in
+``benchmarks/`` goes through :func:`write_bench` (via
+``benchmarks.common``), and CI's obs-smoke job asserts the block is
+present.
+
+Everything is best-effort: a missing git binary or a detached worktree
+yields ``None`` fields, never a failed benchmark.
+"""
+
+from __future__ import annotations
+
+import datetime
+import json
+import pathlib
+import platform
+import subprocess
+import sys
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+
+META_SCHEMA = "bench-meta-v1"
+
+
+def git_revision(root: pathlib.Path | None = None
+                 ) -> tuple[str | None, bool | None]:
+    """(sha, dirty) of the repo containing this package; (None, None)
+    when git is unavailable."""
+    cwd = root or _REPO_ROOT
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], cwd=cwd, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip())
+        return sha, dirty
+    except (OSError, subprocess.SubprocessError):
+        return None, None
+
+
+def provenance_meta() -> dict:
+    """The meta block: enough to compare two BENCH artifacts honestly."""
+    import jax
+
+    try:
+        import jaxlib
+
+        jaxlib_version = jaxlib.__version__
+    except Exception:
+        jaxlib_version = None
+    try:
+        devices = jax.devices()
+        device_kind = devices[0].device_kind
+        n_devices = len(devices)
+    except RuntimeError:
+        device_kind, n_devices = None, 0
+    from repro.runtime.executor import ALL_MODES
+
+    sha, dirty = git_revision()
+    return {
+        "schema": META_SCHEMA,
+        "git_sha": sha,
+        "git_dirty": dirty,
+        "jax": jax.__version__,
+        "jaxlib": jaxlib_version,
+        "backend": jax.default_backend(),
+        "device_kind": device_kind,
+        "n_devices": n_devices,
+        "backends": list(ALL_MODES),
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                             .isoformat(timespec="seconds"),
+    }
+
+
+def stamp(report: dict) -> dict:
+    """A copy of ``report`` carrying the provenance ``meta`` block."""
+    return dict(report, meta=provenance_meta())
+
+
+def write_bench(path, report: dict, *, sort_keys: bool = False) -> dict:
+    """Stamp and write one BENCH artifact; returns the stamped report —
+    the single write path for every ``BENCH_*.json``."""
+    stamped = stamp(report)
+    with open(path, "w") as f:
+        json.dump(stamped, f, indent=1, sort_keys=sort_keys)
+        f.write("\n")
+    return stamped

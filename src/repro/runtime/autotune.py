@@ -58,6 +58,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _trace
 from repro.runtime.executor import (BACKENDS, GraphExecutor, eval_node,
                                     valid_backends)
 from repro.runtime.graph import DISPATCHABLE_OPS, Graph, infer_types
@@ -158,6 +160,18 @@ def _label(backend: str, tile: dict) -> str:
     inner = ",".join(f"{k.replace('block_', '')}{v}"
                      for k, v in sorted(tile.items()))
     return f"{backend}[{inner}]"
+
+
+def _tuning_event(outcome: str, op: str, key: str, entry: dict) -> None:
+    """Record one tuning decision in the process registry: an
+    ``autotune.{hit,disk_hit,xfer_hit,miss}`` counter bump plus a
+    structured ``autotune`` event carrying the signature and, for fresh
+    sweeps, how many candidates were timed."""
+    reg = _obs_metrics.get_registry()
+    reg.counter(f"autotune.{outcome}").inc()
+    reg.event("autotune", outcome=outcome, op=op, signature=key,
+              sweep_size=(len(entry.get("timings_ms", {}))
+                          if outcome == "miss" else 0))
 
 
 def _chain_signature(chain) -> str:
@@ -309,18 +323,24 @@ class Autotuner:
             in_t = types[node.inputs[0]]
             key = _node_signature(node, in_t.shape, self.candidates)
             akey = _agnostic_signature(node, in_t.shape, self.candidates)
-            if key not in self.cache:
-                if key in self._disk:       # warm start from a prior run
-                    self.cache[key] = self._disk[key]
-                elif (xfer := self._cross_batch_entry(akey)) is not None:
-                    # Winner measured at another serving bucket; tile has
-                    # no block_n, so it transfers without re-timing.
-                    self.cache[key] = dict(xfer,
-                                           reused_across_batch=True)
-                else:
+            if key in self.cache:
+                outcome = "hit"             # warm in-memory winner
+            elif key in self._disk:         # warm start from a prior run
+                self.cache[key] = self._disk[key]
+                outcome = "disk_hit"
+            elif (xfer := self._cross_batch_entry(akey)) is not None:
+                # Winner measured at another serving bucket; tile has
+                # no block_n, so it transfers without re-timing.
+                self.cache[key] = dict(xfer, reused_across_batch=True)
+                outcome = "xfer_hit"
+            else:
+                with _trace.span("autotune.sweep", "autotune",
+                                 op=node.op):
                     self.cache[key] = fresh[key] = self._tune_node(
                         node, in_t.shape, in_t.dtype)
+                outcome = "miss"
             entry = self.cache[key]
+            _tuning_event(outcome, node.op, key, entry)
             if akey not in self.agnostic_cache and \
                     not entry.get("reused_across_batch"):
                 record = {k: v for k, v in entry.items()
@@ -386,12 +406,17 @@ class Autotuner:
         fresh: dict[str, dict] = {}
         for chain in chains:
             key = _chain_signature(chain)
-            if key not in self.cache:
-                if key in self._disk:
-                    self.cache[key] = self._disk[key]
-                else:
+            if key in self.cache:
+                outcome = "hit"
+            elif key in self._disk:
+                self.cache[key] = self._disk[key]
+                outcome = "disk_hit"
+            else:
+                with _trace.span("autotune.sweep", "autotune", op="chain"):
                     self.cache[key] = fresh[key] = self._tune_chain(
                         chain, graph)
+                outcome = "miss"
+            _tuning_event(outcome, "chain", key, self.cache[key])
             tile = dict(self.cache[key].get("tile") or {})
             # The signature does not embed the VMEM budget, so a winner
             # cached under a larger budget may no longer fit this

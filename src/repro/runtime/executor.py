@@ -49,6 +49,8 @@ from jax import lax
 from repro.core import (binary_conv, binary_ops, bitplanes,
                         layer_integration, packing)
 from repro.core.bnn_model import _BN_EPS
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _trace
 from repro.runtime.graph import DISPATCHABLE_OPS, Graph
 
 BACKENDS = ("xla", "xla_pm1", "mxu_pm1", "vpu_popcount", "vpu_direct",
@@ -267,6 +269,7 @@ class GraphExecutor:
                        for nid, n in graph.nodes.items() if n.params}
         self._schedule = graph.topo_order()
         self.trace_count = 0
+        self._node_jits: dict[int, Any] = {}  # traced_call's own cache
         if donate_input:
             # The serving path hands each batch's input buffer to the
             # device for reuse (arg 1 = x; arg 0, the params, is never
@@ -280,6 +283,10 @@ class GraphExecutor:
     # ---- execution -------------------------------------------------------
     def _run(self, arrays, x):
         self.trace_count += 1  # increments at trace time only
+        # Runtime-wide retrace series (DESIGN.md §10.2).  This runs at
+        # trace time only — a host-side side effect exactly like the
+        # counter above — so the compiled hot path carries no obs work.
+        _obs_metrics.get_registry().counter("runtime.retraces").inc()
         g = self.graph
         env: dict[int, Any] = {}
         for nid in self._schedule:
@@ -303,7 +310,82 @@ class GraphExecutor:
         return env[g.output_id]
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
-        return self._jitted(self.arrays, x)
+        # The disabled-tracing fast path is one global read: no span
+        # object, no frame beyond this test (DESIGN.md §10.4).
+        if _trace._TRACER is None:
+            return self._jitted(self.arrays, x)
+        with _trace.span("executor.call", "runtime",
+                         nodes=len(self._schedule),
+                         regions=len(self.regions)):
+            return self._jitted(self.arrays, x)
+
+    # ---- traced (diagnostic) execution -----------------------------------
+    def _node_fn(self, nid: int):
+        """Per-node jit'd callables for :meth:`traced_call`, cached so
+        repeated traced calls never re-trace.  Kept apart from the fused
+        closure: building these does not touch ``trace_count``."""
+        fn = self._node_jits.get(nid)
+        if fn is None:
+            node = self.graph.nodes[nid]
+            if nid in self._region_head:
+                from repro.runtime import regions as _regions
+
+                chain = self._region_head[nid]
+                fn = jax.jit(lambda arrays, x:
+                             _regions.eval_chain(chain, arrays, x))
+            else:
+                op, attrs = node.op, dict(node.attrs)
+                backend = self.backends.get(nid, "xla")
+                tile = self.tile_configs.get(nid)
+                fn = jax.jit(lambda params, *ins: eval_node(
+                    op, attrs, params, list(ins), backend=backend,
+                    tile=tile))
+            self._node_jits[nid] = fn
+        return fn
+
+    def traced_call(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Per-node execution with one span per node / chain region.
+
+        The diagnostic answer to "where did this forward's time go":
+        walks the schedule host-side, blocking after every node so each
+        span's duration is real wall time (the fused ``__call__`` cannot
+        attribute time below the whole closure).  Bit-exact with
+        ``__call__`` — same backends, same tiles, same region evaluation
+        — and runs through its own per-node jit cache, so the fused
+        closure is never retraced (``trace_count`` unchanged).  Blocking
+        per node forfeits inter-node overlap: this is a profiling tool,
+        not a serving path.
+        """
+        g = self.graph
+        env: dict[int, Any] = {}
+        with _trace.span("executor.traced_call", "runtime",
+                         nodes=len(self._schedule)):
+            for nid in self._schedule:
+                node = g.nodes[nid]
+                if node.op == "input":
+                    env[nid] = x
+                    continue
+                if nid in self._region_members:
+                    chain = self._region_head.get(nid)
+                    if chain is None:
+                        continue
+                    label = "+".join(map(str, chain.node_ids))
+                    with _trace.span(f"region.{label}", "executor",
+                                     op="chain", stages=len(chain.stages)):
+                        out = self._node_fn(nid)(self.arrays,
+                                                 env[node.inputs[0]])
+                        jax.block_until_ready(out)
+                    env[chain.tail] = out
+                    continue
+                with _trace.span(f"node.{node.op}", "executor", node=nid,
+                                 backend=self.backends.get(nid)) as sp:
+                    out = self._node_fn(nid)(
+                        self.arrays.get(str(nid), {}),
+                        *[env[i] for i in node.inputs])
+                    jax.block_until_ready(out)
+                    sp.set(shape=list(getattr(out, "shape", ())))
+                env[nid] = out
+        return env[g.output_id]
 
     # ---- variants --------------------------------------------------------
     def with_backends(self, backends: str | Mapping[int, str],

@@ -70,6 +70,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bnn_model, converter
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _trace
 
 # Modes whose flat-path impl is the ±1-matmul reformulation.
 _PM1_MODES = ("mxu_pm1", "xla_pm1")
@@ -167,28 +169,48 @@ class PhoneBitEngine:
                 f"bucket {bs} not divisible by data_parallel={data_parallel}")
         key = (bs, donate_input, data_parallel)
         if key not in self._compiled:
-            if self.matmul_mode == "auto":
-                exe = self._tuner.tuned_executor(
-                    self._graph,
-                    self._plan_shape(max(bs // data_parallel, 1)),
-                    donate_input=donate_input)
-            elif self.matmul_mode == "vpu_chain":
-                # Region-fused serving (DESIGN.md §9): chains of packed
-                # ops run as single megakernel calls.  Per-chain tile
-                # shapes are autotuned on TPU only — interpret-mode
-                # timings are validators, not contenders (same policy as
-                # ``default_candidates``).
-                exe = runtime.chain_executor(
-                    self._graph,
-                    self._plan_shape(max(bs // data_parallel, 1)),
-                    tuner=(self._tuner if jax.default_backend() == "tpu"
-                           else None),
-                    donate_input=donate_input)
-            else:
-                exe = runtime.GraphExecutor(self._graph, self.matmul_mode,
-                                            donate_input=donate_input)
+            with _trace.span("compile.executor", "compile", bucket=bs,
+                             mode=self.matmul_mode,
+                             data_parallel=data_parallel):
+                if self.matmul_mode == "auto":
+                    exe = self._tuner.tuned_executor(
+                        self._graph,
+                        self._plan_shape(max(bs // data_parallel, 1)),
+                        donate_input=donate_input)
+                elif self.matmul_mode == "vpu_chain":
+                    # Region-fused serving (DESIGN.md §9): chains of packed
+                    # ops run as single megakernel calls.  Per-chain tile
+                    # shapes are autotuned on TPU only — interpret-mode
+                    # timings are validators, not contenders (same policy as
+                    # ``default_candidates``).
+                    exe = runtime.chain_executor(
+                        self._graph,
+                        self._plan_shape(max(bs // data_parallel, 1)),
+                        tuner=(self._tuner if jax.default_backend() == "tpu"
+                               else None),
+                        donate_input=donate_input)
+                else:
+                    exe = runtime.GraphExecutor(self._graph,
+                                                self.matmul_mode,
+                                                donate_input=donate_input)
+            self._record_compile_metrics(exe, bs, data_parallel)
             self._compiled[key] = exe
         return self._compiled[key]
+
+    def _record_compile_metrics(self, exe, bs: int,
+                                data_parallel: int) -> None:
+        """Publish runtime-wide memory series for a freshly built bucket:
+        the arena plan's peak and, for region-fused executors, the HBM
+        round-trip traffic the chains keep in VMEM (DESIGN.md §10.2)."""
+        from repro import runtime
+
+        reg = _obs_metrics.get_registry()
+        plan = runtime.plan_memory(
+            exe.graph, self._plan_shape(max(bs // data_parallel, 1)))
+        reg.gauge("runtime.arena_peak_bytes").set(plan.peak_bytes())
+        if getattr(exe, "regions", None):
+            reg.gauge("runtime.chain_hbm_bytes_avoided").set(
+                sum(c.hbm_bytes_avoided() for c in exe.regions))
 
     @property
     def _executor(self):

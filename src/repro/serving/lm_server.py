@@ -33,9 +33,10 @@ import numpy as np
 
 from repro.distributed.sharding import Rules
 from repro.models import transformer
+from repro.obs import trace as _trace
+from repro.obs.metrics import ServingMetrics
 from repro.serving.kv_cache import KVCacheManager
 from repro.serving.scheduler import Request, shed_expired_requests
-from repro.serving.server import ServingMetrics
 
 
 @dataclasses.dataclass
@@ -62,7 +63,7 @@ class LMServer:
         # ---- server-protocol state (submit/poll/drain/metrics) ----------
         self._waiting: deque[Request] = deque()
         self._by_seq: dict[int, tuple[Request, Any]] = {}
-        self._metrics = ServingMetrics()
+        self._metrics = ServingMetrics(self.clock)
         self.dropped = 0
 
     # ---- admission -------------------------------------------------------
@@ -121,6 +122,7 @@ class LMServer:
         # one clock domain for arrival and completion (fake-clock tests)
         r.arrival_s = self.clock() if now is None else now
         self._waiting.append(r)
+        _trace.instant("serve.submit", "serve", req=r.id)
         return r
 
     def poll(self, request: Request) -> bool:
@@ -132,6 +134,7 @@ class LMServer:
         # must not protect queued requests from their deadlines.
         self._waiting, shed = shed_expired_requests(self._waiting, now)
         self.dropped += len(shed)
+        self._metrics.record_dropped(len(shed))
         while self._waiting and self.manager.can_admit():
             r = self._waiting.popleft()
             prompt, max_new = r.payload
@@ -160,6 +163,11 @@ class LMServer:
         while self._waiting or self._by_seq:
             done += self.serve_tick(now)
         return done
+
+    @property
+    def metrics_registry(self):
+        """This server's metric series (same shape as InferenceServer's)."""
+        return self._metrics.registry
 
     @property
     def queue_depth(self) -> int:

@@ -25,7 +25,6 @@ dropped count — definitions in DESIGN.md §7.4).
 
 from __future__ import annotations
 
-import math
 import time
 from typing import Any, Callable, Protocol, runtime_checkable
 
@@ -33,6 +32,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Canonical home of the latency math and serving metrics is the
+# observability layer (DESIGN.md §10); re-exported here for the existing
+# import surface.
+from repro.obs import FlightRecorder
+from repro.obs import trace as _trace
+from repro.obs.metrics import ServingMetrics, percentile  # noqa: F401
 from repro.serving.scheduler import BatchScheduler, Request
 
 
@@ -49,66 +54,20 @@ class Server(Protocol):
     def metrics(self) -> dict: ...
 
 
-def percentile(sorted_vals: list[float], p: float) -> float | None:
-    """Nearest-rank percentile of an ascending list (None when empty):
-    the smallest value with at least ``p`` of the sample at or below it,
-    i.e. index ``ceil(p*n) - 1``."""
-    n = len(sorted_vals)
-    if not n:
-        return None
-    return sorted_vals[max(0, min(n - 1, math.ceil(p * n) - 1))]
-
-
-class ServingMetrics:
-    """Latency/throughput bookkeeping shared by both servers (§7.4): one
-    definition of p50/p95, the busy window, and the metrics dict, so the
-    two protocol implementations cannot drift.  The busy window uses the
-    owner's (injectable) clock — under a fake clock, throughput reports
-    simulated time, the same domain as the latency percentiles."""
-
-    def __init__(self, clock: Callable[[], float] = time.monotonic):
-        self._clock = clock
-        self.latencies: list[float] = []
-        self.served = 0
-        self._t_first: float | None = None
-        self._t_last: float | None = None
-
-    def mark_dispatch(self) -> None:
-        """First device work entered flight: the busy window opens."""
-        if self._t_first is None:
-            self._t_first = self._clock()
-
-    def record(self, latencies: list[float]) -> None:
-        """A batch of requests completed with these submit→done times."""
-        self.latencies.extend(latencies)
-        self.served += len(latencies)
-        self._t_last = self._clock()
-
-    def snapshot(self, *, dropped: int, queue_depth: int,
-                 **extra) -> dict:
-        lat = sorted(self.latencies)
-        busy = (self._t_last - self._t_first
-                if self._t_first is not None and self._t_last is not None
-                else None)
-        return {
-            "served": self.served,
-            "dropped": dropped,
-            "queue_depth": queue_depth,
-            "p50_ms": None if not lat else percentile(lat, 0.50) * 1e3,
-            "p95_ms": None if not lat else percentile(lat, 0.95) * 1e3,
-            "throughput": (self.served / busy if busy else None),
-            **extra,
-        }
-
-
 class _InFlight:
-    """One dispatched batch: requests + the device array still computing."""
+    """One dispatched batch: requests + the device array still computing,
+    plus the dispatch stamp and host-stage timings the flight recorder
+    attaches to each request at scatter."""
 
-    __slots__ = ("batch", "out")
+    __slots__ = ("batch", "out", "bucket", "t_dispatch", "stage_s")
 
-    def __init__(self, batch: list[Request], out):
+    def __init__(self, batch: list[Request], out, bucket: int,
+                 t_dispatch: float, stage_s: float):
         self.batch = batch
         self.out = out
+        self.bucket = bucket
+        self.t_dispatch = t_dispatch
+        self.stage_s = stage_s
 
 
 class InferenceServer:
@@ -129,7 +88,16 @@ class InferenceServer:
                      k's device work is in flight — host preprocessing is
                      the classic serving cost double-buffering hides.
     mesh/data_axis:  optional device mesh for data-parallel sharding.
+    flight_capacity: size of the flight-recorder ring (recent request
+                     records for postmortems; ``server.flight.dump()``).
     clock:           injectable monotonic clock (tests use a fake).
+
+    Observability (DESIGN.md §10): when a tracer is installed
+    (``repro.obs.trace.install()``) each serving stage emits a span —
+    ``serve.submit`` (instant), ``serve.assemble``, ``serve.stage``,
+    ``serve.dispatch``, ``serve.device``, ``serve.scatter`` — all
+    host-side, so tracing never retraces the compiled executables.
+    Disabled (the default), every site is one global read.
     """
 
     def __init__(self, engine, *, max_batch: int = 8,
@@ -140,6 +108,7 @@ class InferenceServer:
                  preprocess: Callable[[np.ndarray], np.ndarray]
                  | None = None,
                  mesh=None, data_axis: str = "data",
+                 flight_capacity: int = 256,
                  clock: Callable[[], float] = time.monotonic):
         self.engine = engine
         self.preprocess = preprocess
@@ -158,6 +127,8 @@ class InferenceServer:
         self.clock = clock
         self._pending: _InFlight | None = None
         self._metrics = ServingMetrics(clock)
+        # Postmortem ring of recent request records (DESIGN.md §10.3).
+        self.flight = FlightRecorder(flight_capacity)
 
     # ---- executable cache -------------------------------------------------
     def _executable(self, bucket: int):
@@ -170,11 +141,14 @@ class InferenceServer:
         triggers zero retraces (``engine.trace_count`` stays flat)."""
         timings: dict[int, float] = {}
         for b in self.scheduler.buckets:
-            t0 = time.perf_counter()
-            exe = self._executable(b)
-            x = self._place(np.zeros(self.engine._plan_shape(b), np.uint8))
-            jax.block_until_ready(exe(x))
-            timings[b] = time.perf_counter() - t0
+            with _trace.span("compile.bucket", "compile", bucket=b,
+                             data_parallel=self.data_parallel):
+                t0 = time.perf_counter()
+                exe = self._executable(b)
+                x = self._place(np.zeros(self.engine._plan_shape(b),
+                                         np.uint8))
+                jax.block_until_ready(exe(x))
+                timings[b] = time.perf_counter() - t0
         return timings
 
     # ---- placement --------------------------------------------------------
@@ -193,8 +167,9 @@ class InferenceServer:
         # Arrival is stamped from the server's clock so latency samples
         # stay in one clock domain when a fake clock is injected.
         now = self.clock() if now is None else now
-        return self.scheduler.submit(payload, deadline_s=deadline_s,
-                                     now=now)
+        r = self.scheduler.submit(payload, deadline_s=deadline_s, now=now)
+        _trace.instant("serve.submit", "serve", req=r.id)
+        return r
 
     def poll(self, request: Request) -> bool:
         return request.done
@@ -202,21 +177,45 @@ class InferenceServer:
     # ---- dispatch / scatter ----------------------------------------------
     def _dispatch(self, batch: list[Request],
                   payloads: list[Any]) -> _InFlight:
-        rows = [np.asarray(p) for p in payloads]
-        if self.preprocess is not None:     # pads go through it too
-            rows = [self.preprocess(r) for r in rows]
-        x = self._place(np.stack(rows))
-        out = self._executable(x.shape[0])(x)   # async: returns immediately
-        self._metrics.mark_dispatch()
-        return _InFlight(batch, out)
+        t0 = self.clock()
+        with _trace.span("serve.stage", "serve", bucket=len(payloads),
+                         n_real=len(batch)):
+            rows = [np.asarray(p) for p in payloads]
+            if self.preprocess is not None:     # pads go through it too
+                rows = [self.preprocess(r) for r in rows]
+            x = self._place(np.stack(rows))
+        with _trace.span("serve.dispatch", "serve", bucket=x.shape[0]):
+            out = self._executable(x.shape[0])(x)   # async: returns now
+        t1 = self.clock()
+        self._metrics.mark_dispatch(bucket=len(payloads))
+        return _InFlight(batch, out, len(payloads), t1, t1 - t0)
 
     def _scatter(self, flight: _InFlight) -> list[Request]:
-        host = np.asarray(flight.out)           # the only blocking point
+        with _trace.span("serve.device", "serve", bucket=flight.bucket):
+            host = np.asarray(flight.out)       # the only blocking point
         now = self.clock()
-        for r, row in zip(flight.batch, host):
-            r.result, r.done = row, True
+        with _trace.span("serve.scatter", "serve",
+                         n_real=len(flight.batch)):
+            for r, row in zip(flight.batch, host):
+                r.result, r.done = row, True
         self._metrics.record([now - r.arrival_s for r in flight.batch])
+        for r in flight.batch:
+            self.flight.record(
+                id=r.id, outcome="served", bucket=flight.bucket,
+                arrival_s=r.arrival_s, deadline_s=r.deadline_s,
+                dispatched_s=flight.t_dispatch, done_s=now,
+                queue_s=flight.t_dispatch - r.arrival_s,
+                stage_s=flight.stage_s, latency_s=now - r.arrival_s)
         return flight.batch
+
+    def _record_shed(self, shed: list[Request], now: float) -> None:
+        self._metrics.record_dropped(len(shed))
+        for r in shed:
+            self.flight.record(id=r.id, outcome="shed",
+                               arrival_s=r.arrival_s,
+                               deadline_s=r.deadline_s, done_s=now,
+                               latency_s=now - r.arrival_s)
+            _trace.instant("serve.shed", "serve", req=r.id)
 
     def step(self, now: float | None = None,
              force: bool = False) -> list[Request]:
@@ -226,7 +225,14 @@ class InferenceServer:
         synchronously each batch completes before the next is assembled.
         Returns the requests completed this tick."""
         now = self.clock() if now is None else now
-        got = self.scheduler.padded_batch(now, force=force)
+        # Shed before assembly so the flight recorder sees every deadline
+        # outcome (padded_batch sheds too, but silently — same policy,
+        # same ``now``, so nothing is left for it to shed).
+        shed = self.scheduler.shed_expired(now)
+        if shed:
+            self._record_shed(shed, now)
+        with _trace.span("serve.assemble", "serve"):
+            got = self.scheduler.padded_batch(now, force=force)
         flight = self._dispatch(*got) if got is not None else None
         if not self.async_dispatch and flight is not None:
             return self._scatter(flight)
@@ -246,6 +252,13 @@ class InferenceServer:
         return done
 
     # ---- observability ----------------------------------------------------
+    @property
+    def metrics_registry(self):
+        """This server's metric series (``repro.obs.MetricsRegistry``):
+        ``serve.latency_s``, ``serve.bucket_size`` (per-bucket dispatch
+        histogram), ``serve.served``, ``serve.dropped``."""
+        return self._metrics.registry
+
     @property
     def queue_depth(self) -> int:
         inflight = len(self._pending.batch) if self._pending else 0

@@ -290,11 +290,20 @@ class TestChainAutotune:
         x = jnp.asarray(rng.integers(0, 256, (1, 16, 16, 3)), jnp.uint8)
         ref = np.asarray(GraphExecutor(g, "xla")(x))
 
+        from repro.obs import metrics as obs_metrics
+
         chains = partition_chains(g, x.shape)
         tuner = Autotuner(warmup=0, iters=1)
-        tuner.tune_chains(g, chains)
+        with obs_metrics.use_registry() as reg:
+            tuner.tune_chains(g, chains)
         keys = [k for k in tuner.cache if k.startswith("chain::")]
         assert len(keys) == len(chains) == 1
+        # one structured miss event per freshly swept chain signature
+        evs = reg.events("autotune")
+        assert [e["outcome"] for e in evs] == ["miss"]
+        assert evs[0]["op"] == "chain" and evs[0]["signature"] == keys[0]
+        assert evs[0]["sweep_size"] >= 1
+        assert reg.counter("autotune.miss").value == 1
         entry = tuner.cache[keys[0]]
         assert entry["winner"] == "vpu_chain"
         assert any(lbl.startswith("vpu_chain")
@@ -312,9 +321,12 @@ class TestChainAutotune:
             lambda self, c, g: calls.append(c) or {"winner": "vpu_chain",
                                                    "tile": {}})
         chains2 = partition_chains(g, x.shape)
-        tuner2.tune_chains(g, chains2)
+        with obs_metrics.use_registry() as reg2:
+            tuner2.tune_chains(g, chains2)
         assert not calls, "disk-cached chain winner was re-timed"
         assert chains2[0].tile == chains[0].tile
+        assert reg2.counter("autotune.disk_hit").value == 1
+        assert reg2.counter("autotune.miss").value == 0
 
     def test_candidates_respect_budget(self):
         g, _ = _fused_graph(CHAIN_NET, (16, 16), seed=1)

@@ -308,12 +308,21 @@ class TestAutotuneTilesAndCache:
         np.testing.assert_array_equal(np.asarray(ex(x)), np.asarray(ref))
 
     def test_disk_cache_roundtrip(self, pooly, tmp_path, monkeypatch):
+        from repro.obs import metrics as obs_metrics
+
         spec, _, packed, x = pooly
         path = tmp_path / "autotune.json"
         monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
         gf = fuse_pool_epilogue(lower_packed(spec, packed, (16, 16)))
         t1 = Autotuner(candidates=("xla", "xla_pm1"), warmup=0, iters=1)
-        choices, _ = t1.tune_with_tiles(gf, (1, 16, 16, 3))
+        with obs_metrics.use_registry() as reg1:
+            choices, _ = t1.tune_with_tiles(gf, (1, 16, 16, 3))
+        # every fresh sweep leaves a structured miss event per signature
+        evs = reg1.events("autotune")
+        assert [e["outcome"] for e in evs] == ["miss"] * len(t1.cache)
+        assert all(e["sweep_size"] >= 2 for e in evs)  # 2+ candidates
+        assert {e["signature"] for e in evs} == set(t1.cache)
+        assert reg1.counter("autotune.miss").value == len(t1.cache)
         assert path.exists()
         persisted = json.loads(path.read_text())
         # each measurement persists twice: under its exact signature and
@@ -328,9 +337,13 @@ class TestAutotuneTilesAndCache:
         # same winners, no new timing entries written.
         mtime = path.stat().st_mtime_ns
         t2 = Autotuner(candidates=("xla", "xla_pm1"), warmup=0, iters=1)
-        choices2, _ = t2.tune_with_tiles(gf, (1, 16, 16, 3))
+        with obs_metrics.use_registry() as reg2:
+            choices2, _ = t2.tune_with_tiles(gf, (1, 16, 16, 3))
         assert choices2 == choices
         assert path.stat().st_mtime_ns == mtime
+        # ...and the warm start is visible as disk_hit events, no misses
+        assert reg2.counter("autotune.disk_hit").value == len(t2.cache)
+        assert reg2.counter("autotune.miss").value == 0
 
     def test_escape_hatch_disables_persistence(self, pooly, tmp_path,
                                                monkeypatch):
