@@ -25,10 +25,11 @@ def main(argv: list[str] | None = None) -> None:
                              "BENCH_kernels.json / BENCH_workloads.json)")
     args = parser.parse_args(argv)
 
-    from benchmarks import (crossover, fig5_layers, graph_plan,
-                            kernels_bench, roofline, serving_bench,
-                            table2_model_size, table3_runtime,
-                            table4_energy, workloads_bench)
+    from benchmarks import (crossover, endurance_bench, fig5_layers,
+                            graph_plan, kernels_bench, roofline,
+                            serving_bench, table2_model_size,
+                            table3_runtime, table4_energy,
+                            workloads_bench)
 
     if args.smoke:
         kernels_bench.run(smoke=True)
@@ -43,6 +44,7 @@ def main(argv: list[str] | None = None) -> None:
             ("graph_plan", graph_plan.run),
             ("kernels_bench", kernels_bench.run),
             ("serving_bench", serving_bench.run),
+            ("endurance_bench", endurance_bench.run),
             ("workloads_bench", workloads_bench.run),
             ("crossover", crossover.run),
     ):

@@ -43,6 +43,13 @@ def _print_metrics(tag: str, m: dict) -> None:
     thr = (f"{m['throughput']:.1f}/s" if m.get("throughput") else "n/a")
     print(f"[{tag}] served {m['served']} (dropped {m['dropped']}), "
           f"{lat}, throughput {thr}")
+    # Resilience counters (DESIGN.md §11) — only noisy when nonzero.
+    res = {k: m[k] for k in ("retries", "errors", "rejected", "degraded")
+           if m.get(k)}
+    if res:
+        mode = f", mode {m['mode']}" if m.get("mode") else ""
+        print(f"[{tag}] resilience: "
+              + ", ".join(f"{k} {v}" for k, v in res.items()) + mode)
 
 
 def serve_bnn(args) -> dict:
@@ -72,10 +79,26 @@ def serve_bnn(args) -> dict:
         engine, max_batch=args.batch, max_wait_s=0.0,
         buckets=buckets_for(args.batch),
         async_dispatch=not args.sync, mesh=mesh,
-        preprocess=workload.preprocess_hook if workload else None)
+        preprocess=workload.preprocess_hook if workload else None,
+        max_queue=args.max_queue or None,
+        watchdog_s=args.watchdog_s)
     compile_s = server.compile_buckets()
     print(f"compiled buckets {list(compile_s)} in "
           f"{sum(compile_s.values()):.2f}s")
+
+    plan = None
+    if args.fault_storm:
+        # Demo the resilience layer end to end: seeded transient device
+        # faults + latency spikes while the request stream flows.
+        from repro.serving.faults import FaultPlan, FaultSpec, install
+
+        plan = install(FaultPlan([
+            FaultSpec("server.device", "device_fault", times=2),
+            FaultSpec("server.device", "device_fault", rate=0.1, after=2),
+            FaultSpec("server.device", "latency_spike", rate=0.1,
+                      duration_s=0.002),
+        ], seed=7))
+        print("[bnn] fault storm installed (seed 7)")
 
     rng = np.random.default_rng(0)
     # Workload requests arrive at an off-network size to exercise the
@@ -87,6 +110,12 @@ def serve_bnn(args) -> dict:
             rng.integers(0, 256, (*req_hw, 3), dtype=np.uint8),
             deadline_s=args.deadline_s))
     server.drain()
+    if plan is not None:
+        from repro.serving import faults
+
+        faults.uninstall()
+        print(f"[bnn] storm: {len(plan.log)} faults injected, "
+              f"{len(server.health.demotions)} demotions")
     m = server.metrics()
     _print_metrics("bnn", m)
     if workload is not None:
@@ -148,6 +177,16 @@ def main(argv=None):
     ap.add_argument("--shard", action="store_true",
                     help="data-parallel batch sharding over host devices")
     ap.add_argument("--deadline-s", type=float, default=None)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission: submits beyond this queue "
+                         "depth resolve rejected (0 = unbounded)")
+    ap.add_argument("--watchdog-s", type=float, default=None,
+                    help="bound each device readback; a stalled "
+                         "executable resolves error instead of hanging")
+    ap.add_argument("--fault-storm", action="store_true",
+                    help="install a seeded fault plan (transient device "
+                         "faults + latency spikes) to demo retry/"
+                         "degrade — bnn mode only")
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--trace-out", default=None, metavar="PATH",

@@ -201,6 +201,12 @@ class ServingMetrics:
         self._served = self.registry.counter(f"{prefix}.served")
         self._dropped = self.registry.counter(f"{prefix}.dropped")
         self._buckets = self.registry.histogram(f"{prefix}.bucket_size")
+        # Resilience series (DESIGN.md §11): retries, terminal errors,
+        # admission rejections, and backend demotions.
+        self._retries = self.registry.counter(f"{prefix}.retries")
+        self._errors = self.registry.counter(f"{prefix}.errors")
+        self._rejected = self.registry.counter(f"{prefix}.rejected")
+        self._degraded = self.registry.counter(f"{prefix}.degraded")
         self._t_first: float | None = None
         self._t_last: float | None = None
 
@@ -229,6 +235,18 @@ class ServingMetrics:
     def record_dropped(self, n: int = 1) -> None:
         self._dropped.inc(n)
 
+    def record_retry(self, n: int = 1) -> None:
+        self._retries.inc(n)
+
+    def record_error(self, n: int = 1) -> None:
+        self._errors.inc(n)
+
+    def record_rejected(self, n: int = 1) -> None:
+        self._rejected.inc(n)
+
+    def record_degraded(self, n: int = 1) -> None:
+        self._degraded.inc(n)
+
     def snapshot(self, *, dropped: int, queue_depth: int,
                  **extra) -> dict:
         lat = sorted(self.latencies)
@@ -238,6 +256,10 @@ class ServingMetrics:
         return {
             "served": self.served,
             "dropped": dropped,
+            "retries": self._retries.value,
+            "errors": self._errors.value,
+            "rejected": self._rejected.value,
+            "degraded": self._degraded.value,
             "queue_depth": queue_depth,
             "p50_ms": None if not lat else percentile(lat, 0.50) * 1e3,
             "p95_ms": None if not lat else percentile(lat, 0.95) * 1e3,

@@ -52,6 +52,7 @@ from repro.core.bnn_model import _BN_EPS
 from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _trace
 from repro.runtime.graph import DISPATCHABLE_OPS, Graph
+from repro.serving import faults as _faults
 
 BACKENDS = ("xla", "xla_pm1", "mxu_pm1", "vpu_popcount", "vpu_direct",
             "vpu_direct_pool")
@@ -310,6 +311,11 @@ class GraphExecutor:
         return env[g.output_id]
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        # Fault-injection site (DESIGN.md §11.1): host-side, before the
+        # compiled closure — a plan can make this executable "fail" or
+        # stall without touching what jit compiled.  Disabled: one read.
+        if _faults._PLAN is not None:
+            _faults.maybe_fault("executor.call", nodes=len(self._schedule))
         # The disabled-tracing fast path is one global read: no span
         # object, no frame beyond this test (DESIGN.md §10.4).
         if _trace._TRACER is None:

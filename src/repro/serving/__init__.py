@@ -1,22 +1,43 @@
-"""Serving layer (DESIGN.md §7).
+"""Serving layer (DESIGN.md §7, §11).
 
 engine      PhoneBitEngine — the paper's deployment story (Fig 2/Fig 3):
             load a converted artifact, run the packed integer forward;
             grows ``compile(batch)`` — the per-bucket executable cache
 server      InferenceServer — the production front end: bucketed
             precompiled executables, async double-buffered dispatch,
-            optional data-parallel batch sharding, p50/p95 metrics
+            optional data-parallel batch sharding, p50/p95 metrics,
+            retry/degrade resilience (every request terminally resolves)
 scheduler   request batching: deadline-aware, latency/throughput-bounded
             batch assembly, zero-padded to compiled buckets
+faults      seeded deterministic fault injection (FaultPlan/FaultSpec),
+            retry backoff policy, and the backend degradation ladder
 kv_cache    paged-lite KV cache manager for LM decode serving
 lm_server   continuous-batching LM decode loop speaking the same
             submit/poll/drain/metrics protocol as InferenceServer
 """
 
+from repro.serving import faults
 from repro.serving.engine import PhoneBitEngine
+from repro.serving.faults import (
+    DEGRADE_LADDER,
+    BackendHealth,
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    RetryPolicy,
+    WatchdogTimeout,
+)
 from repro.serving.kv_cache import KVCacheManager
-from repro.serving.scheduler import BatchScheduler, Request, buckets_for
+from repro.serving.scheduler import (
+    OUTCOMES,
+    BatchScheduler,
+    Request,
+    buckets_for,
+)
 from repro.serving.server import InferenceServer, Server
 
 __all__ = ["PhoneBitEngine", "BatchScheduler", "Request", "KVCacheManager",
-           "InferenceServer", "Server", "buckets_for"]
+           "InferenceServer", "Server", "buckets_for", "faults",
+           "FaultPlan", "FaultSpec", "FaultError", "RetryPolicy",
+           "BackendHealth", "WatchdogTimeout", "DEGRADE_LADDER",
+           "OUTCOMES"]

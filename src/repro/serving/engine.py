@@ -72,6 +72,7 @@ import jax.numpy as jnp
 from repro.core import bnn_model, converter
 from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _trace
+from repro.serving import faults as _faults
 
 # Modes whose flat-path impl is the ±1-matmul reformulation.
 _PM1_MODES = ("mxu_pm1", "xla_pm1")
@@ -147,37 +148,47 @@ class PhoneBitEngine:
                                  agnostic_cache=_AUTOTUNE_AGNOSTIC)
 
     def compile(self, batch_size: int | None = None, *,
-                donate_input: bool = False, data_parallel: int = 1):
+                donate_input: bool = False, data_parallel: int = 1,
+                mode: str | None = None):
         """Build (once) the executable for one serving bucket.
 
         Returns the cached :class:`GraphExecutor` for
-        ``(batch_size, donate_input, data_parallel)``, constructing and —
-        under ``matmul_mode="auto"`` — autotuning it on first request.
-        Autotuning happens at the **per-device** shard shape
+        ``(batch_size, donate_input, data_parallel, mode)``, constructing
+        and — under ``matmul_mode="auto"`` — autotuning it on first
+        request.  Autotuning happens at the **per-device** shard shape
         (``batch_size // data_parallel``) so a data-parallel server reuses
         the winners of the equivalent single-device bucket, and winners
         transfer across buckets where the tile does not span the batch
         dim.  Serve-time calls at a compiled bucket never retrace.
+
+        ``mode`` overrides ``matmul_mode`` for this executable only —
+        the serving resilience layer (DESIGN.md §11.3) uses it to demote
+        a failing bucket down the backend ladder without touching the
+        engine's configured mode (all modes are bit-exact, so a demoted
+        bucket serves identical results).
         """
         from repro import runtime
 
+        mode = mode or self.matmul_mode
         bs = batch_size if batch_size is not None else (self.batch_size or 1)
         if bs < 1:
             raise ValueError(f"batch_size must be >= 1, got {bs}")
         if data_parallel > 1 and bs % data_parallel:
             raise ValueError(
                 f"bucket {bs} not divisible by data_parallel={data_parallel}")
-        key = (bs, donate_input, data_parallel)
+        key = (bs, donate_input, data_parallel, mode)
         if key not in self._compiled:
+            if _faults._PLAN is not None:
+                _faults.maybe_fault("engine.compile", bucket=bs, mode=mode)
             with _trace.span("compile.executor", "compile", bucket=bs,
-                             mode=self.matmul_mode,
+                             mode=mode,
                              data_parallel=data_parallel):
-                if self.matmul_mode == "auto":
+                if mode == "auto":
                     exe = self._tuner.tuned_executor(
                         self._graph,
                         self._plan_shape(max(bs // data_parallel, 1)),
                         donate_input=donate_input)
-                elif self.matmul_mode == "vpu_chain":
+                elif mode == "vpu_chain":
                     # Region-fused serving (DESIGN.md §9): chains of packed
                     # ops run as single megakernel calls.  Per-chain tile
                     # shapes are autotuned on TPU only — interpret-mode
@@ -190,8 +201,7 @@ class PhoneBitEngine:
                                else None),
                         donate_input=donate_input)
                 else:
-                    exe = runtime.GraphExecutor(self._graph,
-                                                self.matmul_mode,
+                    exe = runtime.GraphExecutor(self._graph, mode,
                                                 donate_input=donate_input)
             self._record_compile_metrics(exe, bs, data_parallel)
             self._compiled[key] = exe

@@ -1,0 +1,405 @@
+"""Fault injection, retry policy, and backend degradation (DESIGN.md §11).
+
+The resilience layer's three pieces, in one module so the serve path has
+a single vocabulary for "what can go wrong and what we do about it":
+
+* **Fault injection** — a seeded, deterministic :class:`FaultPlan` of
+  :class:`FaultSpec` rules, installed process-wide exactly like the
+  tracer (module slot + ``install``/``uninstall``; disabled is one
+  global read).  Instrumented *sites* in the serve path call
+  :func:`maybe_fault(site, **ctx)`; a matching spec raises the typed
+  fault (``DeviceOOM``/``DeviceFault``/``CompileFault``/
+  ``PreprocessFault``) or, for ``latency_spike``, sleeps through the
+  plan's injectable ``sleep``.  Sites (the registry below) live in
+  ``server.py`` (``server.preprocess``/``server.dispatch``/
+  ``server.device``), ``engine.py`` (``engine.compile``),
+  ``executor.py`` (``executor.call``) and ``lm_server.py``
+  (``lm.step``).  Every decision is a function of (seed, per-spec call
+  count) — the same plan replays the same faults, which is what makes
+  the fault-matrix tests and the endurance storm reproducible.
+
+* **Retry policy** — :class:`RetryPolicy`: capped exponential backoff
+  with seeded jitter.  The *server* owns the clock; the policy only
+  does the math, so backoff works identically under a fake clock.
+
+* **Degradation ladder** — :data:`DEGRADE_LADDER` orders the serving
+  backends fast-but-fragile → slow-but-safe (the executor's
+  ``_FALLBACK`` chain extended to the ``xla`` floor).
+  :class:`BackendHealth` demotes the serving mode after
+  ``demote_after`` consecutive executable failures, quarantines the
+  failed mode, and re-probes it after a (failure-doubling) interval —
+  CNNdroid's lesson: mobile serving degrades to the safe path, it does
+  not crash.
+
+Everything here is host-side bookkeeping: nothing is ever traced, and
+with no plan installed every site costs one module-global read.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.obs import metrics as _obs_metrics
+
+# ---------------------------------------------------------------------------
+# Fault taxonomy
+# ---------------------------------------------------------------------------
+
+class FaultError(RuntimeError):
+    """Base of every injected fault; carries the site it fired at.
+
+    ``transient`` distinguishes faults a retry may outlive (device OOM
+    under memory pressure, a transient device fault) from deterministic
+    ones (a compile error reproduces every attempt) — the retry policy
+    retries both (capped), but the distinction is recorded for
+    postmortems.
+    """
+
+    kind = "fault"
+    transient = False
+
+    def __init__(self, site: str, **ctx):
+        self.site, self.ctx = site, dict(ctx)
+        extra = f" ({ctx})" if ctx else ""
+        super().__init__(f"injected {self.kind} at {site}{extra}")
+
+
+class DeviceOOM(FaultError):
+    """Device allocator refused the batch (transient under load)."""
+
+    kind = "device_oom"
+    transient = True
+
+
+class DeviceFault(FaultError):
+    """Generic transient device/executable failure."""
+
+    kind = "device_fault"
+    transient = True
+
+
+class CompileFault(FaultError):
+    """Executable build failed (deterministic: retries re-raise)."""
+
+    kind = "compile_error"
+
+
+class PreprocessFault(FaultError):
+    """Host preprocessing of one payload raised."""
+
+    kind = "preprocess_error"
+
+
+class WatchdogTimeout(RuntimeError):
+    """The dispatch watchdog expired waiting on a device readback."""
+
+
+# ``latency_spike`` is the one non-raising kind: the site stalls for
+# ``duration_s`` (through the plan's injectable sleep) and proceeds.
+LATENCY_SPIKE = "latency_spike"
+FAULT_KINDS: dict[str, type[FaultError]] = {
+    cls.kind: cls
+    for cls in (DeviceOOM, DeviceFault, CompileFault, PreprocessFault)}
+
+#: The instrumented sites (DESIGN.md §11.1).  ``maybe_fault`` accepts
+#: any site string, but plans targeting unknown sites never fire — the
+#: constructor rejects them to catch typos.
+SITES = ("server.preprocess", "server.dispatch", "server.device",
+         "engine.compile", "executor.call", "lm.step")
+
+
+# ---------------------------------------------------------------------------
+# Fault plans
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One injection rule: *where* (site + ctx match), *what* (kind),
+    and *when* (deterministic schedule or seeded rate).
+
+    Scheduling, evaluated against this spec's own eligible-call counter:
+
+    * ``after``  — skip the first ``after`` eligible calls;
+    * ``every``  — then fire on every ``every``-th call (default 1:
+      every call), unless ``rate`` is set;
+    * ``rate``   — fire i.i.d. with this probability (plan-seeded rng);
+    * ``times``  — stop after this many fires (None = unlimited).
+
+    ``match`` restricts eligibility to calls whose ctx carries the given
+    values (e.g. ``{"mode": "vpu_chain"}`` faults only the fast backend,
+    which is how the degradation tests leave the fallback path healthy).
+    """
+
+    site: str
+    kind: str
+    rate: float | None = None
+    times: int | None = None
+    after: int = 0
+    every: int = 1
+    duration_s: float = 0.05          # latency_spike stall
+    match: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"want one of {SITES}")
+        if self.kind != LATENCY_SPIKE and self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; want one of "
+                f"{(*FAULT_KINDS, LATENCY_SPIKE)}")
+
+    def eligible(self, ctx: dict) -> bool:
+        return all(ctx.get(k) == v for k, v in self.match.items())
+
+    def fires(self, n_eligible: int, n_fired: int,
+              rng: np.random.Generator) -> bool:
+        """Decide for eligible call ``n_eligible`` (0-based)."""
+        if n_eligible < self.after:
+            return False
+        if self.times is not None and n_fired >= self.times:
+            return False
+        if self.rate is not None:
+            return bool(rng.random() < self.rate)
+        return (n_eligible - self.after) % self.every == 0
+
+
+class FaultPlan:
+    """A seeded set of :class:`FaultSpec` rules plus the injection log.
+
+    ``sleep`` is what latency spikes stall through — tests inject a
+    fake-clock advancer; the default is real ``time.sleep``.
+    """
+
+    def __init__(self, specs: list[FaultSpec] | tuple[FaultSpec, ...],
+                 *, seed: int = 0,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.specs = list(specs)
+        self.sleep = sleep
+        self._rng = np.random.default_rng(seed)
+        self._eligible = [0] * len(self.specs)
+        self._fired = [0] * len(self.specs)
+        self.log: list[dict] = []
+
+    def fired(self, site: str | None = None) -> list[dict]:
+        return [f for f in self.log if site is None or f["site"] == site]
+
+    def check(self, site: str, **ctx) -> None:
+        """Evaluate every spec against one site call; raises the first
+        matching fault (latency spikes stall and keep evaluating)."""
+        for i, spec in enumerate(self.specs):
+            if spec.site != site or not spec.eligible(ctx):
+                continue
+            n = self._eligible[i]
+            self._eligible[i] += 1
+            if not spec.fires(n, self._fired[i], self._rng):
+                continue
+            self._fired[i] += 1
+            entry = dict(site=site, kind=spec.kind, call=n, **ctx)
+            self.log.append(entry)
+            reg = _obs_metrics.get_registry()
+            reg.counter("faults.injected").inc()
+            reg.event("fault", **entry)
+            if spec.kind == LATENCY_SPIKE:
+                self.sleep(spec.duration_s)
+                continue
+            raise FAULT_KINDS[spec.kind](site, **ctx)
+
+
+# Module slot, same shape as the tracer's: disabled sites cost one
+# global read (call sites guard with ``if faults._PLAN is not None``).
+_PLAN: FaultPlan | None = None
+
+
+def install(plan: FaultPlan) -> FaultPlan:
+    global _PLAN
+    _PLAN = plan
+    return plan
+
+
+def uninstall() -> None:
+    global _PLAN
+    _PLAN = None
+
+
+def get_plan() -> FaultPlan | None:
+    return _PLAN
+
+
+def maybe_fault(site: str, **ctx) -> None:
+    """The one injection hook every instrumented site calls."""
+    plan = _PLAN
+    if plan is not None:
+        plan.check(site, **ctx)
+
+
+@contextlib.contextmanager
+def inject(specs: FaultPlan | list[FaultSpec] | tuple[FaultSpec, ...],
+           **kw):
+    """Scoped installation (tests / the endurance storm)."""
+    plan = specs if isinstance(specs, FaultPlan) else FaultPlan(specs, **kw)
+    install(plan)
+    try:
+        yield plan
+    finally:
+        uninstall()
+
+
+# ---------------------------------------------------------------------------
+# Retry policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Capped exponential backoff with seeded jitter (DESIGN.md §11.2).
+
+    ``max_attempts`` counts *total* tries (1 = no retry).  The delay
+    before retry ``k`` (first retry is ``k=1``) is::
+
+        min(base * 2**(k-1), cap) * (1 + jitter * U[-1, 1))
+
+    The policy only does the math — the server applies the delay on its
+    own (injectable) clock by stamping ``Request.not_before``, so fake
+    clocks see exactly the same schedule as real ones.
+    """
+
+    max_attempts: int = 3
+    backoff_base_s: float = 0.01
+    backoff_cap_s: float = 1.0
+    jitter: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if not 0.0 <= self.jitter < 1.0:
+            raise ValueError("jitter must be in [0, 1)")
+        self._rng = np.random.default_rng(self.seed)
+
+    def backoff_s(self, attempt: int) -> float:
+        exp = min(self.backoff_base_s * 2.0 ** (max(attempt, 1) - 1),
+                  self.backoff_cap_s)
+        if not self.jitter:
+            return exp
+        return exp * (1.0 + self.jitter * (2.0 * self._rng.random() - 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Backend degradation ladder
+# ---------------------------------------------------------------------------
+
+#: Serving modes ordered fast-but-fragile → slow-but-safe: the
+#: executor's ``_FALLBACK`` chain extended down to the pure-XLA floor.
+#: Every rung computes the identical binarized network (each is
+#: cross-checked bit-exact against its own oracle, DESIGN.md §4.5); the
+#: pm1-family vs xor-family rungs may differ in the *float epilogue's*
+#: last-ulp accumulation order, so a demotion changes latency — and at
+#: most float associativity — never the packed computation.
+DEGRADE_LADDER = ("vpu_chain", "vpu_direct_pool", "vpu_direct",
+                  "vpu_popcount", "xla_pm1", "xla")
+
+
+def ladder_rank(mode: str) -> int:
+    """Position in the ladder; modes outside it (``auto``, ``mxu_pm1``)
+    rank above everything — their one demotion is straight to the
+    floor, and a successful re-probe restores them."""
+    try:
+        return DEGRADE_LADDER.index(mode)
+    except ValueError:
+        return -1
+
+
+def demote_mode(mode: str) -> str | None:
+    """The next-safer serving mode; None at the ``xla`` floor."""
+    if mode == DEGRADE_LADDER[-1]:
+        return None
+    rank = ladder_rank(mode)
+    if rank < 0:
+        return DEGRADE_LADDER[-1]
+    return DEGRADE_LADDER[rank + 1]
+
+
+class BackendHealth:
+    """Tracks the live serving mode through failures, demotions,
+    quarantine, and re-probe (DESIGN.md §11.3).
+
+    * ``record_failure`` — one executable failure at the current mode;
+      after ``demote_after`` consecutive ones the mode is quarantined
+      (until now + its probe interval, doubling on each re-offense) and
+      the ladder's next mode becomes current.  Returns the new mode on
+      demotion, else None.
+    * ``record_success`` — resets the consecutive-failure count.
+    * ``probe_due`` — the best quarantined mode whose quarantine has
+      expired (to try ahead of the current one), if any.
+    * ``promote`` / ``probe_failed`` — resolve a probe: adopt the probed
+      mode, or re-quarantine it with a doubled interval.
+    """
+
+    def __init__(self, mode: str, *, demote_after: int = 2,
+                 probe_after_s: float = 30.0, probe_backoff: float = 2.0):
+        if demote_after < 1:
+            raise ValueError("demote_after must be >= 1")
+        self.mode = mode
+        self.demote_after = demote_after
+        self.probe_after_s = probe_after_s
+        self.probe_backoff = probe_backoff
+        self._consecutive = 0
+        # mode -> (quarantined-until, current interval)
+        self._quarantine: dict[str, tuple[float, float]] = {}
+        self.demotions: list[dict] = []
+
+    # ---- failure accounting ----------------------------------------------
+    def record_failure(self, now: float) -> str | None:
+        self._consecutive += 1
+        if self._consecutive < self.demote_after:
+            return None
+        return self._demote(now)
+
+    def record_success(self) -> None:
+        self._consecutive = 0
+
+    def _demote(self, now: float) -> str | None:
+        self._consecutive = 0
+        nxt = demote_mode(self.mode)
+        if nxt is None:                       # already at the floor
+            return None
+        self._quarantine_mode(self.mode, now)
+        old, self.mode = self.mode, nxt
+        self.demotions.append(dict(t=now, from_mode=old, to_mode=nxt))
+        return nxt
+
+    def _quarantine_mode(self, mode: str, now: float) -> None:
+        prev = self._quarantine.get(mode)
+        interval = (prev[1] * self.probe_backoff if prev
+                    else self.probe_after_s)
+        self._quarantine[mode] = (now + interval, interval)
+
+    # ---- re-probe ---------------------------------------------------------
+    def probe_due(self, now: float) -> str | None:
+        best: str | None = None
+        for mode, (until, _) in self._quarantine.items():
+            if now < until or ladder_rank(mode) >= ladder_rank(self.mode):
+                continue
+            if best is None or ladder_rank(mode) < ladder_rank(best):
+                best = mode
+        return best
+
+    def promote(self, mode: str) -> None:
+        self._quarantine.pop(mode, None)
+        self.mode = mode
+        self._consecutive = 0
+
+    def probe_failed(self, mode: str, now: float) -> None:
+        self._quarantine_mode(mode, now)
+
+    def snapshot(self, now: float) -> dict:
+        return {
+            "mode": self.mode,
+            "demotions": len(self.demotions),
+            "quarantined": {m: max(0.0, until - now)
+                            for m, (until, _) in self._quarantine.items()},
+        }

@@ -14,6 +14,15 @@ definitions (latency here is submit → last token).  Deadline-carrying
 requests that expire while waiting for a KV slot are shed at admission
 and counted in ``dropped``.
 
+Resilience (DESIGN.md §11): the LM server speaks the same terminal-
+outcome protocol as the BNN server — every submitted request ends
+``done=True`` with ``outcome`` ∈ {served, shed, error, rejected}.
+Invalid prompts and queue-full submits resolve ``rejected`` (structured,
+at the protocol edge) instead of raising; a faulted decode tick retries
+under the shared :class:`RetryPolicy` and, exhausted, resolves the
+in-flight sequences ``error`` and releases their KV slots so the batch
+keeps moving; ``drain`` is iteration-bounded.
+
 Simplifications vs a production server (recorded in DESIGN.md): one global
 position per tick (slot positions are tracked but the decode step uses the
 max — correct because attention masks by per-slot validity), greedy
@@ -33,8 +42,11 @@ import numpy as np
 
 from repro.distributed.sharding import Rules
 from repro.models import transformer
+from repro.obs import FlightRecorder
 from repro.obs import trace as _trace
 from repro.obs.metrics import ServingMetrics
+from repro.serving import faults as _faults
+from repro.serving.faults import RetryPolicy
 from repro.serving.kv_cache import KVCacheManager
 from repro.serving.scheduler import Request, shed_expired_requests
 
@@ -48,6 +60,10 @@ class LMServer:
     max_seq: int
     eos_id: int | None = None
     clock: Callable[[], float] = time.monotonic
+    retry: RetryPolicy | None = dataclasses.field(
+        default_factory=RetryPolicy)
+    max_queue: int | None = None
+    flight_capacity: int = 256
 
     def __post_init__(self):
         self.cache = transformer.init_cache(self.cfg, self.n_slots,
@@ -65,6 +81,8 @@ class LMServer:
         self._by_seq: dict[int, tuple[Request, Any]] = {}
         self._metrics = ServingMetrics(self.clock)
         self.dropped = 0
+        self.flight = FlightRecorder(self.flight_capacity)
+        self._tick_failures = 0   # consecutive faulted decode ticks
 
     # ---- admission -------------------------------------------------------
     def add_prompt(self, prompt: list[int], max_new: int = 32):
@@ -90,6 +108,9 @@ class LMServer:
         {seq_id: new_token} for sequences still active."""
         if not self.manager.active:
             return {}
+        if _faults._PLAN is not None:
+            _faults.maybe_fault("lm.step", active=len(self.manager.active),
+                                pos=self.pos)
         logits, self.cache = self._decode(
             self.params, self.cache, self.tokens, jnp.int32(self.pos))
         self.pos += 1
@@ -108,19 +129,35 @@ class LMServer:
                now: float | None = None) -> Request:
         """Queue a prompt; it joins the continuous batch when a KV slot
         frees.  ``request.result`` becomes the generated token list.
-        Invalid requests are rejected here, at the protocol edge — an
-        assertion inside drain() would strand every other queued
-        request."""
+        Invalid requests are rejected here, at the protocol edge — with
+        a structured ``rejected`` outcome (same protocol as the BNN
+        server, DESIGN.md §11.2): raising inside drain() would strand
+        every other queued request, and raising here would force every
+        caller to wrap submit."""
+        now = self.clock() if now is None else now
         prompt = list(prompt)
+        err = None
         if not prompt:
-            raise ValueError("empty prompt")
-        if len(prompt) + max_new > self.max_seq:
-            raise ValueError(
-                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
-                f"max_seq ({self.max_seq})")
+            err = "empty prompt"
+        elif any(not isinstance(t, (int, np.integer)) for t in prompt):
+            err = "prompt tokens must be ints"
+        elif len(prompt) + max_new > self.max_seq:
+            err = (f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                   f"max_seq ({self.max_seq})")
+        elif self.max_queue is not None \
+                and len(self._waiting) >= self.max_queue:
+            err = (f"queue full ({len(self._waiting)} >= "
+                   f"max_queue={self.max_queue})")
         r = Request((prompt, max_new), deadline_s=deadline_s)
         # one clock domain for arrival and completion (fake-clock tests)
-        r.arrival_s = self.clock() if now is None else now
+        r.arrival_s = now
+        if err is not None:
+            r.resolve("rejected", error=err)
+            self._metrics.record_rejected()
+            self.flight.record(id=r.id, outcome="rejected", error=err,
+                               arrival_s=now, done_s=now, latency_s=0.0)
+            _trace.instant("serve.reject", "serve", req=r.id, reason=err)
+            return r
         self._waiting.append(r)
         _trace.instant("serve.submit", "serve", req=r.id)
         return r
@@ -135,6 +172,10 @@ class LMServer:
         self._waiting, shed = shed_expired_requests(self._waiting, now)
         self.dropped += len(shed)
         self._metrics.record_dropped(len(shed))
+        for r in shed:
+            self.flight.record(id=r.id, outcome="shed",
+                               arrival_s=r.arrival_s, done_s=now,
+                               latency_s=now - r.arrival_s)
         while self._waiting and self.manager.can_admit():
             r = self._waiting.popleft()
             prompt, max_new = r.payload
@@ -142,25 +183,94 @@ class LMServer:
             seq = self.add_prompt(prompt, max_new=max_new)
             self._by_seq[seq.seq_id] = (r, seq)
 
+    def _fail_inflight(self, exc: Exception, now: float) -> list[Request]:
+        """Retry budget for the decode tick exhausted: resolve every
+        in-flight sequence ``error`` and release its KV slot so waiting
+        prompts can still admit (the decode fault poisons the shared
+        cache state for the sequences that were mid-flight, not the
+        server)."""
+        failed: list[Request] = []
+        for seq_id, (r, _seq) in list(self._by_seq.items()):
+            r.resolve("error", error=f"{type(exc).__name__}: {exc}")
+            self._metrics.record_error()
+            self.flight.record(id=r.id, outcome="error", error=r.error,
+                               arrival_s=r.arrival_s, done_s=now,
+                               latency_s=now - r.arrival_s)
+            if seq_id in self.manager.active:
+                self.manager.release(seq_id)
+            del self._by_seq[seq_id]
+            failed.append(r)
+        _trace.instant("serve.error", "serve", n=len(failed))
+        return failed
+
     def serve_tick(self, now: float | None = None) -> list[Request]:
         """One serving tick: admit waiting prompts into free slots, run a
-        decode step, complete any sequences that finished."""
+        decode step, complete any sequences that finished.  A faulted
+        decode tick never escapes: it retries (up to
+        ``retry.max_attempts`` consecutive faults) and then resolves the
+        in-flight sequences ``error`` (DESIGN.md §11.2)."""
         self._admit_waiting(now)
-        self.step()
-        now = self.clock() if now is None else now
         done: list[Request] = []
+        try:
+            self.step()
+            self._tick_failures = 0
+        except Exception as e:          # noqa: BLE001 — never kill the loop
+            self._tick_failures += 1
+            budget = self.retry.max_attempts if self.retry else 1
+            t = self.clock() if now is None else now
+            if self._tick_failures >= budget:
+                self._tick_failures = 0
+                done += self._fail_inflight(e, t)
+            else:
+                self._metrics.record_retry()
+                _trace.instant("serve.retry", "serve",
+                               attempt=self._tick_failures)
+        now = self.clock() if now is None else now
         for seq_id, (r, seq) in list(self._by_seq.items()):
             if seq_id not in self.manager.active:    # finished + released
-                r.result, r.done = list(seq.tokens), True
+                r.resolve("served", list(seq.tokens))
                 self._metrics.record([now - r.arrival_s])
+                self.flight.record(
+                    id=r.id, outcome="served", arrival_s=r.arrival_s,
+                    done_s=now, latency_s=now - r.arrival_s,
+                    n_tokens=len(seq.tokens))
                 del self._by_seq[seq_id]
                 done.append(r)
         return done
 
-    def drain(self, now: float | None = None) -> list[Request]:
-        """Serve until every submitted prompt has completed (or shed)."""
+    def drain(self, now: float | None = None,
+              max_steps: int | None = None) -> list[Request]:
+        """Serve until every submitted prompt has completed (or shed).
+
+        Bounded (DESIGN.md §11.2): at most ``max_steps`` ticks — default
+        generous for the outstanding work (each sequence needs at most
+        ``max_seq`` decode ticks, plus the retry budget) — after which
+        anything still outstanding resolves ``error`` instead of
+        hanging the caller on a wedged batch."""
+        if max_steps is None:
+            budget = self.retry.max_attempts if self.retry else 1
+            outstanding = len(self._waiting) + len(self._by_seq) + 1
+            max_steps = outstanding * (self.max_seq + budget) * 2 + 16
         done: list[Request] = []
+        steps = 0
         while self._waiting or self._by_seq:
+            if steps >= max_steps:
+                t = self.clock() if now is None else now
+                wedged = list(self._waiting)
+                self._waiting.clear()
+                for r in wedged:
+                    r.resolve("error",
+                              error="drain wedged: step budget exhausted")
+                    self._metrics.record_error()
+                    self.flight.record(
+                        id=r.id, outcome="error", error=r.error,
+                        arrival_s=r.arrival_s, done_s=t,
+                        latency_s=t - r.arrival_s)
+                done += wedged
+                done += self._fail_inflight(
+                    RuntimeError("drain wedged: step budget exhausted"), t)
+                break
+            steps += 1
             done += self.serve_tick(now)
         return done
 

@@ -30,6 +30,11 @@ from typing import Any, Callable
 import numpy as np
 
 
+#: The terminal request outcomes (DESIGN.md §11): every submitted
+#: request ends ``done=True`` with exactly one of these.
+OUTCOMES = ("served", "shed", "error", "rejected")
+
+
 @dataclasses.dataclass
 class Request:
     payload: Any
@@ -39,10 +44,26 @@ class Request:
         default_factory=itertools.count().__next__)
     result: Any = None
     done: bool = False
+    # ---- resilience state (DESIGN.md §11) -------------------------------
+    outcome: str | None = None        # one of OUTCOMES once done
+    error: str | None = None          # terminal failure reason
+    attempts: int = 0                 # dispatch tries so far
+    not_before: float | None = None   # retry backoff: ineligible until
 
     def expired(self, now: float) -> bool:
         return (self.deadline_s is not None
                 and (now - self.arrival_s) >= self.deadline_s)
+
+    def eligible(self, now: float) -> bool:
+        """In-backoff requests sit in the queue but skip assembly."""
+        return self.not_before is None or now >= self.not_before
+
+    def resolve(self, outcome: str, result: Any = None,
+                error: str | None = None) -> "Request":
+        assert outcome in OUTCOMES, outcome
+        self.result, self.done = result, True
+        self.outcome, self.error = outcome, error
+        return self
 
 
 def _zero_like(payload: Any) -> Any:
@@ -59,7 +80,7 @@ def shed_expired_requests(queue: "deque[Request]", now: float
     shed: list[Request] = []
     for r in queue:
         if r.expired(now):
-            r.done, r.result = True, None
+            r.resolve("shed")
             shed.append(r)
         else:
             kept.append(r)
@@ -124,14 +145,41 @@ class BatchScheduler:
 
     def next_batch(self, now: float | None = None,
                    force: bool = False) -> list[Request] | None:
-        """Shed expired requests, then pop up to max_batch if the policy
-        says go (``force=True`` skips the wait policy — final flush)."""
+        """Shed expired requests, then pop up to max_batch *eligible*
+        requests if the policy says go (``force=True`` skips the wait
+        policy — final flush).  Requests in retry backoff
+        (``not_before`` in the future) keep their queue position but are
+        passed over until their delay elapses."""
         now = time.monotonic() if now is None else now
         self.shed_expired(now)
         if not (self._queue if force else self.ready(now)):
             return None
-        n = min(len(self._queue), self.max_batch)
-        return [self._queue.popleft() for _ in range(n)]
+        take: list[Request] = []
+        keep: deque[Request] = deque()
+        for r in self._queue:
+            if len(take) < self.max_batch and r.eligible(now):
+                take.append(r)
+            else:
+                keep.append(r)
+        if not take:
+            return None
+        self._queue = keep
+        return take
+
+    def requeue(self, requests: list[Request]) -> None:
+        """Front-insert failed-batch requests for retry, preserving
+        their relative order (they were at the head when popped)."""
+        for r in reversed(requests):
+            self._queue.appendleft(r)
+
+    def backoff_wait(self, now: float) -> float | None:
+        """Seconds until the soonest queued request leaves retry
+        backoff, or None when the queue is empty / something is already
+        eligible (i.e. only meaningful when assembly is starved purely
+        by backoff)."""
+        if not self._queue or any(r.eligible(now) for r in self._queue):
+            return None
+        return min(r.not_before for r in self._queue) - now
 
     def padded_batch(self, now: float | None = None, force: bool = False
                      ) -> tuple[list[Request], list[Any]] | None:
@@ -163,5 +211,5 @@ class BatchScheduler:
         batch, payloads = got
         results = run(payloads)
         for r, out in zip(batch, results):
-            r.result, r.done = out, True
+            r.resolve("served", out)
         return batch

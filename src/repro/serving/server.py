@@ -1,4 +1,4 @@
-"""InferenceServer: the production serving subsystem (DESIGN.md §7).
+"""InferenceServer: the production serving subsystem (DESIGN.md §7, §11).
 
 One object owns the whole serve path the paper's phone loop inlines:
 
@@ -21,10 +21,31 @@ The server surface is the protocol both serving paths share (the LM
 decode server implements the same one): ``submit`` / ``poll`` / ``step``
 / ``drain`` plus ``metrics()`` (p50/p95 latency, queue depth, throughput,
 dropped count — definitions in DESIGN.md §7.4).
+
+Resilience (DESIGN.md §11): every request **terminally resolves** —
+``done=True`` with ``outcome`` ∈ {served, shed, error, rejected} — and
+no failure escapes ``step()`` to kill the serve loop:
+
+* ``submit`` validates payloads against the engine's input spec and
+  applies bounded-queue admission control, returning a structured
+  ``rejected`` request instead of raising or poisoning a batch;
+* a failed batch (compile error, device fault, preprocess exception)
+  retries per-request with capped exponential backoff + jitter
+  (:class:`~repro.serving.faults.RetryPolicy`) on the server's
+  injectable clock, resolving ``error`` when attempts are exhausted;
+* repeated executable failures demote the serving mode down
+  :data:`~repro.serving.faults.DEGRADE_LADDER`
+  (:class:`~repro.serving.faults.BackendHealth`): the failing backend
+  is quarantined and re-probed periodically, demotions are published
+  via the ``serve.degraded`` counter and flight-recorder records;
+* an optional dispatch watchdog (``watchdog_s``) bounds the device
+  readback so a wedged executable surfaces as an error, and ``drain``
+  is iteration-bounded so a wedged queue cannot hang it forever.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from typing import Any, Callable, Protocol, runtime_checkable
 
@@ -36,8 +57,11 @@ import numpy as np
 # observability layer (DESIGN.md §10); re-exported here for the existing
 # import surface.
 from repro.obs import FlightRecorder
+from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _trace
 from repro.obs.metrics import ServingMetrics, percentile  # noqa: F401
+from repro.serving import faults as _faults
+from repro.serving.faults import BackendHealth, RetryPolicy, WatchdogTimeout
 from repro.serving.scheduler import BatchScheduler, Request
 
 
@@ -55,19 +79,27 @@ class Server(Protocol):
 
 
 class _InFlight:
-    """One dispatched batch: requests + the device array still computing,
-    plus the dispatch stamp and host-stage timings the flight recorder
-    attaches to each request at scatter."""
+    """One dispatched batch: requests + the device array still computing.
 
-    __slots__ = ("batch", "out", "bucket", "t_dispatch", "stage_s")
+    ``row_idx`` maps each request to its row of the device output (rows
+    of requests whose preprocessing failed are zero-filled and skipped);
+    ``mode`` is the backend the executable ran under (degradation);
+    ``t_dispatch``/``stage_s`` feed the flight recorder at scatter."""
 
-    def __init__(self, batch: list[Request], out, bucket: int,
-                 t_dispatch: float, stage_s: float):
+    __slots__ = ("batch", "row_idx", "out", "bucket", "t_dispatch",
+                 "stage_s", "mode", "probing")
+
+    def __init__(self, batch: list[Request], row_idx: list[int], out,
+                 bucket: int, t_dispatch: float, stage_s: float,
+                 mode: str | None, probing: bool = False):
         self.batch = batch
+        self.row_idx = row_idx
         self.out = out
         self.bucket = bucket
         self.t_dispatch = t_dispatch
         self.stage_s = stage_s
+        self.mode = mode
+        self.probing = probing
 
 
 class InferenceServer:
@@ -77,7 +109,8 @@ class InferenceServer:
     ----------
     engine:          a :class:`~repro.serving.engine.PhoneBitEngine` (or
                      anything with ``compile(bs, donate_input=,
-                     data_parallel=) -> callable`` and ``_plan_shape``).
+                     data_parallel=, mode=) -> callable`` and
+                     ``_plan_shape``).
     buckets:         compiled batch sizes; mixed-size traffic is padded up
                      to the nearest one.
     async_dispatch:  double-buffer dispatch (the default); ``False`` gives
@@ -91,6 +124,28 @@ class InferenceServer:
     flight_capacity: size of the flight-recorder ring (recent request
                      records for postmortems; ``server.flight.dump()``).
     clock:           injectable monotonic clock (tests use a fake).
+
+    Resilience (DESIGN.md §11)
+    --------------------------
+    retry:           :class:`RetryPolicy` for failed batches (None = one
+                     attempt, no retry).  Backoff is applied by stamping
+                     ``Request.not_before`` on the server clock.
+    max_queue:       bounded admission: submits beyond this queue depth
+                     resolve ``rejected`` (None = unbounded).
+    validate:        payload validation at ``submit`` (shape vs the
+                     engine input spec when no preprocess hook rewrites
+                     sizes, object-dtype and NaN/Inf checks).
+    degrade:         demote the serving backend down ``DEGRADE_LADDER``
+                     after ``demote_after`` consecutive executable
+                     failures; quarantined modes re-probe after
+                     ``probe_after_s`` (doubling per re-offense).
+    watchdog_s:      bound the device readback; a stalled executable
+                     raises :class:`WatchdogTimeout` into the normal
+                     retry/error path (None = block forever, the
+                     pre-resilience behavior and the zero-thread path).
+    sleep:           how ``drain`` waits out retry backoff when every
+                     queued request is ineligible (tests inject a fake
+                     that advances their fake clock).
 
     Observability (DESIGN.md §10): when a tracer is installed
     (``repro.obs.trace.install()``) each serving stage emits a span —
@@ -109,7 +164,15 @@ class InferenceServer:
                  | None = None,
                  mesh=None, data_axis: str = "data",
                  flight_capacity: int = 256,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 retry: RetryPolicy | None = RetryPolicy(),
+                 max_queue: int | None = None,
+                 validate: bool = True,
+                 degrade: bool = True,
+                 demote_after: int = 2,
+                 probe_after_s: float = 30.0,
+                 watchdog_s: float | None = None,
+                 sleep: Callable[[float], None] | None = None):
         self.engine = engine
         self.preprocess = preprocess
         self.mesh, self.data_axis = mesh, data_axis
@@ -125,15 +188,29 @@ class InferenceServer:
         self.async_dispatch = async_dispatch
         self.donate_input = donate_input
         self.clock = clock
+        self.retry = retry
+        self.max_queue = max_queue
+        self.validate = validate
+        self.watchdog_s = watchdog_s
+        self._sleep = sleep if sleep is not None \
+            else (lambda s: time.sleep(min(s, 0.05)))
+        self.health = BackendHealth(
+            engine.matmul_mode, demote_after=demote_after,
+            probe_after_s=probe_after_s) if degrade else None
         self._pending: _InFlight | None = None
+        # Requests resolved ``error`` since the last step() returned —
+        # terminal completions, so step/drain hand them back to callers
+        # alongside the served ones.
+        self._errored: list[Request] = []
         self._metrics = ServingMetrics(clock)
         # Postmortem ring of recent request records (DESIGN.md §10.3).
         self.flight = FlightRecorder(flight_capacity)
 
     # ---- executable cache -------------------------------------------------
-    def _executable(self, bucket: int):
+    def _executable(self, bucket: int, mode: str | None = None):
         return self.engine.compile(bucket, donate_input=self.donate_input,
-                                   data_parallel=self.data_parallel)
+                                   data_parallel=self.data_parallel,
+                                   mode=mode)
 
     def compile_buckets(self) -> dict[int, float]:
         """Precompile (and autotune) every bucket; returns seconds spent
@@ -161,12 +238,57 @@ class InferenceServer:
         return jax.device_put(x_np, NamedSharding(self.mesh,
                                                   P(self.data_axis)))
 
+    # ---- admission --------------------------------------------------------
+    def _payload_error(self, payload: Any) -> str | None:
+        """Why this payload cannot be served, or None when it can.
+
+        Checked against the engine's input spec at the protocol edge so
+        a malformed payload resolves alone instead of poisoning the
+        whole assembled bucket batch it would have ridden in."""
+        try:
+            arr = np.asarray(payload)
+        except Exception as e:          # noqa: BLE001 — any failure rejects
+            return f"payload is not array-like: {e}"
+        if not np.issubdtype(arr.dtype, np.number):
+            # object arrays, strings, datetimes, ... — anything numpy
+            # coerces without making numbers out of it.
+            return f"payload dtype {arr.dtype} is not numeric"
+        if np.issubdtype(arr.dtype, np.floating) \
+                and not bool(np.isfinite(arr).all()):
+            return "payload contains NaN/Inf"
+        if self.preprocess is None:
+            want = self.engine._plan_shape(1)[1:]
+            if tuple(arr.shape) != tuple(want):
+                return (f"payload shape {tuple(arr.shape)} != engine "
+                        f"input {tuple(want)}")
+        return None
+
+    def _reject(self, payload: Any, reason: str, now: float,
+                deadline_s: float | None) -> Request:
+        r = Request(payload, deadline_s=deadline_s)
+        r.arrival_s = now
+        r.resolve("rejected", error=reason)
+        self._metrics.record_rejected()
+        self.flight.record(id=r.id, outcome="rejected", error=reason,
+                           arrival_s=now, done_s=now, latency_s=0.0)
+        _trace.instant("serve.reject", "serve", req=r.id, reason=reason)
+        return r
+
     # ---- request lifecycle ------------------------------------------------
     def submit(self, payload: Any, deadline_s: float | None = None,
                now: float | None = None) -> Request:
         # Arrival is stamped from the server's clock so latency samples
         # stay in one clock domain when a fake clock is injected.
         now = self.clock() if now is None else now
+        if self.validate:
+            err = self._payload_error(payload)
+            if err is not None:
+                return self._reject(payload, err, now, deadline_s)
+        if self.max_queue is not None \
+                and len(self.scheduler) >= self.max_queue:
+            return self._reject(
+                payload, f"queue full ({len(self.scheduler)} >= "
+                         f"max_queue={self.max_queue})", now, deadline_s)
         r = self.scheduler.submit(payload, deadline_s=deadline_s, now=now)
         _trace.instant("serve.submit", "serve", req=r.id)
         return r
@@ -174,30 +296,179 @@ class InferenceServer:
     def poll(self, request: Request) -> bool:
         return request.done
 
+    # ---- failure handling -------------------------------------------------
+    def _retry_or_fail(self, r: Request, exc: Exception, now: float,
+                       requeue: list[Request]) -> None:
+        """One failed attempt for one request: back off and requeue, or
+        resolve ``error`` when attempts are exhausted."""
+        r.attempts += 1
+        max_attempts = self.retry.max_attempts if self.retry else 1
+        if r.attempts < max_attempts:
+            r.not_before = now + self.retry.backoff_s(r.attempts)
+            self._metrics.record_retry()
+            _trace.instant("serve.retry", "serve", req=r.id,
+                           attempt=r.attempts)
+            requeue.append(r)
+            return
+        r.resolve("error", error=f"{type(exc).__name__}: {exc}")
+        self._metrics.record_error()
+        self._errored.append(r)
+        self.flight.record(
+            id=r.id, outcome="error", error=r.error, attempts=r.attempts,
+            arrival_s=r.arrival_s, deadline_s=r.deadline_s, done_s=now,
+            latency_s=now - r.arrival_s)
+        _trace.instant("serve.error", "serve", req=r.id)
+
+    def _note_demotion(self, now: float) -> None:
+        d = self.health.demotions[-1]
+        self._metrics.record_degraded()
+        _obs_metrics.get_registry().event(
+            "demotion", server="bnn", **d)
+        self.flight.record(kind="demotion", outcome="demoted",
+                           from_mode=d["from_mode"], to_mode=d["to_mode"],
+                           done_s=now)
+        _trace.instant("serve.demote", "serve",
+                       from_mode=d["from_mode"], to_mode=d["to_mode"])
+
+    def _on_batch_failure(self, batch: list[Request], exc: Exception,
+                          now: float, mode: str | None,
+                          probing: bool) -> None:
+        """A whole dispatched/scattered batch failed: update backend
+        health (possibly demoting), then retry-or-fail each request."""
+        if self.health is not None:
+            if probing:
+                self.health.probe_failed(mode, now)
+            elif self.health.record_failure(now) is not None:
+                self._note_demotion(now)
+        requeue: list[Request] = []
+        for r in batch:
+            self._retry_or_fail(r, exc, now, requeue)
+        if requeue:
+            self.scheduler.requeue(requeue)
+
     # ---- dispatch / scatter ----------------------------------------------
-    def _dispatch(self, batch: list[Request],
-                  payloads: list[Any]) -> _InFlight:
+    def _stage_rows(self, batch: list[Request], payloads: list[Any]
+                    ) -> tuple[list[np.ndarray], list[Request],
+                               list[int], list[tuple[Request, Exception]]]:
+        """Host staging with per-row fault isolation: a payload whose
+        conversion/preprocess raises is zero-filled (zeros are inert —
+        the same trick bucket padding uses) so the rest of the batch
+        still dispatches; its request is returned as a failure."""
+        zero_row: np.ndarray | None = None
+        rows: list[np.ndarray | None] = []
+        kept: list[Request] = []
+        row_idx: list[int] = []
+        failures: list[tuple[Request, Exception]] = []
+        for i, p in enumerate(payloads):
+            r = batch[i] if i < len(batch) else None
+            try:
+                row = np.asarray(p)
+                if r is not None and _faults._PLAN is not None:
+                    _faults.maybe_fault("server.preprocess", req=r.id)
+                if self.preprocess is not None:
+                    row = self.preprocess(row)
+                rows.append(row)
+                if r is not None:
+                    kept.append(r)
+                    row_idx.append(i)
+            except Exception as e:      # noqa: BLE001 — isolate the row
+                rows.append(None)
+                if r is not None:
+                    failures.append((r, e))
+        if zero_row is None:
+            zero_row = np.zeros(self.engine._plan_shape(1)[1:], np.uint8)
+        return ([row if row is not None else zero_row for row in rows],
+                kept, row_idx, failures)
+
+    def _dispatch(self, batch: list[Request], payloads: list[Any],
+                  mode: str | None = None
+                  ) -> tuple[_InFlight | None,
+                             list[tuple[Request, Exception]]]:
         t0 = self.clock()
         with _trace.span("serve.stage", "serve", bucket=len(payloads),
                          n_real=len(batch)):
-            rows = [np.asarray(p) for p in payloads]
-            if self.preprocess is not None:     # pads go through it too
-                rows = [self.preprocess(r) for r in rows]
+            rows, kept, row_idx, failures = self._stage_rows(batch,
+                                                             payloads)
+        if not kept:
+            return None, failures
+        if _faults._PLAN is not None:
+            _faults.maybe_fault("server.dispatch", bucket=len(rows),
+                                mode=mode or self.engine.matmul_mode)
+        with _trace.span("serve.dispatch", "serve", bucket=len(rows),
+                         mode=mode):
             x = self._place(np.stack(rows))
-        with _trace.span("serve.dispatch", "serve", bucket=x.shape[0]):
-            out = self._executable(x.shape[0])(x)   # async: returns now
+            out = self._executable(len(rows), mode)(x)  # async: returns now
         t1 = self.clock()
-        self._metrics.mark_dispatch(bucket=len(payloads))
-        return _InFlight(batch, out, len(payloads), t1, t1 - t0)
+        self._metrics.mark_dispatch(bucket=len(rows))
+        return (_InFlight(kept, row_idx, out, len(rows), t1, t1 - t0,
+                          mode), failures)
+
+    def _try_dispatch(self, batch: list[Request], payloads: list[Any],
+                      now: float) -> _InFlight | None:
+        """Dispatch with the full failure protocol: mode selection
+        (degradation ladder + quarantine re-probe), batch-level retry on
+        failure, per-row failure resolution."""
+        mode, probing = None, False
+        if self.health is not None:
+            probe = self.health.probe_due(now)
+            mode, probing = ((probe, True) if probe is not None
+                             else (self.health.mode, False))
+        try:
+            flight, failures = self._dispatch(batch, payloads, mode=mode)
+        except Exception as e:          # noqa: BLE001 — never kill the loop
+            self._on_batch_failure(batch, e, now, mode, probing)
+            return None
+        requeue: list[Request] = []
+        for r, exc in failures:
+            self._retry_or_fail(r, exc, now, requeue)
+        if requeue:
+            self.scheduler.requeue(requeue)
+        # Health verdicts wait for the readback: an async dispatch
+        # returning is no proof the executable works, and crediting it
+        # here would let interleaved dispatches reset the
+        # consecutive-failure count between two readback faults.
+        if flight is not None:
+            flight.probing = probing
+        return flight
+
+    def _readback(self, flight: _InFlight) -> np.ndarray:
+        """The one blocking point, optionally watchdog-bounded: a
+        stalled executable becomes :class:`WatchdogTimeout` instead of a
+        hung serve loop (the stuck thread is daemonized and abandoned —
+        its buffer is dropped on the floor, not replayed)."""
+        def blocking() -> np.ndarray:
+            if _faults._PLAN is not None:
+                _faults.maybe_fault("server.device", bucket=flight.bucket)
+            return np.asarray(flight.out)
+
+        if self.watchdog_s is None:
+            return blocking()
+        box: dict[str, Any] = {}
+
+        def work():
+            try:
+                box["out"] = blocking()
+            except Exception as e:      # noqa: BLE001 — re-raised below
+                box["err"] = e
+
+        th = threading.Thread(target=work, daemon=True)
+        th.start()
+        th.join(self.watchdog_s)
+        if th.is_alive():
+            raise WatchdogTimeout(
+                f"device readback exceeded watchdog_s={self.watchdog_s}")
+        if "err" in box:
+            raise box["err"]
+        return box["out"]
 
     def _scatter(self, flight: _InFlight) -> list[Request]:
         with _trace.span("serve.device", "serve", bucket=flight.bucket):
-            host = np.asarray(flight.out)       # the only blocking point
+            host = self._readback(flight)   # the only blocking point
         now = self.clock()
         with _trace.span("serve.scatter", "serve",
                          n_real=len(flight.batch)):
-            for r, row in zip(flight.batch, host):
-                r.result, r.done = row, True
+            for r, i in zip(flight.batch, flight.row_idx):
+                r.resolve("served", host[i])
         self._metrics.record([now - r.arrival_s for r in flight.batch])
         for r in flight.batch:
             self.flight.record(
@@ -205,8 +476,32 @@ class InferenceServer:
                 arrival_s=r.arrival_s, deadline_s=r.deadline_s,
                 dispatched_s=flight.t_dispatch, done_s=now,
                 queue_s=flight.t_dispatch - r.arrival_s,
-                stage_s=flight.stage_s, latency_s=now - r.arrival_s)
+                stage_s=flight.stage_s, latency_s=now - r.arrival_s,
+                attempts=r.attempts, mode=flight.mode)
         return flight.batch
+
+    def _try_scatter(self, flight: _InFlight,
+                     now: float | None = None) -> list[Request]:
+        try:
+            done = self._scatter(flight)
+        except Exception as e:          # noqa: BLE001 — never kill the loop
+            now = self.clock() if now is None else now
+            self._on_batch_failure(flight.batch, e, now, flight.mode,
+                                   probing=flight.probing)
+            return []
+        if self.health is not None:
+            if flight.probing:
+                # The quarantined faster mode survived its probe end to
+                # end: promote back up the ladder.
+                self.health.promote(flight.mode)
+                _trace.instant("serve.promote", "serve", mode=flight.mode)
+                self.flight.record(kind="promotion", outcome="promoted",
+                                   to_mode=flight.mode,
+                                   done_s=self.clock() if now is None
+                                   else now)
+            else:
+                self.health.record_success()
+        return done
 
     def _record_shed(self, shed: list[Request], now: float) -> None:
         self._metrics.record_dropped(len(shed))
@@ -223,7 +518,9 @@ class InferenceServer:
         then scatter the previously in-flight one.  Under async dispatch
         the new batch's device work overlaps the old batch's readback;
         synchronously each batch completes before the next is assembled.
-        Returns the requests completed this tick."""
+        Returns the requests completed this tick.  Failures never
+        escape: a faulted batch re-queues (retry policy) or resolves
+        ``error``, and the loop keeps serving."""
         now = self.clock() if now is None else now
         # Shed before assembly so the flight recorder sees every deadline
         # outcome (padded_batch sheds too, but silently — same policy,
@@ -233,22 +530,72 @@ class InferenceServer:
             self._record_shed(shed, now)
         with _trace.span("serve.assemble", "serve"):
             got = self.scheduler.padded_batch(now, force=force)
-        flight = self._dispatch(*got) if got is not None else None
-        if not self.async_dispatch and flight is not None:
-            return self._scatter(flight)
+        flight = self._try_dispatch(*got, now) if got is not None else None
         done: list[Request] = []
-        if self._pending is not None:
-            done = self._scatter(self._pending)
-        self._pending = flight
+        if not self.async_dispatch:
+            if flight is not None:
+                done = self._try_scatter(flight, now)
+        else:
+            if self._pending is not None:
+                pending, self._pending = self._pending, None
+                done = self._try_scatter(pending, now)
+            self._pending = flight
+        # Error-resolved requests are terminal completions too.
+        if self._errored:
+            done, self._errored = done + self._errored, []
         return done
 
-    def drain(self, now: float | None = None) -> list[Request]:
+    def _abort_wedged(self, now: float) -> list[Request]:
+        """Drain's last resort: terminally resolve everything still
+        outstanding as ``error`` so no request is left dangling."""
+        stuck: list[Request] = []
+        if self._pending is not None:
+            stuck += self._pending.batch
+            self._pending = None
+        stuck += self.scheduler.next_batch(now, force=True) or []
+        while len(self.scheduler):     # backoff'd stragglers too
+            r = self.scheduler._queue.popleft()
+            stuck.append(r)
+        for r in stuck:
+            if r.done:
+                continue
+            r.resolve("error", error="drain wedged: step budget exhausted")
+            self._metrics.record_error()
+            self.flight.record(id=r.id, outcome="error", error=r.error,
+                               arrival_s=r.arrival_s, done_s=now,
+                               latency_s=now - r.arrival_s)
+        return [r for r in stuck if r.outcome == "error"]
+
+    def drain(self, now: float | None = None,
+              max_steps: int | None = None) -> list[Request]:
         """Serve until the queue is empty and nothing is in flight
         (skipping the batch-wait policy: drain is a flush).  Returns the
-        requests completed during the drain."""
+        requests completed during the drain.
+
+        Bounded: at most ``max_steps`` ticks (default: generous for the
+        current queue × retry budget), after which anything still
+        outstanding resolves ``error`` — a wedged in-flight batch
+        surfaces instead of hanging the caller forever.  When every
+        queued request is in retry backoff, waits it out through the
+        injectable ``sleep`` (a fixed explicit ``now`` cannot advance,
+        so backoff under it falls to the step bound)."""
+        if max_steps is None:
+            budget = self.retry.max_attempts if self.retry else 1
+            max_steps = 4 * (len(self.scheduler) + 2) * budget + 16
         done: list[Request] = []
+        steps = 0
         while len(self.scheduler) or self._pending is not None:
-            done += self.step(now, force=True)
+            if steps >= max_steps:
+                done += self._abort_wedged(
+                    self.clock() if now is None else now)
+                break
+            steps += 1
+            t = self.clock() if now is None else now
+            done += self.step(t, force=True)
+            if self._pending is None and len(self.scheduler):
+                wait = self.scheduler.backoff_wait(t)
+                if wait is not None and wait > 0:
+                    self._sleep(wait)
         return done
 
     # ---- observability ----------------------------------------------------
@@ -256,7 +603,9 @@ class InferenceServer:
     def metrics_registry(self):
         """This server's metric series (``repro.obs.MetricsRegistry``):
         ``serve.latency_s``, ``serve.bucket_size`` (per-bucket dispatch
-        histogram), ``serve.served``, ``serve.dropped``."""
+        histogram), ``serve.served``, ``serve.dropped``, plus the
+        resilience counters ``serve.retries`` / ``serve.errors`` /
+        ``serve.rejected`` / ``serve.degraded``."""
         return self._metrics.registry
 
     @property
@@ -266,11 +615,14 @@ class InferenceServer:
 
     def metrics(self) -> dict:
         """p50/p95 request latency (submit→scatter, ms), served/dropped
-        counts, live queue depth, and throughput over the busy window
-        (first dispatch → last scatter)."""
+        counts, resilience counters (retries/errors/rejected/degraded),
+        live queue depth, the current serving mode, and throughput over
+        the busy window (first dispatch → last scatter)."""
         return self._metrics.snapshot(
             dropped=self.scheduler.dropped,
             queue_depth=self.queue_depth,
             async_dispatch=self.async_dispatch,
             data_parallel=self.data_parallel,
+            mode=(self.health.mode if self.health is not None
+                  else self.engine.matmul_mode),
             buckets=list(self.scheduler.buckets))

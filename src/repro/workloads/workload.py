@@ -71,7 +71,7 @@ class WorkloadEngine:
     """A PhoneBitEngine with the workload's postprocess head fused onto
     its per-bucket executable surface.
 
-    Speaks the same ``compile(bs, donate_input=, data_parallel=)`` /
+    Speaks the same ``compile(bs, donate_input=, data_parallel=, mode=)`` /
     ``_plan_shape`` / ``trace_count`` contract the ``InferenceServer``
     expects from an engine, so the server serves decoded predictions with
     no special casing.  The head is one jit-compiled function (traced once
@@ -95,17 +95,24 @@ class WorkloadEngine:
 
     # ---- engine surface (what InferenceServer consumes) ------------------
     def compile(self, batch_size: int | None = None, *,
-                donate_input: bool = False, data_parallel: int = 1):
-        key = (batch_size, donate_input, data_parallel)
+                donate_input: bool = False, data_parallel: int = 1,
+                mode: str | None = None):
+        key = (batch_size, donate_input, data_parallel, mode)
         if key not in self._compiled:
             fwd = self.engine.compile(batch_size, donate_input=donate_input,
-                                      data_parallel=data_parallel)
+                                      data_parallel=data_parallel, mode=mode)
             self._compiled[key] = \
                 lambda x, fwd=fwd: self._head_jit(fwd(x))
         return self._compiled[key]
 
     def _plan_shape(self, batch: int | None = None):
         return self.engine._plan_shape(batch)
+
+    @property
+    def matmul_mode(self) -> str:
+        """Configured backend rung — lets the server's degradation ladder
+        (DESIGN.md §11.3) judge and demote workload engines too."""
+        return self.engine.matmul_mode
 
     @property
     def trace_count(self) -> int:

@@ -1,0 +1,661 @@
+"""Resilience-layer tests (DESIGN.md §11).
+
+Fault-injection determinism, the retry/backoff math, payload validation
+and bounded admission, the fault matrix (site × kind × retry policy)
+under a fake clock — every request must terminally resolve with an
+outcome in {served, shed, error, rejected} and non-faulted results must
+stay bit-exact — plus backend degradation/quarantine/re-probe, the
+dispatch watchdog, the bounded drain guard, LM-server protocol parity,
+and a tiny in-process endurance smoke.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import bnn_model
+from repro.core.bnn_model import BConv, FloatDense, Pool
+from repro.serving import (InferenceServer, PhoneBitEngine, faults)
+from repro.serving.faults import (DEGRADE_LADDER, BackendHealth,
+                                  CompileFault, DeviceFault, FaultError,
+                                  FaultPlan, FaultSpec, RetryPolicy,
+                                  WatchdogTimeout, demote_mode)
+from repro.serving.scheduler import OUTCOMES
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    spec = [BConv(3, 32, kernel=3, stride=1, pad=1, first=True),
+            Pool(2, 2), FloatDense(8 * 8 * 32, 10)]
+    params = bnn_model.init_params(jax.random.key(0), spec)
+    return PhoneBitEngine.from_trained(params, spec, (16, 16))
+
+
+def _images(n, rng=None):
+    rng = rng or np.random.default_rng(0)
+    return [rng.integers(0, 256, (16, 16, 3), dtype=np.uint8)
+            for _ in range(n)]
+
+
+class FakeClock:
+    """Monotonic fake clock; ``sleep`` advances it (what the server's
+    injectable ``sleep`` hooks into so drain can wait out backoff)."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, s: float) -> None:
+        self.t += max(s, 0.0)
+
+
+def _server(engine, clock=None, **kw):
+    clock = clock or FakeClock()
+    kw.setdefault("buckets", (1, 2, 4))
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_s", 0.0)
+    return InferenceServer(engine, clock=clock, sleep=clock.sleep, **kw), \
+        clock
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_plan():
+    yield
+    faults.uninstall()
+
+
+# --------------------------------------------------------------------------
+# Fault plan determinism
+# --------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_unknown_site_and_kind_rejected(self):
+        with pytest.raises(ValueError, match="site"):
+            FaultSpec("nope.where", "device_oom")
+        with pytest.raises(ValueError, match="kind"):
+            FaultSpec("server.device", "gremlins")
+
+    def test_schedule_after_every_times(self):
+        plan = FaultPlan([FaultSpec("server.device", "device_fault",
+                                    after=2, every=2, times=2)])
+        fired = []
+        for i in range(10):
+            try:
+                plan.check("server.device")
+                fired.append(False)
+            except DeviceFault:
+                fired.append(True)
+        # skip 2, then every 2nd eligible call, capped at 2 fires
+        assert fired == [False, False, True, False, True,
+                         False, False, False, False, False]
+
+    def test_rate_is_seed_deterministic(self):
+        def run(seed):
+            plan = FaultPlan([FaultSpec("server.device", "device_fault",
+                                        rate=0.5)], seed=seed)
+            out = []
+            for _ in range(32):
+                try:
+                    plan.check("server.device")
+                    out.append(0)
+                except DeviceFault:
+                    out.append(1)
+            return out
+
+        assert run(7) == run(7)
+        assert run(7) != run(8)
+        assert 0 < sum(run(7)) < 32
+
+    def test_match_filters_ctx(self):
+        plan = FaultPlan([FaultSpec("server.dispatch", "device_oom",
+                                    match={"mode": "vpu_chain"})])
+        plan.check("server.dispatch", mode="xla")        # no fire
+        with pytest.raises(faults.DeviceOOM):
+            plan.check("server.dispatch", mode="vpu_chain")
+
+    def test_latency_spike_sleeps_not_raises(self):
+        slept = []
+        plan = FaultPlan([FaultSpec("server.device", "latency_spike",
+                                    duration_s=0.25)], sleep=slept.append)
+        plan.check("server.device")
+        assert slept == [0.25]
+        assert plan.log[0]["kind"] == "latency_spike"
+
+    def test_injection_logged_and_counted(self):
+        from repro.obs import metrics as obs_metrics
+
+        with obs_metrics.use_registry() as reg:
+            with faults.inject([FaultSpec("server.device",
+                                          "device_fault")]) as plan:
+                with pytest.raises(DeviceFault):
+                    faults.maybe_fault("server.device", bucket=4)
+            assert plan.fired("server.device")[0]["bucket"] == 4
+            assert reg.snapshot()["faults.injected"] == 1
+            assert reg.events("fault")[0]["site"] == "server.device"
+        assert faults.get_plan() is None                 # uninstalled
+
+    def test_disabled_is_one_global_read(self):
+        assert faults._PLAN is None
+        faults.maybe_fault("server.device")              # no-op, no raise
+
+
+# --------------------------------------------------------------------------
+# Retry policy math
+# --------------------------------------------------------------------------
+
+class TestRetryPolicy:
+    def test_exponential_capped(self):
+        p = RetryPolicy(max_attempts=5, backoff_base_s=0.1,
+                        backoff_cap_s=0.35, jitter=0.0)
+        assert [p.backoff_s(k) for k in (1, 2, 3, 4)] == \
+            [0.1, 0.2, 0.35, 0.35]
+
+    def test_jitter_bounded_and_seeded(self):
+        p = RetryPolicy(backoff_base_s=0.1, jitter=0.5, seed=3)
+        vals = [p.backoff_s(1) for _ in range(64)]
+        assert all(0.05 <= v <= 0.15 for v in vals)
+        p2 = RetryPolicy(backoff_base_s=0.1, jitter=0.5, seed=3)
+        assert vals[0] == p2.backoff_s(1)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(jitter=1.0)
+
+
+# --------------------------------------------------------------------------
+# Degradation ladder / backend health
+# --------------------------------------------------------------------------
+
+class TestBackendHealth:
+    def test_ladder_demotes_to_floor(self):
+        mode = DEGRADE_LADDER[0]
+        seen = [mode]
+        while (mode := demote_mode(mode)) is not None:
+            seen.append(mode)
+        assert tuple(seen) == DEGRADE_LADDER
+        assert demote_mode("auto") == "xla"              # off-ladder
+
+    def test_demote_after_consecutive_failures(self):
+        h = BackendHealth("vpu_direct", demote_after=2)
+        assert h.record_failure(now=0.0) is None
+        h.record_success()                               # resets streak
+        assert h.record_failure(now=1.0) is None
+        assert h.record_failure(now=2.0) == "vpu_popcount"
+        assert h.mode == "vpu_popcount"
+        assert h.demotions == [{"t": 2.0, "from_mode": "vpu_direct",
+                                "to_mode": "vpu_popcount"}]
+
+    def test_quarantine_probe_and_promote(self):
+        h = BackendHealth("vpu_direct", demote_after=1, probe_after_s=10.0)
+        h.record_failure(now=0.0)
+        assert h.mode == "vpu_popcount"
+        assert h.probe_due(now=5.0) is None              # still quarantined
+        assert h.probe_due(now=10.0) == "vpu_direct"
+        h.promote("vpu_direct")
+        assert h.mode == "vpu_direct"
+        assert h.probe_due(now=100.0) is None            # cleared
+
+    def test_failed_probe_doubles_interval(self):
+        h = BackendHealth("vpu_direct", demote_after=1, probe_after_s=10.0,
+                          probe_backoff=2.0)
+        h.record_failure(now=0.0)
+        h.probe_failed("vpu_direct", now=10.0)           # re-quarantine 20s
+        assert h.probe_due(now=25.0) is None
+        assert h.probe_due(now=30.0) == "vpu_direct"
+        assert h.snapshot(now=0.0)["mode"] == "vpu_popcount"
+
+
+# --------------------------------------------------------------------------
+# Admission: validation + bounded queue
+# --------------------------------------------------------------------------
+
+class TestAdmission:
+    def test_bad_payloads_rejected_not_enqueued(self, tiny_engine):
+        server, _ = _server(tiny_engine)
+        cases = [np.zeros((4, 4, 3), np.uint8),          # wrong shape
+                 np.array([object()]),                   # non-numeric
+                 np.full((16, 16, 3), np.nan)]           # NaN
+        for p in cases:
+            r = server.submit(p)
+            assert r.done and r.outcome == "rejected" and r.error
+        assert len(server.scheduler) == 0
+        assert server.metrics()["rejected"] == len(cases)
+        outs = [f["outcome"] for f in server.flight.dump()]
+        assert outs == ["rejected"] * len(cases)
+
+    def test_good_payload_accepted(self, tiny_engine):
+        server, _ = _server(tiny_engine)
+        r = server.submit(_images(1)[0])
+        assert not r.done and len(server.scheduler) == 1
+        server.drain()
+        assert r.outcome == "served"
+
+    def test_queue_full_rejects(self, tiny_engine):
+        server, _ = _server(tiny_engine, max_queue=2)
+        imgs = _images(4)
+        rs = [server.submit(p) for p in imgs]
+        assert [r.outcome for r in rs] == \
+            [None, None, "rejected", "rejected"]
+        server.drain()
+        assert [r.outcome for r in rs[:2]] == ["served", "served"]
+
+    def test_validation_off_defers_to_serve_path(self, tiny_engine):
+        # With validation off the bad payload still terminally resolves
+        # (error), it just costs a dispatch attempt.
+        server, _ = _server(tiny_engine, validate=False,
+                            retry=RetryPolicy(max_attempts=2,
+                                              jitter=0.0))
+        r = server.submit(np.zeros((4, 4, 3), np.uint8))
+        server.drain()
+        assert r.done and r.outcome == "error"
+
+
+# --------------------------------------------------------------------------
+# The fault matrix: site × kind × retry policy under a fake clock
+# --------------------------------------------------------------------------
+
+MATRIX_SITES = [
+    ("server.preprocess", "preprocess_error"),
+    ("server.dispatch", "device_oom"),
+    ("server.device", "device_fault"),
+    ("engine.compile", "compile_error"),
+    ("executor.call", "device_oom"),
+]
+MATRIX_RETRY = [
+    pytest.param(None, id="no-retry"),
+    pytest.param(RetryPolicy(max_attempts=1, jitter=0.0), id="one-shot"),
+    pytest.param(RetryPolicy(max_attempts=3, backoff_base_s=0.01,
+                             jitter=0.0), id="retry3"),
+]
+
+
+class TestFaultMatrix:
+    @pytest.mark.parametrize("site,kind", MATRIX_SITES,
+                             ids=[s for s, _ in MATRIX_SITES])
+    @pytest.mark.parametrize("retry", MATRIX_RETRY)
+    def test_every_request_terminally_resolves(self, tiny_engine, site,
+                                               kind, retry):
+        """One fault fires at the given site; every submitted request
+        must end done=True with a legal outcome, the loop must survive,
+        and non-faulted requests must serve bit-exact."""
+        # Fresh engine (sharing the converted artifact), no precompile:
+        # the first dispatch's cache-miss compile is the engine.compile
+        # site's natural fire point — a warm executable cache would
+        # never miss again.
+        eng = PhoneBitEngine(spec=tiny_engine.spec,
+                             packed=tiny_engine.packed,
+                             input_hw=tiny_engine.input_hw)
+        server, clock = _server(eng, retry=retry,
+                                buckets=(1,), max_batch=1)
+        imgs = _images(6)
+        plan = FaultPlan([FaultSpec(site, kind, times=1)],
+                         sleep=clock.sleep)
+        faults.install(plan)
+        try:
+            rs = [server.submit(p) for p in imgs]
+            done = server.drain()
+        finally:
+            faults.uninstall()
+        assert len(done) == len(rs)
+        assert all(r.done and r.outcome in OUTCOMES for r in rs)
+        assert len(plan.log) == 1                    # the fault did fire
+        n_retries = server.metrics()["retries"]
+        budget = retry.max_attempts if retry else 1
+        if budget > 1:
+            # transient single fault + retry budget -> everything serves
+            assert all(r.outcome == "served" for r in rs)
+            assert n_retries >= 1
+        else:
+            outcomes = {r.outcome for r in rs}
+            assert outcomes <= {"served", "error"}
+            assert sum(r.outcome == "error" for r in rs) == 1
+        # non-faulted requests are bit-exact vs the cross-check oracle
+        for r in rs:
+            if r.outcome != "served" or r.attempts:
+                continue
+            want = np.asarray(eng.cross_check(
+                np.asarray(r.payload)[None]))[0]
+            np.testing.assert_array_equal(np.asarray(r.result), want)
+        # flight rows exist for every terminal outcome
+        flight_ids = {f.get("id") for f in server.flight.dump()}
+        assert {r.id for r in rs} <= flight_ids
+
+    @pytest.mark.parametrize("kind", ["latency_spike"])
+    def test_latency_spike_serves_everything(self, tiny_engine, kind):
+        server, clock = _server(tiny_engine, buckets=(1,), max_batch=1)
+        server.compile_buckets()
+        plan = FaultPlan([FaultSpec("server.device", kind, times=2,
+                                    duration_s=0.5)], sleep=clock.sleep)
+        faults.install(plan)
+        try:
+            rs = [server.submit(p) for p in _images(4)]
+            server.drain()
+        finally:
+            faults.uninstall()
+        assert all(r.outcome == "served" for r in rs)
+        assert len(plan.log) == 2
+        assert clock.t >= 1.0                        # the spikes stalled
+
+    def test_retry_backoff_runs_on_server_clock(self, tiny_engine):
+        """The retried request becomes eligible only after the policy's
+        deterministic (jitter=0) backoff has elapsed on the fake clock."""
+        server, clock = _server(
+            tiny_engine, buckets=(1,), max_batch=1,
+            retry=RetryPolicy(max_attempts=2, backoff_base_s=5.0,
+                              backoff_cap_s=100.0, jitter=0.0))
+        server.compile_buckets()
+        faults.install(FaultPlan([FaultSpec("server.device",
+                                            "device_fault", times=1)]))
+        try:
+            r = server.submit(_images(1)[0])
+            server.step(force=True)                  # dispatch
+            server.step(force=True)                  # readback faults
+            assert not r.done and r.not_before == pytest.approx(5.0)
+            t_before = clock.t
+            server.drain()                           # waits out backoff
+        finally:
+            faults.uninstall()
+        assert r.outcome == "served"
+        assert clock.t - t_before >= 5.0             # slept through sleep()
+
+    def test_fault_stream_is_replayable(self, tiny_engine):
+        """Same seed + same request stream -> identical injection log
+        and identical outcomes (what makes storms debuggable)."""
+        def run():
+            server, clock = _server(
+                tiny_engine,
+                retry=RetryPolicy(max_attempts=2, backoff_base_s=0.001,
+                                  jitter=0.0))
+            server.compile_buckets()
+            plan = FaultPlan([FaultSpec("server.device", "device_fault",
+                                        rate=0.3)], seed=11,
+                             sleep=clock.sleep)
+            faults.install(plan)
+            try:
+                rs = [server.submit(p) for p in _images(8)]
+                server.drain()
+            finally:
+                faults.uninstall()
+            return ([(f["site"], f["call"]) for f in plan.log],
+                    [r.outcome for r in rs])
+
+        assert run() == run()
+
+
+# --------------------------------------------------------------------------
+# Degradation end to end
+# --------------------------------------------------------------------------
+
+class TestDegradation:
+    def _stormy_server(self, tiny_engine, **kw):
+        # Engine configured one rung above the floor so there is
+        # somewhere to demote to.
+        eng = PhoneBitEngine(spec=tiny_engine.spec,
+                             packed=tiny_engine.packed,
+                             input_hw=tiny_engine.input_hw,
+                             matmul_mode="xla_pm1")
+        kw.setdefault("retry", RetryPolicy(max_attempts=4,
+                                           backoff_base_s=0.001,
+                                           jitter=0.0))
+        return _server(eng, **kw)
+
+    def test_demotes_after_consecutive_failures(self, tiny_engine):
+        server, clock = self._stormy_server(tiny_engine, demote_after=2,
+                                            probe_after_s=1000.0)
+        server.compile_buckets()
+        # fault only the configured mode: the demoted floor is healthy
+        faults.install(FaultPlan([
+            FaultSpec("server.dispatch", "device_fault",
+                      match={"mode": "xla_pm1"})]))
+        try:
+            rs = [server.submit(p) for p in _images(4)]
+            server.drain()
+        finally:
+            faults.uninstall()
+        assert all(r.outcome == "served" for r in rs)
+        assert server.health.mode == "xla"
+        assert server.metrics()["degraded"] == 1
+        assert server.metrics()["mode"] == "xla"
+        demos = [f for f in server.flight.dump()
+                 if f.get("kind") == "demotion"]
+        assert len(demos) == 1
+        assert demos[0]["from_mode"] == "xla_pm1"
+        assert demos[0]["to_mode"] == "xla"
+        from repro.obs import metrics as obs_metrics
+        evs = obs_metrics.get_registry().events("demotion")
+        assert evs and evs[-1]["to_mode"] == "xla"
+
+    def test_reprobe_promotes_after_quarantine(self, tiny_engine):
+        server, clock = self._stormy_server(tiny_engine, demote_after=1,
+                                            probe_after_s=10.0)
+        server.compile_buckets()
+        faults.install(FaultPlan([
+            FaultSpec("server.dispatch", "device_fault", times=1,
+                      match={"mode": "xla_pm1"})]))
+        try:
+            rs = [server.submit(p) for p in _images(2)]
+            server.drain()
+            assert server.health.mode == "xla"       # demoted
+            clock.t += 60.0                          # quarantine expires
+            r2 = server.submit(_images(1)[0])
+            server.drain()
+        finally:
+            faults.uninstall()
+        assert r2.outcome == "served"
+        assert server.health.mode == "xla_pm1"       # probe promoted
+        promos = [f for f in server.flight.dump()
+                  if f.get("kind") == "promotion"]
+        assert promos and promos[-1]["to_mode"] == "xla_pm1"
+
+    def test_demotion_serves_same_packed_results(self, tiny_engine):
+        """A demoted request's result matches the demoted backend's own
+        reference bit-for-bit (resilience never corrupts data)."""
+        server, clock = self._stormy_server(tiny_engine, demote_after=1,
+                                            probe_after_s=1000.0,
+                                            buckets=(1,), max_batch=1)
+        server.compile_buckets()
+        img = _images(1)[0]
+        faults.install(FaultPlan([
+            FaultSpec("server.dispatch", "device_fault",
+                      match={"mode": "xla_pm1"})]))
+        try:
+            r = server.submit(img)
+            server.drain()
+        finally:
+            faults.uninstall()
+        assert r.outcome == "served" and server.health.mode == "xla"
+        want = np.asarray(server.engine.compile(1, mode="xla")(
+            np.asarray(img)[None]))[0]
+        np.testing.assert_array_equal(np.asarray(r.result), want)
+
+
+# --------------------------------------------------------------------------
+# Watchdog + drain guard
+# --------------------------------------------------------------------------
+
+class TestWatchdogAndDrain:
+    def test_watchdog_times_out_wedged_readback(self, tiny_engine):
+        server, clock = _server(tiny_engine, watchdog_s=0.2, retry=None,
+                                buckets=(1,), max_batch=1)
+        server.compile_buckets()
+        # a latency spike (real sleep) longer than the watchdog
+        faults.install(FaultPlan([
+            FaultSpec("server.device", "latency_spike", times=1,
+                      duration_s=2.0)], sleep=time.sleep))
+        try:
+            r = server.submit(_images(1)[0])
+            t0 = time.monotonic()
+            server.drain()
+            elapsed = time.monotonic() - t0
+        finally:
+            faults.uninstall()
+        assert r.done and r.outcome == "error"
+        assert "WatchdogTimeout" in r.error
+        assert elapsed < 1.5                         # didn't wait the 2s
+
+    def test_watchdog_off_is_direct_call(self, tiny_engine):
+        server, _ = _server(tiny_engine, watchdog_s=None)
+        server.compile_buckets()
+        n0 = threading.active_count()
+        rs = [server.submit(p) for p in _images(3)]
+        server.drain()
+        assert all(r.outcome == "served" for r in rs)
+        assert threading.active_count() == n0        # no reader threads
+
+    def test_drain_bounded_when_wedged(self, tiny_engine):
+        """Every dispatch faults forever: drain must terminate with all
+        requests resolved error, not spin."""
+        server, clock = _server(tiny_engine,
+                                retry=RetryPolicy(max_attempts=2,
+                                                  backoff_base_s=0.001,
+                                                  jitter=0.0))
+        server.compile_buckets()
+        faults.install(FaultPlan([FaultSpec("server.dispatch",
+                                            "device_fault")]))
+        try:
+            rs = [server.submit(p) for p in _images(5)]
+            done = server.drain()
+        finally:
+            faults.uninstall()
+        assert len(server.scheduler) == 0 and server._pending is None
+        assert all(r.done and r.outcome == "error" for r in rs)
+        assert len(done) == len(rs)
+
+    def test_drain_max_steps_abort_records_error(self, tiny_engine):
+        server, clock = _server(tiny_engine, retry=None)
+        server.compile_buckets()
+        rs = [server.submit(p) for p in _images(3)]
+        done = server.drain(max_steps=0)             # immediate abort
+        assert all(r.outcome == "error" for r in rs)
+        assert all("wedged" in r.error for r in rs)
+        assert len(done) == len(rs)
+        errs = [f for f in server.flight.dump()
+                if f.get("outcome") == "error"]
+        assert len(errs) == len(rs)
+
+
+# --------------------------------------------------------------------------
+# LM server parity
+# --------------------------------------------------------------------------
+
+class TestLMServerParity:
+    @pytest.fixture(scope="class")
+    def lm(self):
+        from repro.distributed.sharding import rules_for_mesh
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import transformer
+        from repro.serving.lm_server import LMServer
+
+        cfg = transformer.LMConfig(name="t", n_layers=1, d_model=32,
+                                   n_heads=2, n_kv_heads=2, d_head=16,
+                                   d_ff=64, vocab=64, tie_embeddings=True)
+        mesh = make_host_mesh(data=1, model=1)
+        rules = rules_for_mesh(mesh)
+        with mesh:
+            params = transformer.init_params(jax.random.key(0), cfg, ep=1)
+            yield dict(cfg=cfg, rules=rules, params=params, mesh=mesh,
+                       LMServer=LMServer)
+
+    def test_rejects_resolve_with_outcome(self, lm):
+        with lm["mesh"]:
+            s = lm["LMServer"](cfg=lm["cfg"], rules=lm["rules"],
+                               params=lm["params"], n_slots=2, max_seq=16,
+                               max_queue=1)
+            bad = s.submit([])
+            assert bad.outcome == "rejected" and "empty" in bad.error
+            bad = s.submit([1] * 20, max_new=4)
+            assert bad.outcome == "rejected" and "max_seq" in bad.error
+            ok = s.submit([1, 2], max_new=1)
+            full = s.submit([3, 4], max_new=1)
+            assert full.outcome == "rejected" and "queue full" in full.error
+            assert s.metrics()["rejected"] == 3
+            s.drain()
+            assert ok.outcome == "served"
+            outs = [f["outcome"] for f in s.flight.dump()]
+            assert outs.count("rejected") == 3 and "served" in outs
+
+    def test_faulted_tick_retries_then_errors(self, lm):
+        with lm["mesh"]:
+            s = lm["LMServer"](cfg=lm["cfg"], rules=lm["rules"],
+                               params=lm["params"], n_slots=2, max_seq=16,
+                               retry=RetryPolicy(max_attempts=2,
+                                                 jitter=0.0))
+            r = s.submit([1, 2, 3], max_new=8)
+            faults.install(FaultPlan([FaultSpec("lm.step",
+                                                "device_fault")]))
+            try:
+                done = s.drain()
+            finally:
+                faults.uninstall()
+            assert r.done and r.outcome == "error"
+            assert len(done) == 1
+            m = s.metrics()
+            assert m["retries"] >= 1 and m["errors"] == 1
+            assert s.manager.active == {}            # slot released
+            # and the server still serves afterwards
+            r2 = s.submit([1, 2], max_new=1)
+            s.drain()
+            assert r2.outcome == "served"
+
+    def test_transient_tick_fault_recovers(self, lm):
+        with lm["mesh"]:
+            s = lm["LMServer"](cfg=lm["cfg"], rules=lm["rules"],
+                               params=lm["params"], n_slots=2, max_seq=16,
+                               retry=RetryPolicy(max_attempts=3,
+                                                 jitter=0.0))
+            r = s.submit([1, 2, 3], max_new=4)
+            faults.install(FaultPlan([FaultSpec("lm.step", "device_fault",
+                                                times=1)]))
+            try:
+                s.drain()
+            finally:
+                faults.uninstall()
+            assert r.outcome == "served" and len(r.result) >= 1
+            assert s.metrics()["retries"] == 1
+
+    def test_drain_bounded(self, lm):
+        with lm["mesh"]:
+            s = lm["LMServer"](cfg=lm["cfg"], rules=lm["rules"],
+                               params=lm["params"], n_slots=1, max_seq=16)
+            r1 = s.submit([1, 2], max_new=4)
+            r2 = s.submit([3, 4], max_new=4)
+            done = s.drain(max_steps=0)              # immediate abort
+            assert all(r.done and r.outcome == "error" for r in (r1, r2))
+            assert len(done) == 2
+
+
+# --------------------------------------------------------------------------
+# Endurance harness smoke (in-process)
+# --------------------------------------------------------------------------
+
+class TestEnduranceSmoke:
+    def test_smoke_report_shape_and_invariants(self, tmp_path):
+        import sys
+        sys.path.insert(0, ".")
+        try:
+            from benchmarks import endurance_bench
+        finally:
+            sys.path.pop(0)
+        out = tmp_path / "BENCH_endurance.json"
+        report = endurance_bench.run(smoke=True, out=str(out))
+        assert out.exists()
+        assert report["meta"]["schema"] == "bench-meta-v1"
+        s = report["summary"]
+        assert s["unhandled_exceptions"] == 0
+        assert s["all_terminal"] is True
+        assert s["steady_flat_trace"] is True
+        assert s["storm_availability"] >= 0.95
+        assert s["bitexact_ok"] is True
+        assert s["ok"] is True
+        names = [sc["scenario"] for sc in report["scenarios"]]
+        assert names == ["steady", "fault_storm"]
+        storm = report["scenarios"][1]
+        assert storm["faults_injected"] > 0
+        assert len(storm["demotions"]) >= 1

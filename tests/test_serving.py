@@ -399,11 +399,16 @@ def test_lm_server_protocol():
         m = server.metrics()
         assert m["served"] == 3 and m["dropped"] == 0
         assert m["queue_depth"] == 0 and m["p50_ms"] is not None
-        # invalid requests rejected at the protocol edge, not in drain()
-        with pytest.raises(ValueError, match="max_seq"):
-            server.submit(list(range(1, 31)), max_new=8)
-        with pytest.raises(ValueError, match="empty"):
-            server.submit([])
+        # invalid requests resolve ``rejected`` at the protocol edge —
+        # structured outcome, not an exception (DESIGN.md §11.2)
+        bad = server.submit(list(range(1, 31)), max_new=8)
+        assert bad.done and bad.outcome == "rejected"
+        assert "max_seq" in bad.error
+        bad = server.submit([])
+        assert bad.done and bad.outcome == "rejected"
+        assert "empty" in bad.error
+        assert server.metrics()["rejected"] == 2
+        assert server.queue_depth == 0       # rejects never enqueue
 
     # deadline shedding at admission — including mid-queue behind a
     # patient request while all KV slots are busy
