@@ -19,6 +19,20 @@ from benchmarks.timing import time_fn, time_stable  # noqa: F401
 from repro.obs.provenance import write_bench  # noqa: F401
 
 
+def skipped(reason: str) -> dict:
+    """Structured "not measured" marker for BENCH_*.json fields.
+
+    Downstream trajectory tooling reads every bench field as a row; a
+    bare ``null`` forces every consumer to special-case it.  A skipped
+    measurement instead carries *why* it was skipped:
+    ``{"skipped": "1 device"}``."""
+    return {"skipped": reason}
+
+
+def is_skipped(value) -> bool:
+    return isinstance(value, dict) and "skipped" in value
+
+
 def emit(rows: list[dict], title: str) -> None:
     if not rows:
         print(f"# {title}: (no rows)")

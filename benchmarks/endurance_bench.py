@@ -38,7 +38,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, write_bench
+from benchmarks.common import emit, is_skipped, skipped, write_bench
 
 
 def rss_bytes() -> int | None:
@@ -187,14 +187,15 @@ def _run_scenario(name: str, *, requests: int, rate_hz: float,
     served = [r for r in reqs if r.outcome == "served"]
     n_err = counts.get("error", 0)
     availability = (len(served) / (len(served) + n_err)
-                    if served or n_err else None)
+                    if served or n_err else skipped("no samples"))
     m = server.metrics()
     slo_attained = (sum(1 for v in server._metrics.latencies
                         if v * 1e3 <= slo_ms)
                     / len(server._metrics.latencies)
-                    if server._metrics.latencies else None)
+                    if server._metrics.latencies
+                    else skipped("no latency samples"))
     rss_growth = (rss1 - rss0) if rss0 is not None and rss1 is not None \
-        else None
+        else skipped("no /proc rss")
     # BackendHealth's own log is authoritative — the flight ring evicts
     # demotion rows once enough request rows follow them.
     demotion_rows = (list(server.health.demotions)
@@ -220,7 +221,7 @@ def _run_scenario(name: str, *, requests: int, rate_hz: float,
         "rss": {"start_bytes": rss0, "end_bytes": rss1,
                 "growth_bytes": rss_growth,
                 "budget_mb": rss_budget_mb,
-                "flat": (rss_growth is None
+                "flat": (is_skipped(rss_growth)
                          or rss_growth <= rss_budget_mb * 2**20)},
         "demotions": demotion_rows,
         "bitexact": (_check_bitexact(engine, server, served) if served
@@ -273,7 +274,8 @@ def run(smoke: bool = False, out: str = "BENCH_endurance.json") -> dict:
             and all(s["all_terminal"] for s in scenarios)
             and steady["trace_count"]["flat"]
             and steady["rss"]["flat"]
-            and (storm["availability"] or 0) >= 0.95
+            and (storm["availability"]
+                 if isinstance(storm["availability"], float) else 0) >= 0.95
             and all(s["bitexact"]["ok"] for s in scenarios)
         ),
     }
@@ -291,12 +293,12 @@ def run(smoke: bool = False, out: str = "BENCH_endurance.json") -> dict:
         "served": s["outcomes"].get("served", ""),
         "errors": s["errors"], "retries": s["retries"],
         "avail": (f"{s['availability']:.3f}"
-                  if s["availability"] is not None else ""),
+                  if isinstance(s["availability"], float) else ""),
         "p95_ms": (f"{s['p95_ms']:.1f}"
                    if s["p95_ms"] is not None else ""),
         "flat_trace": s["trace_count"]["flat"],
         "rss_mb": (f"{s['rss']['growth_bytes'] / 2**20:.1f}"
-                   if s["rss"]["growth_bytes"] is not None else ""),
+                   if isinstance(s["rss"]["growth_bytes"], int) else ""),
         "demotions": len(s["demotions"]),
         "bitexact": s["bitexact"]["ok"],
     } for s in scenarios], "§Endurance: sustained load + fault storm")

@@ -5,9 +5,10 @@ writes the machine-readable ``BENCH_kernels.json`` perf artifact), and the
 roofline reader (which consumes cached dry-run artifacts if present).
 Each harness prints a CSV block.
 
-``--smoke`` runs the kernel microbench and the end-to-end workload bench
-at CI-sized shapes — a fast regression tripwire that still writes the
-``BENCH_kernels.json`` and ``BENCH_workloads.json`` artifacts.
+``--smoke`` runs CI-sized shapes — a fast regression tripwire that still
+writes the BENCH artifacts; ``--only {kernels,serving,workloads,
+endurance,coldstart}`` restricts the run to one suite (and composes with
+``--smoke``: ``--smoke --only serving`` is the serving tripwire alone).
 """
 
 from __future__ import annotations
@@ -16,18 +17,41 @@ import argparse
 import pathlib
 import traceback
 
+#: ``--only`` choices: each names one suite; the callable gets
+#: ``smoke=`` so ``--smoke --only X`` runs X's CI-sized variant.
+ONLY_SUITES = ("kernels", "serving", "workloads", "endurance", "coldstart")
+
+
+def _suite_runner(only: str):
+    from benchmarks import (coldstart_bench, endurance_bench,
+                            kernels_bench, serving_bench, workloads_bench)
+
+    return {
+        "kernels": kernels_bench.run,
+        "serving": serving_bench.run,
+        "workloads": workloads_bench.run,
+        "endurance": endurance_bench.run,
+        "coldstart": coldstart_bench.run,
+    }[only]
+
 
 def main(argv: list[str] | None = None) -> None:
     parser = argparse.ArgumentParser(prog="benchmarks.run")
     parser.add_argument("--smoke", action="store_true",
-                        help="kernel microbench + workload bench, tiny "
-                             "shapes (CI tripwire; still writes "
-                             "BENCH_kernels.json / BENCH_workloads.json)")
+                        help="CI-sized shapes (fast tripwire; still "
+                             "writes the BENCH_*.json artifacts)")
+    parser.add_argument("--only", choices=ONLY_SUITES, default=None,
+                        help="run one suite instead of everything; "
+                             "composes with --smoke")
     args = parser.parse_args(argv)
 
-    from benchmarks import (crossover, endurance_bench, fig5_layers,
-                            graph_plan, kernels_bench, roofline,
-                            serving_bench, table2_model_size,
+    if args.only is not None:
+        _suite_runner(args.only)(smoke=args.smoke)
+        return
+
+    from benchmarks import (coldstart_bench, crossover, endurance_bench,
+                            fig5_layers, graph_plan, kernels_bench,
+                            roofline, serving_bench, table2_model_size,
                             table3_runtime, table4_energy,
                             workloads_bench)
 
@@ -45,6 +69,7 @@ def main(argv: list[str] | None = None) -> None:
             ("kernels_bench", kernels_bench.run),
             ("serving_bench", serving_bench.run),
             ("endurance_bench", endurance_bench.run),
+            ("coldstart_bench", coldstart_bench.run),
             ("workloads_bench", workloads_bench.run),
             ("crossover", crossover.run),
     ):

@@ -28,7 +28,7 @@ import argparse
 import jax
 import numpy as np
 
-from benchmarks.common import emit, write_bench
+from benchmarks.common import emit, skipped, write_bench
 
 
 def _serve_stream(engine, hwc, *, requests: int, max_batch: int,
@@ -81,11 +81,14 @@ def bench_network(name: str, *, input_hw: int | None = None,
     sync, async_ = _best(sync_runs), _best(async_runs)
     paired = sorted(ratios)[len(ratios) // 2] if ratios else None
 
-    sharded = None
-    if len(jax.devices()) > 1:
+    # On a 1-device host the sharded stream cannot run; the row says so
+    # instead of emitting a bare null (see benchmarks.common.skipped).
+    n_dev = len(jax.devices())
+    sharded = skipped(f"{n_dev} device")
+    if n_dev > 1:
         from repro.launch.mesh import make_host_mesh
 
-        mesh = make_host_mesh(data=len(jax.devices()), model=1)
+        mesh = make_host_mesh(data=n_dev, model=1)
         sharded = _best([_serve_stream(engine, (h, w, c),
                                        async_dispatch=True, mesh=mesh,
                                        **kw) for _ in range(trials)])
@@ -98,8 +101,9 @@ def bench_network(name: str, *, input_hw: int | None = None,
         "async_speedup": paired,
         "async_speedup_pairs": [round(r, 4) for r in ratios],
         "shard_speedup": (sharded["throughput"] / async_["throughput"]
-                          if sharded and sharded["throughput"]
-                          and async_["throughput"] else None),
+                          if sharded.get("throughput")
+                          and async_["throughput"]
+                          else skipped(f"{n_dev} device")),
     }
     return row
 
@@ -134,7 +138,7 @@ def run(smoke: bool = False, out: str = "BENCH_serving.json") -> dict:
         "async_speedup": r["async_speedup"],
         "async_p50_ms": r["async"]["p50_ms"],
         "async_p95_ms": r["async"]["p95_ms"],
-        "shard_img_s": (r["sharded"] or {}).get("throughput", ""),
+        "shard_img_s": r["sharded"].get("throughput", ""),
     } for r in rows]
     emit(csv_rows, "§Serving: sync vs async (vs sharded) throughput")
 

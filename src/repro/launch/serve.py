@@ -14,11 +14,23 @@ Both modes front their engine with the shared server protocol
   labels / NMS'd boxes) instead of raw logits.
 * ``--mode lm``   — continuous-batching decode through the LMServer's
   identical submit/drain surface.
+* ``--export-artifact PATH`` / ``--artifact PATH`` — the zero-warmup
+  pair (DESIGN.md §12): export AOT bucket executables offline, then
+  boot the server from them with zero serve-time traces.
+* ``--workloads a,b,c`` — multi-tenant serving: each entry
+  (``name[:weight]``) becomes a weighted-fair lane behind one
+  :class:`~repro.serving.multiplex.MultiTenantServer`.
 
     PYTHONPATH=src python -m repro.launch.serve --mode bnn \
         --network yolov2-tiny --requests 32
     PYTHONPATH=src python -m repro.launch.serve --mode bnn \
         --workload yolov2_tiny_voc --input-hw 64 --requests 8
+    PYTHONPATH=src python -m repro.launch.serve \
+        --workload alexnet_imagenet --export-artifact /tmp/alex.art
+    PYTHONPATH=src python -m repro.launch.serve \
+        --workload alexnet_imagenet --artifact /tmp/alex.art
+    PYTHONPATH=src python -m repro.launch.serve \
+        --workloads alexnet_imagenet:3,vgg16_imagenet --requests 8
     PYTHONPATH=src python -m repro.launch.serve --mode lm --requests 4
 """
 
@@ -58,6 +70,7 @@ def serve_bnn(args) -> dict:
         from repro import workloads
 
         workload = workloads.get(args.workload,
+                                 variant=args.variant,
                                  matmul_mode=args.matmul_mode,
                                  input_hw=args.input_hw or None)
         engine, (h, w) = workload.engine, workload.input_hw
@@ -72,6 +85,17 @@ def serve_bnn(args) -> dict:
                                              matmul_mode=args.matmul_mode)
         print(f"{args.network}: packed model "
               f"{engine.model_bytes / 2**20:.1f} MiB, input {h}x{w}")
+    if args.export_artifact:
+        # Offline half of zero-warmup serving: write the AOT bucket
+        # executables + autotune table and exit.
+        meta = engine.export_artifact(
+            args.export_artifact, buckets_for(args.batch),
+            **({"workload": workload.name} if workload else {}))
+        print(f"[bnn] exported artifact {args.export_artifact} "
+              f"(buckets {sorted(int(b) for b in meta['buckets'])}, "
+              f"mode {meta['mode']})")
+        return meta
+
     mesh = None
     if args.shard and len(jax.devices()) > 1:
         mesh = make_host_mesh(data=len(jax.devices()), model=1)
@@ -81,10 +105,16 @@ def serve_bnn(args) -> dict:
         async_dispatch=not args.sync, mesh=mesh,
         preprocess=workload.preprocess_hook if workload else None,
         max_queue=args.max_queue or None,
-        watchdog_s=args.watchdog_s)
-    compile_s = server.compile_buckets()
-    print(f"compiled buckets {list(compile_s)} in "
-          f"{sum(compile_s.values()):.2f}s")
+        watchdog_s=args.watchdog_s,
+        artifact=args.artifact)
+    if args.artifact:
+        rep = server.artifact_report
+        print(f"[bnn] artifact {args.artifact}: loaded buckets "
+              f"{rep['loaded']}, missed {dict(rep['missed'])}")
+    else:
+        compile_s = server.compile_buckets()
+        print(f"compiled buckets {list(compile_s)} in "
+              f"{sum(compile_s.values()):.2f}s")
 
     plan = None
     if args.fault_storm:
@@ -118,6 +148,8 @@ def serve_bnn(args) -> dict:
               f"{len(server.health.demotions)} demotions")
     m = server.metrics()
     _print_metrics("bnn", m)
+    if args.artifact:
+        print(f"[bnn] serve-time traces: {engine.trace_count}")
     if workload is not None:
         first = next((r for r in reqs if r.result is not None), None)
         if first is not None:
@@ -125,6 +157,50 @@ def serve_bnn(args) -> dict:
             print(f"[bnn] request 0 -> {len(preds)} predictions; "
                   f"top: {preds[:3]}")
     assert sum(r.done for r in reqs) >= args.requests
+    return m
+
+
+def serve_multi(args) -> dict:
+    """Multi-tenant serving: each ``--workloads`` entry (name[:weight])
+    is a weighted-fair lane behind one MultiTenantServer."""
+    from repro import workloads
+    from repro.serving import MultiTenantServer
+
+    mux = MultiTenantServer(max_batch=args.batch, max_wait_s=0.0,
+                            buckets=buckets_for(args.batch),
+                            max_queue=args.max_queue or None,
+                            watchdog_s=args.watchdog_s)
+    wls = {}
+    for entry in args.workloads.split(","):
+        name, _, w = entry.strip().partition(":")
+        weight = float(w) if w else 1.0
+        wl = workloads.get(name, variant=args.variant,
+                           matmul_mode=args.matmul_mode,
+                           input_hw=args.input_hw or None)
+        wls[name] = wl
+        mux.add_workload(name, wl, weight=weight)
+        print(f"[mux] tenant {name}: weight {weight}, "
+              f"input {wl.input_hw[0]}x{wl.input_hw[1]}, task {wl.task}")
+
+    rng = np.random.default_rng(0)
+    reqs = {name: [] for name in wls}
+    for _ in range(args.requests):
+        for name, wl in wls.items():
+            h, w = wl.input_hw
+            reqs[name].append(mux.submit(
+                name,
+                rng.integers(0, 256, (h + h // 2, w * 2, 3),
+                             dtype=np.uint8),
+                deadline_s=args.deadline_s))
+    mux.drain()
+    m = mux.metrics()
+    for name in wls:
+        _print_metrics(f"mux:{name}", m["tenants"][name])
+    ledger = ", ".join(
+        f"{name} {f['dispatched_rows']} rows (w={f['weight']})"
+        for name, f in m["fairness"].items())
+    print(f"[mux] fairness: {ledger}")
+    assert all(r.done for rs in reqs.values() for r in rs)
     return m
 
 
@@ -165,7 +241,14 @@ def main(argv=None):
                     help="serve a registered end-to-end workload "
                          "(repro.workloads: e.g. yolov2_tiny_voc) — "
                          "preprocess hook + decoded predictions")
+    ap.add_argument("--workloads", default=None, metavar="A[:W],B[:W]",
+                    help="multi-tenant serving: comma-separated "
+                         "workload names, each optionally :weighted "
+                         "(e.g. alexnet_imagenet:3,vgg16_imagenet) — "
+                         "one weighted-fair lane per entry")
     ap.add_argument("--matmul-mode", default="xla")
+    ap.add_argument("--variant", default="paper",
+                    help="workload variant (paper | tiny)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--input-hw", type=int, default=0,
@@ -189,6 +272,14 @@ def main(argv=None):
                          "degrade — bnn mode only")
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--export-artifact", default=None, metavar="PATH",
+                    help="export AOT bucket executables + autotune "
+                         "table to this directory and exit (the "
+                         "offline half of zero-warmup serving)")
+    ap.add_argument("--artifact", default=None, metavar="PATH",
+                    help="boot the server from an exported artifact: "
+                         "executables deserialize instead of tracing "
+                         "(zero serve-time compiles)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record serving-stage spans and write a "
                          "Chrome/Perfetto trace-event JSON here "
@@ -196,6 +287,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     tracer = obs_trace.install() if args.trace_out else None
     try:
+        if args.workloads:
+            return serve_multi(args)
         if args.mode == "bnn":
             return serve_bnn(args)
         return serve_lm(args)

@@ -86,6 +86,27 @@ def cache_path() -> pathlib.Path | None:
     return pathlib.Path(_DEFAULT_CACHE).expanduser()
 
 
+def _env_stamp() -> dict:
+    """The provenance stamp every cache entry carries (DESIGN.md §12.3):
+    jax/jaxlib versions.  The device kind is already part of the
+    signature; the *toolchain* version was not — winners tuned under one
+    jax silently applied under another.  Stamped at measurement time and
+    checked at disk-lookup time (:func:`entry_env_ok`)."""
+    try:
+        import jaxlib
+
+        jaxlib_version = jaxlib.__version__
+    except Exception:                   # noqa: BLE001 — stamp best-effort
+        jaxlib_version = None
+    return {"jax": jax.__version__, "jaxlib": jaxlib_version}
+
+
+def entry_env_ok(entry) -> bool:
+    """Whether a persisted tuning entry was measured under this process's
+    toolchain.  Unstamped (pre-stamp) entries are stale by definition."""
+    return isinstance(entry, dict) and entry.get("env") == _env_stamp()
+
+
 def _device_kind() -> str:
     """Concrete accelerator model (e.g. 'TPU v4'), not just the platform:
     tile winners tuned for one VMEM/lane geometry must not warm-start a
@@ -164,7 +185,7 @@ def _label(backend: str, tile: dict) -> str:
 
 def _tuning_event(outcome: str, op: str, key: str, entry: dict) -> None:
     """Record one tuning decision in the process registry: an
-    ``autotune.{hit,disk_hit,xfer_hit,miss}`` counter bump plus a
+    ``autotune.{hit,disk_hit,disk_miss,xfer_hit,miss}`` counter bump plus a
     structured ``autotune`` event carrying the signature and, for fresh
     sweeps, how many candidates were timed."""
     reg = _obs_metrics.get_registry()
@@ -290,7 +311,8 @@ class Autotuner:
                 f"{node.op!r}; include a universal backend (e.g. 'xla')")
         return dict(winner=best[1], tile=best[2],
                     timings_ms={lbl: round(t * 1e3, 4)
-                                for lbl, t in timings.items()})
+                                for lbl, t in timings.items()},
+                    env=_env_stamp())
 
     def entry(self, node, in_shape: tuple[int, ...]) -> dict | None:
         """The cached tuning record for a node signature, if any."""
@@ -304,8 +326,14 @@ class Autotuner:
         return self.tune_with_tiles(graph, input_shape)[0]
 
     def _cross_batch_entry(self, akey: str) -> dict | None:
-        """A winner measured at another batch size, if transferable."""
-        entry = self.agnostic_cache.get(akey) or self._disk.get(akey)
+        """A winner measured at another batch size, if transferable.
+        Disk records must also pass the toolchain stamp — a cross-batch
+        winner from another jax version is as stale as an exact one."""
+        entry = self.agnostic_cache.get(akey)
+        if entry is None:
+            disk = self._disk.get(akey)
+            if disk is not None and entry_env_ok(disk):
+                entry = disk
         if entry and not (entry.get("tile") or {}).get("block_n"):
             return entry
         return None
@@ -325,9 +353,19 @@ class Autotuner:
             akey = _agnostic_signature(node, in_t.shape, self.candidates)
             if key in self.cache:
                 outcome = "hit"             # warm in-memory winner
-            elif key in self._disk:         # warm start from a prior run
+            elif key in self._disk and entry_env_ok(self._disk[key]):
+                # warm start from a prior run under the same toolchain
                 self.cache[key] = self._disk[key]
                 outcome = "disk_hit"
+            elif key in self._disk:
+                # A winner exists on disk but was tuned under a different
+                # (or unstamped) jax/jaxlib — re-sweep rather than trust it.
+                _tuning_event("disk_miss", node.op, key, self._disk[key])
+                with _trace.span("autotune.sweep", "autotune",
+                                 op=node.op):
+                    self.cache[key] = fresh[key] = self._tune_node(
+                        node, in_t.shape, in_t.dtype)
+                outcome = "miss"
             elif (xfer := self._cross_batch_entry(akey)) is not None:
                 # Winner measured at another serving bucket; tile has
                 # no block_n, so it transfers without re-timing.
@@ -394,7 +432,8 @@ class Autotuner:
                 best = (t, tile)
         return dict(winner="vpu_chain", tile=best[1],
                     timings_ms={lbl: round(t * 1e3, 4)
-                                for lbl, t in timings.items()})
+                                for lbl, t in timings.items()},
+                    env=_env_stamp())
 
     def tune_chains(self, graph: Graph, chains) -> None:
         """Pick a tile shape per chain (set in place on ``chain.tile``).
@@ -408,10 +447,13 @@ class Autotuner:
             key = _chain_signature(chain)
             if key in self.cache:
                 outcome = "hit"
-            elif key in self._disk:
+            elif key in self._disk and entry_env_ok(self._disk[key]):
                 self.cache[key] = self._disk[key]
                 outcome = "disk_hit"
             else:
+                if key in self._disk:
+                    _tuning_event("disk_miss", "chain", key,
+                                  self._disk[key])
                 with _trace.span("autotune.sweep", "autotune", op="chain"):
                     self.cache[key] = fresh[key] = self._tune_chain(
                         chain, graph)

@@ -11,12 +11,25 @@ scheduler   request batching: deadline-aware, latency/throughput-bounded
             batch assembly, zero-padded to compiled buckets
 faults      seeded deterministic fault injection (FaultPlan/FaultSpec),
             retry backoff policy, and the backend degradation ladder
+artifact    AOT executable artifacts (DESIGN.md §12): export compiled
+            bucket executables + autotune winners + provenance meta to a
+            versioned directory; load with zero serve-time traces
+multiplex   MultiTenantServer — several workloads behind one front end:
+            per-tenant server lanes, strict-priority + weighted-fair
+            admission, per-tenant metrics and degradation isolation
 kv_cache    paged-lite KV cache manager for LM decode serving
 lm_server   continuous-batching LM decode loop speaking the same
             submit/poll/drain/metrics protocol as InferenceServer
 """
 
 from repro.serving import faults
+from repro.serving.artifact import (
+    ARTIFACT_SCHEMA,
+    ArtifactError,
+    export_artifact,
+    load_artifact,
+    read_meta,
+)
 from repro.serving.engine import PhoneBitEngine
 from repro.serving.faults import (
     DEGRADE_LADDER,
@@ -28,6 +41,7 @@ from repro.serving.faults import (
     WatchdogTimeout,
 )
 from repro.serving.kv_cache import KVCacheManager
+from repro.serving.multiplex import MultiTenantServer, TenantLane
 from repro.serving.scheduler import (
     OUTCOMES,
     BatchScheduler,
@@ -40,4 +54,6 @@ __all__ = ["PhoneBitEngine", "BatchScheduler", "Request", "KVCacheManager",
            "InferenceServer", "Server", "buckets_for", "faults",
            "FaultPlan", "FaultSpec", "FaultError", "RetryPolicy",
            "BackendHealth", "WatchdogTimeout", "DEGRADE_LADDER",
-           "OUTCOMES"]
+           "OUTCOMES", "ARTIFACT_SCHEMA", "ArtifactError",
+           "export_artifact", "load_artifact", "read_meta",
+           "MultiTenantServer", "TenantLane"]

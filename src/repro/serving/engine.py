@@ -231,8 +231,47 @@ class PhoneBitEngine:
     @property
     def trace_count(self) -> int:
         """Total jit traces across every compiled bucket (serve-time
-        no-recompile hook: this must stay flat while requests flow)."""
+        no-recompile hook: this must stay flat while requests flow).
+        AOT-loaded buckets contribute a constant 0 — they were never
+        traced in this process."""
         return sum(e.trace_count for e in self._compiled.values())
+
+    # ---- AOT executable artifacts (DESIGN.md §12) ------------------------
+    def _install_executable(self, batch_size: int, exe, *,
+                            donate_input: bool = False,
+                            data_parallel: int = 1,
+                            mode: str | None = None) -> None:
+        """Register a prebuilt bucket executable under the same cache key
+        :meth:`compile` would use — the artifact loader's entry point."""
+        key = (int(batch_size), donate_input, data_parallel,
+               mode or self.matmul_mode)
+        self._compiled[key] = exe
+
+    def export_artifact(self, path, buckets=(1, 2, 4, 8), *,
+                        donate_input: bool = True) -> dict:
+        """Serialize one AOT bucket executable per bucket (plus the
+        autotune winner table and a provenance meta block) into the
+        directory ``path`` — the offline half of zero-warmup serving.
+        Distinct from :meth:`save_artifact`, which stores the packed
+        *weights* (npz); this stores compiled *executables*."""
+        from repro.serving import artifact as _artifact
+
+        return _artifact.export_artifact(self, path, buckets,
+                                         donate_input=donate_input)
+
+    def load_artifact(self, path, *, donate_input: bool = True,
+                      data_parallel: int = 1, buckets=None) -> dict:
+        """Restore AOT bucket executables exported by
+        :meth:`export_artifact` into the per-bucket cache with zero
+        traces; per-bucket environment mismatches fall back to live
+        compile (structured ``artifact.miss`` events), corrupt bytes
+        raise :class:`~repro.serving.artifact.ArtifactError`."""
+        from repro.serving import artifact as _artifact
+
+        return _artifact.load_artifact(self, path,
+                                       donate_input=donate_input,
+                                       data_parallel=data_parallel,
+                                       buckets=buckets)
 
     def _plan_shape(self, batch: int | None = None
                     ) -> tuple[int, int, int, int]:

@@ -146,6 +146,15 @@ class InferenceServer:
     sleep:           how ``drain`` waits out retry backoff when every
                      queued request is ineligible (tests inject a fake
                      that advances their fake clock).
+    tenant:          optional tenant name stamped onto flight-recorder
+                     records, fault contexts and ``metrics()`` — how
+                     :class:`~repro.serving.multiplex.MultiTenantServer`
+                     labels each lane.
+    artifact:        optional AOT artifact directory (DESIGN.md §12):
+                     restore serialized bucket executables at
+                     construction so serving starts with zero traces;
+                     per-bucket meta mismatches fall back to live
+                     compile with an ``artifact.miss`` event.
 
     Observability (DESIGN.md §10): when a tracer is installed
     (``repro.obs.trace.install()``) each serving stage emits a span —
@@ -172,8 +181,11 @@ class InferenceServer:
                  demote_after: int = 2,
                  probe_after_s: float = 30.0,
                  watchdog_s: float | None = None,
-                 sleep: Callable[[float], None] | None = None):
+                 sleep: Callable[[float], None] | None = None,
+                 tenant: str | None = None,
+                 artifact: str | None = None):
         self.engine = engine
+        self.tenant = tenant
         self.preprocess = preprocess
         self.mesh, self.data_axis = mesh, data_axis
         self.data_parallel = int(mesh.shape[data_axis]) if mesh is not None \
@@ -203,8 +215,24 @@ class InferenceServer:
         # alongside the served ones.
         self._errored: list[Request] = []
         self._metrics = ServingMetrics(clock)
-        # Postmortem ring of recent request records (DESIGN.md §10.3).
-        self.flight = FlightRecorder(flight_capacity)
+        # Postmortem ring of recent request records (DESIGN.md §10.3);
+        # multi-tenant lanes stamp their tenant onto every record.
+        self.flight = FlightRecorder(
+            flight_capacity,
+            tags={"tenant": tenant} if tenant is not None else None)
+        # Rows dispatched to the device since construction (padded bucket
+        # rows, i.e. what the accelerator actually paid for) — the cost
+        # signal weighted-fair multiplexing charges each tenant's vtime.
+        self.dispatched_rows = 0
+        # AOT artifact restore (DESIGN.md §12): load serialized bucket
+        # executables before the first request so serving starts with
+        # zero traces; per-bucket misses fall back to live compile.
+        self.artifact_report: dict | None = None
+        if artifact is not None:
+            self.artifact_report = engine.load_artifact(
+                artifact, donate_input=donate_input,
+                data_parallel=self.data_parallel,
+                buckets=tuple(self.scheduler.buckets))
 
     # ---- executable cache -------------------------------------------------
     def _executable(self, bucket: int, mode: str | None = None):
@@ -393,12 +421,14 @@ class InferenceServer:
             return None, failures
         if _faults._PLAN is not None:
             _faults.maybe_fault("server.dispatch", bucket=len(rows),
-                                mode=mode or self.engine.matmul_mode)
+                                mode=mode or self.engine.matmul_mode,
+                                tenant=self.tenant)
         with _trace.span("serve.dispatch", "serve", bucket=len(rows),
                          mode=mode):
             x = self._place(np.stack(rows))
             out = self._executable(len(rows), mode)(x)  # async: returns now
         t1 = self.clock()
+        self.dispatched_rows += len(rows)
         self._metrics.mark_dispatch(bucket=len(rows))
         return (_InFlight(kept, row_idx, out, len(rows), t1, t1 - t0,
                           mode), failures)
@@ -438,7 +468,8 @@ class InferenceServer:
         its buffer is dropped on the floor, not replayed)."""
         def blocking() -> np.ndarray:
             if _faults._PLAN is not None:
-                _faults.maybe_fault("server.device", bucket=flight.bucket)
+                _faults.maybe_fault("server.device", bucket=flight.bucket,
+                                    tenant=self.tenant)
             return np.asarray(flight.out)
 
         if self.watchdog_s is None:
@@ -513,14 +544,20 @@ class InferenceServer:
             _trace.instant("serve.shed", "serve", req=r.id)
 
     def step(self, now: float | None = None,
-             force: bool = False) -> list[Request]:
+             force: bool = False, dispatch: bool = True) -> list[Request]:
         """One serving tick: dispatch the next batch (policy permitting),
         then scatter the previously in-flight one.  Under async dispatch
         the new batch's device work overlaps the old batch's readback;
         synchronously each batch completes before the next is assembled.
         Returns the requests completed this tick.  Failures never
         escape: a faulted batch re-queues (retry policy) or resolves
-        ``error``, and the loop keeps serving."""
+        ``error``, and the loop keeps serving.
+
+        ``dispatch=False`` runs the housekeeping half only — shed
+        expired requests, scatter the in-flight batch, hand back error
+        completions — without assembling a new batch.  A multi-tenant
+        arbiter uses it to retire a lane's in-flight work on ticks where
+        fair-share admission picked a different lane."""
         now = self.clock() if now is None else now
         # Shed before assembly so the flight recorder sees every deadline
         # outcome (padded_batch sheds too, but silently — same policy,
@@ -528,9 +565,12 @@ class InferenceServer:
         shed = self.scheduler.shed_expired(now)
         if shed:
             self._record_shed(shed, now)
-        with _trace.span("serve.assemble", "serve"):
-            got = self.scheduler.padded_batch(now, force=force)
-        flight = self._try_dispatch(*got, now) if got is not None else None
+        flight = None
+        if dispatch:
+            with _trace.span("serve.assemble", "serve"):
+                got = self.scheduler.padded_batch(now, force=force)
+            if got is not None:
+                flight = self._try_dispatch(*got, now)
         done: list[Request] = []
         if not self.async_dispatch:
             if flight is not None:
@@ -618,6 +658,7 @@ class InferenceServer:
         counts, resilience counters (retries/errors/rejected/degraded),
         live queue depth, the current serving mode, and throughput over
         the busy window (first dispatch → last scatter)."""
+        extra = {"tenant": self.tenant} if self.tenant is not None else {}
         return self._metrics.snapshot(
             dropped=self.scheduler.dropped,
             queue_depth=self.queue_depth,
@@ -625,4 +666,4 @@ class InferenceServer:
             data_parallel=self.data_parallel,
             mode=(self.health.mode if self.health is not None
                   else self.engine.matmul_mode),
-            buckets=list(self.scheduler.buckets))
+            buckets=list(self.scheduler.buckets), **extra)

@@ -97,7 +97,11 @@ class WorkloadEngine:
     def compile(self, batch_size: int | None = None, *,
                 donate_input: bool = False, data_parallel: int = 1,
                 mode: str | None = None):
-        key = (batch_size, donate_input, data_parallel, mode)
+        # Resolved-mode key (like PhoneBitEngine's): the server's health
+        # ladder passes the concrete mode string, direct calls pass None
+        # — both must hit the same cached (or artifact-loaded) entry.
+        key = (batch_size, donate_input, data_parallel,
+               mode or self.matmul_mode)
         if key not in self._compiled:
             fwd = self.engine.compile(batch_size, donate_input=donate_input,
                                       data_parallel=data_parallel, mode=mode)
@@ -113,6 +117,49 @@ class WorkloadEngine:
         """Configured backend rung — lets the server's degradation ladder
         (DESIGN.md §11.3) judge and demote workload engines too."""
         return self.engine.matmul_mode
+
+    # ---- AOT artifacts (DESIGN.md §12) -----------------------------------
+    # The artifact loader's engine surface: graph/tuner come from the
+    # wrapped engine; loaded executables (forward + head composed) land
+    # in THIS cache so the server's compile() hits them.
+    @property
+    def _graph(self):
+        return self.engine._graph
+
+    @property
+    def _tuner(self):
+        return self.engine._tuner
+
+    def _install_executable(self, batch_size: int, exe, *,
+                            donate_input: bool = False,
+                            data_parallel: int = 1,
+                            mode: str | None = None) -> None:
+        key = (int(batch_size), donate_input, data_parallel,
+               mode or self.matmul_mode)
+        self._compiled[key] = exe
+
+    def export_artifact(self, path, buckets=(1, 2, 4, 8), *,
+                        donate_input: bool = True,
+                        workload: str | None = None) -> dict:
+        """Export AOT bucket executables *including the postprocess
+        head* (serialized per bucket at the forward output shape), so a
+        loaded workload serves decoded predictions with zero traces."""
+        from repro.serving import artifact as _artifact
+
+        return _artifact.export_artifact(
+            self.engine, path, buckets, donate_input=donate_input,
+            head_fn=self._head_jit, workload=workload)
+
+    def load_artifact(self, path, *, donate_input: bool = True,
+                      data_parallel: int = 1, buckets=None) -> dict:
+        """Restore forward+head executables into this engine's bucket
+        cache (``trace_count`` stays 0 — neither the executor closure
+        nor the head jit is ever traced)."""
+        from repro.serving import artifact as _artifact
+
+        return _artifact.load_artifact(
+            self, path, donate_input=donate_input,
+            data_parallel=data_parallel, buckets=buckets, head=True)
 
     @property
     def trace_count(self) -> int:

@@ -345,6 +345,38 @@ class TestAutotuneTilesAndCache:
         assert reg2.counter("autotune.disk_hit").value == len(t2.cache)
         assert reg2.counter("autotune.miss").value == 0
 
+    def test_stale_disk_entry_is_disk_miss(self, pooly, tmp_path,
+                                           monkeypatch):
+        # A disk table written under a different jax/jaxlib must not
+        # warm-start: the timings belong to another compiler.  Every
+        # stale entry is a structured disk_miss + a fresh sweep, and the
+        # re-sweep rewrites the table under the current env stamp.
+        from repro.obs import metrics as obs_metrics
+        from repro.runtime.autotune import entry_env_ok
+
+        spec, _, packed, _ = pooly
+        path = tmp_path / "autotune.json"
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+        gf = fuse_pool_epilogue(lower_packed(spec, packed, (16, 16)))
+        t1 = Autotuner(candidates=("xla", "xla_pm1"), warmup=0, iters=1)
+        t1.tune_with_tiles(gf, (1, 16, 16, 3))
+        table = json.loads(path.read_text())
+        for e in table.values():
+            e["env"] = {"jax": "0.0.1", "jaxlib": "0.0.1"}
+        path.write_text(json.dumps(table))
+
+        t2 = Autotuner(candidates=("xla", "xla_pm1"), warmup=0, iters=1)
+        with obs_metrics.use_registry() as reg:
+            t2.tune_with_tiles(gf, (1, 16, 16, 3))
+        assert reg.counter("autotune.disk_hit").value == 0
+        assert reg.counter("autotune.disk_miss").value == len(t2.cache)
+        assert reg.counter("autotune.miss").value == len(t2.cache)
+        assert {e["outcome"] for e in reg.events("autotune")} == \
+            {"disk_miss", "miss"}
+        # the fresh sweep re-stamped every persisted entry
+        rewritten = json.loads(path.read_text())
+        assert all(entry_env_ok(e) for e in rewritten.values())
+
     def test_escape_hatch_disables_persistence(self, pooly, tmp_path,
                                                monkeypatch):
         spec, _, packed, _ = pooly

@@ -1,0 +1,262 @@
+"""Multi-tenant multiplexer tests (DESIGN.md §12).
+
+Weighted-fair row splits under saturation, strict priority classes,
+idle-lane vtime catch-up (no banked credit), per-tenant degradation
+isolation via tenant-matched fault injection, per-tenant metrics and
+flight-recorder tagging, and bit-exactness of multiplexed serving
+against each engine's own live-compiled reference.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import bnn_model
+from repro.core.bnn_model import BConv, FloatDense, Pool
+from repro.serving import MultiTenantServer, PhoneBitEngine, faults
+from repro.serving.faults import FaultPlan, FaultSpec, RetryPolicy
+
+SPEC_A = [BConv(3, 16, kernel=3, stride=1, pad=1, first=True),
+          Pool(2, 2), FloatDense(8 * 8 * 16, 10)]
+SPEC_B = [BConv(3, 32, kernel=3, stride=1, pad=1, first=True),
+          Pool(2, 2), FloatDense(8 * 8 * 32, 10)]
+
+
+@pytest.fixture(scope="module")
+def eng_a():
+    params = bnn_model.init_params(jax.random.key(0), SPEC_A)
+    return PhoneBitEngine.from_trained(params, SPEC_A, (16, 16))
+
+
+@pytest.fixture(scope="module")
+def eng_b():
+    params = bnn_model.init_params(jax.random.key(1), SPEC_B)
+    return PhoneBitEngine.from_trained(params, SPEC_B, (16, 16))
+
+
+def _images(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 256, (16, 16, 3), dtype=np.uint8)
+            for _ in range(n)]
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.t += max(s, 0.0)
+
+
+def _mux(**kw):
+    clock = FakeClock()
+    kw.setdefault("buckets", (1, 2))
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_wait_s", 0.0)
+    return MultiTenantServer(clock=clock, sleep=clock.sleep, **kw), clock
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_plan():
+    yield
+    faults.uninstall()
+
+
+# --------------------------------------------------------------------------
+# registration contract
+# --------------------------------------------------------------------------
+
+class TestRegistration:
+    def test_duplicate_tenant_rejected(self, eng_a):
+        mux, _ = _mux()
+        mux.add_tenant("a", eng_a)
+        with pytest.raises(ValueError, match="already registered"):
+            mux.add_tenant("a", eng_a)
+
+    def test_nonpositive_weight_rejected(self, eng_a):
+        mux, _ = _mux()
+        with pytest.raises(ValueError, match="weight"):
+            mux.add_tenant("a", eng_a, weight=0.0)
+
+    def test_unknown_tenant_submit_raises(self, eng_a):
+        mux, _ = _mux()
+        mux.add_tenant("a", eng_a)
+        with pytest.raises(KeyError, match="unknown tenant"):
+            mux.submit("nope", _images(1)[0])
+
+
+# --------------------------------------------------------------------------
+# weighted fairness + priority
+# --------------------------------------------------------------------------
+
+class TestFairness:
+    def test_weighted_rows_split_3_to_1(self, eng_a, eng_b):
+        """Both lanes saturated over an 8-step window: dispatched device
+        rows split exactly by weight (a charged rows/3, b rows/1)."""
+        mux, _ = _mux()
+        mux.add_tenant("a", eng_a, weight=3.0)
+        mux.add_tenant("b", eng_b, weight=1.0)
+        mux.server("a").compile_buckets()
+        mux.server("b").compile_buckets()
+        ra = [mux.submit("a", i) for i in _images(16)]
+        rb = [mux.submit("b", i) for i in _images(16, seed=1)]
+        for _ in range(8):
+            mux.step(force=True)
+        rows = {t: mux.server(t).dispatched_rows for t in ("a", "b")}
+        assert rows == {"a": 12, "b": 4}
+        mux.drain()
+        assert all(r.outcome == "served" for r in ra + rb)
+        fair = mux.metrics()["fairness"]
+        assert fair["a"]["weight"] == 3.0
+        # equal weighted shares: vtime converges across lanes
+        assert fair["a"]["dispatched_rows"] == 16
+        assert fair["b"]["dispatched_rows"] == 16
+
+    def test_priority_class_preempts(self, eng_a, eng_b):
+        """A backlogged higher-priority lane dispatches exclusively
+        until its queue empties, regardless of weights."""
+        mux, _ = _mux()
+        mux.add_tenant("hi", eng_a, priority=1, weight=1.0)
+        mux.add_tenant("lo", eng_b, priority=0, weight=100.0)
+        rs_hi = [mux.submit("hi", i) for i in _images(4)]
+        rs_lo = [mux.submit("lo", i) for i in _images(4, seed=1)]
+        for _ in range(2):                  # 2 steps x bucket-2 batches
+            mux.step(force=True)
+        assert mux.server("hi").dispatched_rows == 4
+        assert mux.server("lo").dispatched_rows == 0
+        mux.drain()
+        assert all(r.outcome == "served" for r in rs_hi + rs_lo)
+        assert mux.server("lo").dispatched_rows == 4
+
+    def test_idle_lane_banks_no_credit(self, eng_a, eng_b):
+        """A lane waking from idle starts at the arbiter's virtual
+        clock — it cannot burst on vtime accumulated while empty."""
+        mux, _ = _mux()
+        mux.add_tenant("a", eng_a)
+        mux.add_tenant("b", eng_b)
+        for i in _images(6):
+            mux.submit("a", i)
+        for _ in range(3):
+            mux.step(force=True)
+        assert mux.lanes["a"].vtime == pytest.approx(6.0)
+        assert mux.lanes["b"].vtime == 0.0      # idle, never charged
+        mux.submit("b", _images(1)[0])
+        # catch-up: b competes from _v, not from 0
+        assert mux.lanes["b"].vtime == pytest.approx(mux._v)
+        assert mux.lanes["b"].vtime == pytest.approx(
+            mux.lanes["a"].vtime)
+        mux.drain()
+
+
+# --------------------------------------------------------------------------
+# isolation
+# --------------------------------------------------------------------------
+
+class TestIsolation:
+    def _engines_one_rung_up(self, eng_a, eng_b):
+        a = PhoneBitEngine(spec=eng_a.spec, packed=eng_a.packed,
+                           input_hw=eng_a.input_hw, matmul_mode="xla_pm1")
+        b = PhoneBitEngine(spec=eng_b.spec, packed=eng_b.packed,
+                           input_hw=eng_b.input_hw, matmul_mode="xla_pm1")
+        return a, b
+
+    def test_degradation_is_per_tenant(self, eng_a, eng_b):
+        """Faults matched to tenant 'a' demote a's backend ladder only:
+        b keeps serving on its configured mode, bit-exact."""
+        a, b = self._engines_one_rung_up(eng_a, eng_b)
+        mux, _ = _mux(buckets=(1,), max_batch=1,
+                      retry=RetryPolicy(max_attempts=4,
+                                        backoff_base_s=0.001, jitter=0.0),
+                      demote_after=1, probe_after_s=1000.0)
+        mux.add_tenant("a", a)
+        mux.add_tenant("b", b)
+        faults.install(FaultPlan([
+            FaultSpec("server.dispatch", "device_fault",
+                      match={"tenant": "a", "mode": "xla_pm1"})]))
+        try:
+            ra = [mux.submit("a", i) for i in _images(2)]
+            rb = [mux.submit("b", i) for i in _images(2, seed=1)]
+            mux.drain()
+        finally:
+            faults.uninstall()
+        assert all(r.outcome == "served" for r in ra + rb)
+        assert mux.server("a").health.mode == "xla"       # demoted
+        assert mux.server("b").health.mode == "xla_pm1"   # untouched
+        assert mux.server("a").metrics()["degraded"] == 1
+        assert mux.server("b").metrics()["degraded"] == 0
+        # b's results come off its healthy fast path, bit-exact
+        img = _images(2, seed=1)[0]
+        want = np.asarray(b.compile(1, mode="xla_pm1")(
+            np.asarray(img)[None]))[0]
+        np.testing.assert_array_equal(np.asarray(rb[0].result), want)
+
+    def test_per_tenant_metrics_and_flight_tags(self, eng_a, eng_b):
+        mux, _ = _mux()
+        mux.add_tenant("a", eng_a)
+        mux.add_tenant("b", eng_b)
+        rs = [mux.submit("a", i) for i in _images(2)]
+        rs += [mux.submit("b", i) for i in _images(2, seed=1)]
+        mux.drain()
+        assert all(r.outcome == "served" for r in rs)
+        m = mux.metrics()
+        assert m["tenants"]["a"]["tenant"] == "a"
+        assert m["tenants"]["b"]["tenant"] == "b"
+        assert m["queue_depth"] == 0
+        for t in ("a", "b"):
+            recs = mux.server(t).flight.dump()
+            assert recs and all(r["tenant"] == t for r in recs)
+
+
+# --------------------------------------------------------------------------
+# numerics: multiplexing never changes results
+# --------------------------------------------------------------------------
+
+def test_multitenant_workloads_match_cross_check_oracle():
+    """Two registered workloads behind one multiplexer: every served
+    decoded prediction equals the workload's own ``cross_check`` oracle
+    (which itself asserts graph == legacy-flat bit-exactness) on the
+    identically-preprocessed input."""
+    import jax.numpy as jnp
+
+    from repro import workloads
+
+    mux, _ = _mux(buckets=(1,), max_batch=1)
+    wls = {"alex": workloads.get("alexnet_imagenet", variant="tiny"),
+           "vgg": workloads.get("vgg16_imagenet", variant="tiny")}
+    for t, wl in wls.items():
+        mux.add_workload(t, wl)
+    rng = np.random.default_rng(0)
+    # off-network sizes: the lane's preprocess hook must normalize
+    imgs = {t: [rng.integers(0, 256, (24, 20, 3), dtype=np.uint8)
+                for _ in range(2)] for t in wls}
+    rs = {t: [mux.submit(t, i) for i in imgs[t]] for t in wls}
+    mux.drain()
+    for t, wl in wls.items():
+        assert all(r.outcome == "served" for r in rs[t])
+        for r, img in zip(rs[t], imgs[t]):
+            x = jnp.stack([wl.preprocess(jnp.asarray(img))])
+            want = np.asarray(wl.engine.cross_check(x))[0]
+            np.testing.assert_array_equal(np.asarray(r.result), want)
+
+
+def test_multiplexed_results_bitexact(eng_a, eng_b):
+    """Every multiplexed result equals the owning engine's own
+    live-compiled batch-1 reference, bit for bit."""
+    mux, _ = _mux(buckets=(1,), max_batch=1)
+    mux.add_tenant("a", eng_a)
+    mux.add_tenant("b", eng_b)
+    imgs_a, imgs_b = _images(3), _images(3, seed=1)
+    ra = [mux.submit("a", i) for i in imgs_a]
+    rb = [mux.submit("b", i) for i in imgs_b]
+    mux.drain()
+    assert all(r.outcome == "served" for r in ra + rb)
+    fa, fb = eng_a.compile(1), eng_b.compile(1)
+    for r, img in zip(ra, imgs_a):
+        np.testing.assert_array_equal(
+            np.asarray(r.result), np.asarray(fa(np.asarray(img)[None]))[0])
+    for r, img in zip(rb, imgs_b):
+        np.testing.assert_array_equal(
+            np.asarray(r.result), np.asarray(fb(np.asarray(img)[None]))[0])
