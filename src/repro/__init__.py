@@ -8,8 +8,8 @@ Layers (bottom-up):
   models        model zoo: LM transformers (dense/MoE), DiT, ViT,
                 ConvNeXt, EfficientNet, and the paper's own networks
   configs       --arch registry: 10 assigned architectures × shapes
-  distributed   sharding rules, pipeline parallelism, grad compression,
-                straggler monitoring
+  distributed   placement: data-parallel sharding, pipeline stages,
+                replica groups, straggler-aware routing
   optim         AdamW / SGD, schedules, STE-aware updates
   data          deterministic shardable pipelines
   checkpoint    atomic async checkpoints, elastic re-mesh restore

@@ -1,12 +1,29 @@
-"""Distributed runtime: sharding rules, pipeline parallelism, compression,
-straggler monitoring, elastic re-meshing.
+"""Multi-device scale-out on the runtime IR (DESIGN.md §13).
 
-sharding      mesh-aware PartitionSpec rules per model family (DP/TP/SP/EP)
-pipeline      optional gpipe-style pipeline parallelism over the pod axis
-compression   int8 gradient compression with error feedback (slow links)
-straggler     step-time outlier detection + mitigation hooks
+Three placement shapes behind one serving front end:
+
+sharding      mesh-axis rules (DP/TP/SP/EP for the LM stack) plus the
+              ``DataParallel`` serving placement — one executable,
+              batch dim split over a mesh axis
+pipeline      ``Pipelined`` serving placement — the graph cut into
+              per-device stages at HBM touch points
+              (:mod:`repro.runtime.placement` owns the cut planner and
+              the staged executor)
+replicas      ``ReplicaGroup`` — N device-pinned ``InferenceServer``
+              replicas (each optionally a pipeline) behind one front
+              end, with per-replica health ladders and straggler-aware
+              routing
+straggler     step-time outlier detection (wired into replica routing)
 """
 
-from repro.distributed import compression, pipeline, sharding, straggler
+from repro.distributed import pipeline, replicas, sharding, straggler
+from repro.distributed.pipeline import Pipelined
+from repro.distributed.replicas import Replica, ReplicaGroup
+from repro.distributed.sharding import DataParallel, Rules, rules_for_mesh
+from repro.distributed.straggler import StragglerMonitor
 
-__all__ = ["compression", "pipeline", "sharding", "straggler"]
+__all__ = [
+    "pipeline", "replicas", "sharding", "straggler",
+    "Pipelined", "DataParallel", "Replica", "ReplicaGroup",
+    "Rules", "rules_for_mesh", "StragglerMonitor",
+]

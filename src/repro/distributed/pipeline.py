@@ -1,109 +1,66 @@
-"""GPipe-style pipeline parallelism over a mesh axis (optionally ``pod``).
+"""Pipeline-parallel serving placement on the runtime IR (DESIGN.md §13).
 
-The dry-run meshes use the ``pod`` axis as pure DP (simplest coherent
-multi-pod story), but cross-pod links are slow enough that pipelining the
-*depth* dimension across pods is the standard alternative — activations
-cross the pod boundary once per microbatch instead of gradients every step.
-This module provides that schedule as a composable building block:
+The seed module carried a GPipe ``shard_map`` schedule for *training*
+over stacked homogeneous layers; serving the PhoneBit graph needs the
+opposite decomposition — heterogeneous stages cut from one compiled
+graph at its HBM touch points.  That machinery lives in
+:mod:`repro.runtime.placement` (cut candidates, cost-balanced DP stage
+planner, :class:`StagedExecutor` with per-device committed params and
+cross-stage ``device_put`` transfers); this module is the *placement
+object* the serving layer accepts:
 
-* stage s owns layers [s·L/P, (s+1)·L/P) — parameters arrive stacked with a
-  leading ``n_stages`` dim sharded over the pipeline axis;
-* microbatches stream through stages with ``lax.ppermute`` shifting
-  activations to the next stage each tick (GPipe fill/drain bubble:
-  (P-1)/(M+P-1) of ticks idle);
-* runs under ``shard_map`` so the communication schedule is explicit and
-  inspectable in the lowered HLO (collective-permute ops, one per tick).
+    server = InferenceServer(engine, placement=Pipelined.over(4))
 
-The schedule is validated against a sequential oracle in
-tests/test_distributed.py on a host-device mesh.
+``InferenceServer`` duck-types placements on ``.kind`` (so
+``repro.serving`` never imports this package): ``kind == "pipeline"``
+makes every bucket compile through
+``engine.compile(..., pipeline=devices)`` into a
+:class:`~repro.runtime.placement.StagedExecutor`.  A one-device
+``Pipelined`` is the degenerate-but-useful case: a single stage whose
+params are committed to that device — how
+:class:`~repro.distributed.replicas.ReplicaGroup` pins each replica.
+
+Parity contract: stage boundaries are exact tensor handoffs, so a
+pipelined server is bit-exact with the single-device ``cross_check``
+oracle — pinned by ``tests/test_distributed.py`` and the
+``TestDifferentialFuzz`` forced-mesh sweeps.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Callable
+import dataclasses
+from typing import Any, Sequence
 
 import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
-
-from repro import compat
 
 
-def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
-                   axis: str, n_microbatches: int):
-    """Run ``stage_fn`` as a GPipe pipeline along ``axis``.
+@dataclasses.dataclass(frozen=True)
+class Pipelined:
+    """Pipeline-parallel placement: stage the graph over ``devices``.
 
-    stage_fn(params_local, x_mb) -> y_mb — applies ONE stage's layers to one
-    microbatch.  stage_params: pytree whose leaves have leading dim
-    n_stages (sharded over ``axis``).  x: (batch, ...) global input; batch
-    must divide n_microbatches.  Returns y with the same batch layout.
-
-    All microbatch activations have identical shape, so the loop state is a
-    single (mb, ...) buffer per stage; tick t feeds microbatch t to stage 0
-    and collects stage P-1's output from tick t+P-1.
+    The plan may produce fewer stages than devices when the graph has
+    fewer legal cut points; surplus devices are simply unused (the
+    executor reports the realized split via ``stage_report()``).
     """
-    n_stages = mesh.shape[axis]
-    b = x.shape[0]
-    assert b % n_microbatches == 0, (b, n_microbatches)
-    mb = b // n_microbatches
-    x_mbs = x.reshape(n_microbatches, mb, *x.shape[1:])
 
-    def local(params, xl):
-        # params: leaves (1, ...) — this stage's slice; xl: (M, mb, ...)
-        params = jax.tree.map(lambda p: p[0], params)
-        stage = lax.axis_index(axis)
-        n_ticks = n_microbatches + n_stages - 1
-        state = jnp.zeros_like(xl[0])                  # in-flight activation
-        outs = jnp.zeros_like(xl)
+    devices: tuple[Any, ...]
+    kind = "pipeline"
 
-        def tick(t, carry):
-            state, outs = carry
-            # stage 0 ingests microbatch t (if any); others use the
-            # activation ppermuted from the previous stage last tick.
-            mb_idx = jnp.clip(t, 0, n_microbatches - 1)
-            inp = jnp.where(stage == 0, xl[mb_idx], state)
-            out = stage_fn(params, inp)
-            # last stage stores microbatch (t - (P-1)) when valid
-            out_idx = jnp.clip(t - (n_stages - 1), 0, n_microbatches - 1)
-            store = jnp.logical_and(stage == n_stages - 1,
-                                    t >= n_stages - 1)
-            outs = jnp.where(store, outs.at[out_idx].set(out), outs)
-            # shift to next stage
-            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
-            state = lax.ppermute(out, axis, perm)
-            return state, outs
+    def __post_init__(self):
+        if not self.devices:
+            raise ValueError("Pipelined needs at least one device")
+        object.__setattr__(self, "devices", tuple(self.devices))
 
-        _, outs = lax.fori_loop(0, n_ticks, tick, (state, outs))
-        # outputs live on the last stage, every other stage's buffer is
-        # still zero -> psum broadcasts them to all shards (out_specs
-        # replicate over the pipeline axis).
-        return lax.psum(outs, axis)
+    @classmethod
+    def over(cls, n_stages: int, devices: Sequence[Any] | None = None
+             ) -> "Pipelined":
+        """First ``n_stages`` of ``devices`` (default: all visible)."""
+        devices = tuple(devices if devices is not None else jax.devices())
+        if n_stages < 1 or n_stages > len(devices):
+            raise ValueError(f"n_stages={n_stages} outside 1.."
+                             f"{len(devices)} visible devices")
+        return cls(devices[:n_stages])
 
-    spec_p = jax.tree.map(lambda _: P(axis), stage_params)
-    out = compat.shard_map(
-        local, mesh=mesh,
-        in_specs=(spec_p, P()), out_specs=P(),
-        check_vma=False,
-    )(stage_params, x_mbs)
-    return out.reshape(b, *x.shape[1:])
-
-
-def stack_stages(layer_params, n_stages: int):
-    """(L, ...)-stacked layer params -> (n_stages, L/P, ...) stage params."""
-    def resh(p):
-        l = p.shape[0]
-        assert l % n_stages == 0, (l, n_stages)
-        return p.reshape(n_stages, l // n_stages, *p.shape[1:])
-    return jax.tree.map(resh, layer_params)
-
-
-def make_stage_fn(layer_fn: Callable):
-    """Wrap a single-layer fn into a stage fn scanning its layer slice."""
-    def stage(params, x):
-        def body(h, lp):
-            return layer_fn(h, lp), None
-        y, _ = lax.scan(body, x, params)
-        return y
-    return stage
+    @property
+    def n_stages(self) -> int:
+        return len(self.devices)

@@ -1,0 +1,251 @@
+"""Replica-group serving: one front end over per-device replicas
+(DESIGN.md §13.3).
+
+Data-parallel sharding (one executable, batch split by XLA) scales a
+*single* batch; replica groups scale *request streams*: N independent
+copies of the model, each pinned to its own device (or its own pipeline
+of devices), behind one object speaking the standard server protocol —
+``submit`` / ``poll`` / ``step`` / ``drain`` / ``metrics``.
+
+The composition recipe is the multi-tenant one
+(:mod:`repro.serving.multiplex`), rotated 90°: there, many models share
+one device; here, one model spans many devices.  Each replica is a full
+:class:`~repro.serving.server.InferenceServer` lane over its own engine
+view — own scheduler, own retry policy, own
+:class:`~repro.serving.faults.BackendHealth` ladder, own flight
+recorder — so the PR 7 resilience machinery applies *per replica* with
+no new code:
+
+* a ``device_fault`` / ``device_oom`` injected on one replica demotes
+  and quarantines **that replica's** ladder only; the group's router
+  steers new work toward healthy replicas while the sick one re-probes
+  and promotes per the normal ladder schedule;
+* every lane is constructed with ``tenant=<replica name>``, so fault
+  plans target one replica by matching ``{"tenant": "r1"}`` at the
+  ``server.dispatch`` / ``server.device`` sites, and flight-recorder
+  records carry replica attribution for postmortems.
+
+Device pinning reuses pipeline placement: each replica's lane gets a
+one-stage (or multi-stage) :class:`~repro.distributed.pipeline.Pipelined`
+over its devices, so its bucket executables have params committed to —
+and compute placed on — its own device.  Engines are *views*
+(``dataclasses.replace``) of one shared artifact: packed weights are
+shared host-side; per-replica executable caches are independent.
+
+Routing is health-then-depth: healthy (non-demoted, non-slow) replicas
+are preferred, ties broken by queue depth then round-robin.  A
+:class:`~repro.distributed.straggler.StragglerMonitor` per replica
+watches step wall-times; a persistently slow replica (thermal throttle,
+noisy neighbor) is deprioritized exactly like a demoted one, and
+rejoins the preferred set when its step times recover.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+from repro.distributed.pipeline import Pipelined
+from repro.distributed.straggler import StragglerMonitor
+from repro.obs import trace as _trace
+from repro.serving.scheduler import Request
+from repro.serving.server import InferenceServer
+
+
+class Replica:
+    """One replica lane: its server, devices, and straggler state."""
+
+    __slots__ = ("name", "server", "devices", "monitor", "slow", "rr")
+
+    def __init__(self, name: str, server: InferenceServer,
+                 devices: tuple, monitor: StragglerMonitor):
+        self.name = name
+        self.server = server
+        self.devices = devices
+        self.monitor = monitor
+        # Set by the monitor's persistent-outlier hook; cleared when a
+        # subsequent step is NOT flagged (the replica caught back up).
+        self.slow = False
+        self.rr = 0  # round-robin tiebreak stamp
+
+    @property
+    def healthy(self) -> bool:
+        # Demoted = the lane's live mode sits below the engine's
+        # configured mode (promotion back up restores health).
+        h = self.server.health
+        demoted = h is not None and h.mode != self.server.engine.matmul_mode
+        return not demoted and not self.slow
+
+
+class ReplicaGroup:
+    """N device-pinned InferenceServer replicas behind one front end.
+
+    ``devices_per_replica`` > 1 composes both parallelism axes: each
+    replica is itself a pipeline over that many devices (replicas of
+    pipelines — the scale-out shape data_parallel×pipeline cannot
+    express in one executable).
+
+    Keyword arguments become defaults for every replica's
+    ``InferenceServer``; each lane gets ``tenant=<name>`` and a
+    ``Pipelined`` placement over its device slice.
+    """
+
+    def __init__(self, engine, devices: Sequence[Any], *,
+                 devices_per_replica: int = 1,
+                 names: Sequence[str] | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] | None = None,
+                 slow_after: int = 3,
+                 **server_kw):
+        devices = tuple(devices)
+        k = int(devices_per_replica)
+        if k < 1 or len(devices) < k:
+            raise ValueError(f"devices_per_replica={k} needs at least "
+                             f"{k} of {len(devices)} devices")
+        if len(devices) % k:
+            raise ValueError(f"{len(devices)} devices do not split into "
+                             f"replicas of {k}")
+        n = len(devices) // k
+        names = tuple(names if names is not None
+                      else (f"r{i}" for i in range(n)))
+        if len(names) != n:
+            raise ValueError(f"{len(names)} names for {n} replicas")
+        self.clock = clock
+        self._sleep = sleep if sleep is not None \
+            else (lambda s: time.sleep(min(s, 0.05)))
+        kw = dict(server_kw)
+        kw.setdefault("clock", clock)
+        self.replicas: dict[str, Replica] = {}
+        self._rr = 0
+        for i, name in enumerate(names):
+            devs = devices[i * k:(i + 1) * k]
+            # A view of the shared artifact with its own executable
+            # cache (dataclasses.replace drops cached_property state).
+            eng = dataclasses.replace(engine)
+            server = InferenceServer(eng, tenant=name,
+                                     placement=Pipelined(devs), **kw)
+            monitor = StragglerMonitor(persistent_after=slow_after)
+            rep = Replica(name, server, devs, monitor)
+            # Persistent outlier → deprioritize in routing; any clean
+            # step clears the flag (see _observe_step).
+            monitor.on_persistent = (
+                lambda step, _r=rep: setattr(_r, "slow", True))
+            self.replicas[name] = rep
+
+    # ---- warm-up ----------------------------------------------------------
+    def compile_buckets(self) -> dict[str, dict[int, float]]:
+        """Precompile every replica's bucket executables (per-device
+        compile: each replica's params are committed to its devices).
+        After this, serving triggers zero retraces group-wide."""
+        return {name: rep.server.compile_buckets()
+                for name, rep in self.replicas.items()}
+
+    @property
+    def trace_count(self) -> int:
+        return sum(r.server.engine.trace_count
+                   for r in self.replicas.values())
+
+    # ---- routing ----------------------------------------------------------
+    def _route(self) -> Replica:
+        """Health-then-depth-then-round-robin replica choice."""
+        reps = list(self.replicas.values())
+        healthy = [r for r in reps if r.healthy]
+        pool = healthy if healthy else reps
+        self._rr += 1
+        chosen = min(pool, key=lambda r: (r.server.queue_depth, r.rr))
+        chosen.rr = self._rr
+        return chosen
+
+    # ---- request lifecycle ------------------------------------------------
+    def submit(self, payload: Any, replica: str | None = None,
+               **kw) -> Request:
+        """Route one request to a replica (or pin it with ``replica=``)."""
+        rep = self.replicas[replica] if replica is not None \
+            else self._route()
+        r = rep.server.submit(payload, **kw)
+        _trace.instant("replica.route", "serve", req=r.id,
+                       replica=rep.name)
+        return r
+
+    def poll(self, request: Request) -> bool:
+        return request.done
+
+    # ---- serving loop -----------------------------------------------------
+    def _observe_step(self, rep: Replica, dt: float, step_no: int) -> None:
+        flagged = rep.monitor.observe(step_no, dt)
+        if not flagged and rep.slow:
+            rep.slow = False    # caught back up: rejoin the healthy pool
+
+    def step(self, now: float | None = None,
+             force: bool = False) -> list[Request]:
+        """One tick across every replica (each replica's dispatch and
+        readback run in its own lane; devices execute concurrently).
+        Returns all requests completed this tick."""
+        done: list[Request] = []
+        for rep in self.replicas.values():
+            t = self.clock() if now is None else now
+            t0 = time.perf_counter()
+            done += rep.server.step(t, force=force)
+            self._observe_step(rep, time.perf_counter() - t0,
+                               rep.monitor._n)
+        return done
+
+    def _busy(self) -> bool:
+        return any(len(r.server.scheduler) or r.server._pending is not None
+                   for r in self.replicas.values())
+
+    def drain(self, now: float | None = None,
+              max_steps: int | None = None) -> list[Request]:
+        """Serve until every replica is idle; bounded like
+        ``InferenceServer.drain`` (wedged stragglers terminally error)."""
+        if max_steps is None:
+            budget = max([(r.server.retry.max_attempts if r.server.retry
+                           else 1) for r in self.replicas.values()] or [1])
+            queued = sum(len(r.server.scheduler)
+                         for r in self.replicas.values())
+            max_steps = 4 * (queued + 2 * max(len(self.replicas), 1)
+                             + 2) * budget + 16
+        done: list[Request] = []
+        steps = 0
+        while self._busy():
+            if steps >= max_steps:
+                t = self.clock() if now is None else now
+                for rep in self.replicas.values():
+                    done += rep.server._abort_wedged(t)
+                break
+            steps += 1
+            t = self.clock() if now is None else now
+            done += self.step(t, force=True)
+            if all(r.server._pending is None
+                   for r in self.replicas.values()):
+                queued = [r for r in self.replicas.values()
+                          if len(r.server.scheduler)]
+                waits = [r.server.scheduler.backoff_wait(t)
+                         for r in queued]
+                if queued and all(w is not None and w > 0 for w in waits):
+                    self._sleep(min(waits))
+        return done
+
+    # ---- observability ----------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        return sum(r.server.queue_depth for r in self.replicas.values())
+
+    def metrics(self) -> dict:
+        """Per-replica server snapshots plus the routing ledger (health,
+        slow flag, devices, mean step time)."""
+        return {
+            "replicas": {name: rep.server.metrics()
+                         for name, rep in self.replicas.items()},
+            "routing": {name: {
+                "healthy": rep.healthy,
+                "slow": rep.slow,
+                "mode": (rep.server.health.mode
+                         if rep.server.health is not None
+                         else rep.server.engine.matmul_mode),
+                "devices": [str(d) for d in rep.devices],
+                "mean_step_s": round(rep.monitor.mean_step_time, 6),
+            } for name, rep in self.replicas.items()},
+            "queue_depth": self.queue_depth,
+        }

@@ -102,6 +102,40 @@ class Rules:
         return jax.lax.with_sharding_constraint(x, self.sharding(*spec))
 
 
+@dataclasses.dataclass(frozen=True)
+class DataParallel:
+    """Data-parallel serving placement (DESIGN.md §13): shard the batch
+    dim of every bucket over ``mesh``'s ``axis``.
+
+    The generalized form of ``InferenceServer(mesh=, data_axis=)`` —
+    the server duck-types it on ``.kind == "data"`` and derives mesh +
+    axis from it, so data- and pipeline-parallel serving share one
+    ``placement=`` surface.  One executable: XLA splits each bucket via
+    ``NamedSharding(mesh, P(axis))``; buckets are rounded up to shard
+    evenly and autotuning runs at the per-device shard shape.
+    """
+
+    mesh: Mesh
+    axis: str = "data"
+    kind = "data"
+
+    def __post_init__(self):
+        if self.axis not in self.mesh.axis_names:
+            raise ValueError(f"axis {self.axis!r} not in mesh axes "
+                             f"{self.mesh.axis_names}")
+
+    @classmethod
+    def over(cls, n_shards: int, axis: str = "data") -> "DataParallel":
+        """A host mesh of the first ``n_shards`` visible devices."""
+        from repro.launch.mesh import make_host_mesh
+
+        return cls(make_host_mesh(data=n_shards, model=1), axis)
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+
 def single_pod_rules(mesh: Mesh) -> Rules:
     return Rules(mesh=mesh, batch=("data",))
 

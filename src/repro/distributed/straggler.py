@@ -11,8 +11,11 @@ EWMA + variance of step wall-times and flags steps whose duration exceeds
   restart with the survivor set; see checkpoint.elastic), or re-balance
   microbatches.
 
-The monitor is deliberately dependency-free and unit-testable by injecting
-synthetic step times (tests/test_distributed.py simulates a degrading host).
+Two live consumers: the training launcher (:mod:`repro.launch.train`)
+and replica-group serving (:mod:`repro.distributed.replicas`), where a
+persistently slow replica is deprioritized by the router exactly like a
+health-demoted one.  The monitor is deliberately dependency-free and
+unit-testable by injecting synthetic step times.
 """
 
 from __future__ import annotations

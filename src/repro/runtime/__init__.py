@@ -17,6 +17,9 @@ fast engine.
     regions    chain-fusion region formation: runs of packed ops fused
                into single megakernel calls with VMEM-resident
                intermediates at planner offsets (DESIGN.md §9)
+    placement  multi-device placement: pipeline cut candidates at HBM
+               touch points, cost-balanced stage planning, and the
+               staged per-device executor (DESIGN.md §13)
 """
 
 from repro.runtime.autotune import (Autotuner, cache_path,
@@ -29,16 +32,20 @@ from repro.runtime.memory import MemoryPlan, VmemPlan, plan_memory, vmem_plan
 from repro.runtime.passes import (absorb_pools, assign_layouts,
                                   default_pipeline, fuse_epilogues,
                                   fuse_pool_epilogue, integrate_bn)
+from repro.runtime.placement import (StagedExecutor, StagePlan,
+                                     cut_candidates, plan_pipeline,
+                                     stage_subgraph, staged_executor)
 from repro.runtime.regions import (Chain, build_chain, chain_executor,
                                    chain_report, partition_chains)
 
 __all__ = [
     "ALL_MODES", "Autotuner", "BACKENDS", "CHAIN_BACKEND", "Chain",
     "DISPATCHABLE_OPS", "Graph", "GraphExecutor", "MemoryPlan", "Node",
-    "TensorType", "VmemPlan", "absorb_pools", "assign_layouts",
-    "build_chain", "cache_path", "chain_executor", "chain_report",
+    "StagePlan", "StagedExecutor", "TensorType", "VmemPlan",
+    "absorb_pools", "assign_layouts", "build_chain", "cache_path",
+    "chain_executor", "chain_report", "cut_candidates",
     "default_candidates", "default_pipeline", "fuse_epilogues",
     "fuse_pool_epilogue", "infer_types", "integrate_bn", "lower_packed",
-    "lower_trained", "partition_chains", "plan_memory", "valid_backends",
-    "vmem_plan",
+    "lower_trained", "partition_chains", "plan_memory", "plan_pipeline",
+    "stage_subgraph", "staged_executor", "valid_backends", "vmem_plan",
 ]

@@ -5,8 +5,9 @@ engine      PhoneBitEngine — the paper's deployment story (Fig 2/Fig 3):
             grows ``compile(batch)`` — the per-bucket executable cache
 server      InferenceServer — the production front end: bucketed
             precompiled executables, async double-buffered dispatch,
-            optional data-parallel batch sharding, p50/p95 metrics,
-            retry/degrade resilience (every request terminally resolves)
+            optional placement (data-parallel sharding or pipeline
+            stages, DESIGN.md §13), p50/p95 metrics, retry/degrade
+            resilience (every request terminally resolves)
 scheduler   request batching: deadline-aware, latency/throughput-bounded
             batch assembly, zero-padded to compiled buckets
 faults      seeded deterministic fault injection (FaultPlan/FaultSpec),

@@ -149,7 +149,7 @@ class PhoneBitEngine:
 
     def compile(self, batch_size: int | None = None, *,
                 donate_input: bool = False, data_parallel: int = 1,
-                mode: str | None = None):
+                mode: str | None = None, pipeline=None):
         """Build (once) the executable for one serving bucket.
 
         Returns the cached :class:`GraphExecutor` for
@@ -166,6 +166,14 @@ class PhoneBitEngine:
         a failing bucket down the backend ladder without touching the
         engine's configured mode (all modes are bit-exact, so a demoted
         bucket serves identical results).
+
+        ``pipeline`` is a sequence of devices for pipeline-parallel
+        placement (DESIGN.md §13): the bucket compiles to a
+        :class:`~repro.runtime.placement.StagedExecutor` — one
+        executable per stage, cut at HBM touch points, params committed
+        per device.  Mutually exclusive with ``data_parallel > 1``
+        (compose data-parallel *replicas of pipelines* via
+        :class:`~repro.distributed.replicas.ReplicaGroup` instead).
         """
         from repro import runtime
 
@@ -176,14 +184,32 @@ class PhoneBitEngine:
         if data_parallel > 1 and bs % data_parallel:
             raise ValueError(
                 f"bucket {bs} not divisible by data_parallel={data_parallel}")
+        if pipeline is not None and data_parallel > 1:
+            raise ValueError("pipeline placement and data_parallel > 1 "
+                             "are mutually exclusive on one executable; "
+                             "compose replicas of pipelines instead")
+        # The 4-tuple key is the artifact-compat surface
+        # (artifact._install_executable); pipeline buckets extend it, so
+        # the two key shapes can never collide.
         key = (bs, donate_input, data_parallel, mode)
+        if pipeline is not None:
+            key = key + (tuple(str(d) for d in pipeline),)
         if key not in self._compiled:
             if _faults._PLAN is not None:
                 _faults.maybe_fault("engine.compile", bucket=bs, mode=mode)
             with _trace.span("compile.executor", "compile", bucket=bs,
                              mode=mode,
                              data_parallel=data_parallel):
-                if mode == "auto":
+                if pipeline is not None:
+                    from repro.runtime import placement as _placement
+
+                    exe = _placement.staged_executor(
+                        self._graph, self._plan_shape(bs), tuple(pipeline),
+                        mode=mode, donate_input=donate_input,
+                        tuner=(self._tuner if mode == "auto"
+                               or jax.default_backend() == "tpu"
+                               else None))
+                elif mode == "auto":
                     exe = self._tuner.tuned_executor(
                         self._graph,
                         self._plan_shape(max(bs // data_parallel, 1)),

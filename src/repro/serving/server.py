@@ -121,6 +121,16 @@ class InferenceServer:
                      k's device work is in flight — host preprocessing is
                      the classic serving cost double-buffering hides.
     mesh/data_axis:  optional device mesh for data-parallel sharding.
+    placement:       optional placement object (DESIGN.md §13), the
+                     generalized form of ``mesh=``: duck-typed on
+                     ``.kind`` so this module never imports
+                     ``repro.distributed``.  ``kind == "data"``
+                     (:class:`~repro.distributed.sharding.DataParallel`)
+                     supplies mesh + axis; ``kind == "pipeline"``
+                     (:class:`~repro.distributed.pipeline.Pipelined`)
+                     compiles every bucket as a
+                     :class:`~repro.runtime.placement.StagedExecutor`
+                     over its devices.
     flight_capacity: size of the flight-recorder ring (recent request
                      records for postmortems; ``server.flight.dump()``).
     clock:           injectable monotonic clock (tests use a fake).
@@ -172,6 +182,7 @@ class InferenceServer:
                  preprocess: Callable[[np.ndarray], np.ndarray]
                  | None = None,
                  mesh=None, data_axis: str = "data",
+                 placement=None,
                  flight_capacity: int = 256,
                  clock: Callable[[], float] = time.monotonic,
                  retry: RetryPolicy | None = RetryPolicy(),
@@ -187,6 +198,26 @@ class InferenceServer:
         self.engine = engine
         self.tenant = tenant
         self.preprocess = preprocess
+        # Placement generalizes mesh=: duck-typed on .kind so the server
+        # never imports repro.distributed (which imports this module).
+        self.placement = placement
+        self.pipeline_devices: tuple | None = None
+        if placement is not None:
+            kind = getattr(placement, "kind", None)
+            if kind == "data":
+                if mesh is not None:
+                    raise ValueError("pass placement= or mesh=, not both")
+                mesh, data_axis = placement.mesh, placement.axis
+            elif kind == "pipeline":
+                if mesh is not None:
+                    raise ValueError("pipeline placement and mesh= are "
+                                     "mutually exclusive on one server; "
+                                     "compose replicas of pipelines via "
+                                     "ReplicaGroup")
+                self.pipeline_devices = tuple(placement.devices)
+            else:
+                raise ValueError(f"placement {placement!r} has no valid "
+                                 f".kind ('data' | 'pipeline')")
         self.mesh, self.data_axis = mesh, data_axis
         self.data_parallel = int(mesh.shape[data_axis]) if mesh is not None \
             else 1
@@ -236,9 +267,12 @@ class InferenceServer:
 
     # ---- executable cache -------------------------------------------------
     def _executable(self, bucket: int, mode: str | None = None):
+        kw = {}
+        if self.pipeline_devices is not None:
+            kw["pipeline"] = self.pipeline_devices
         return self.engine.compile(bucket, donate_input=self.donate_input,
                                    data_parallel=self.data_parallel,
-                                   mode=mode)
+                                   mode=mode, **kw)
 
     def compile_buckets(self) -> dict[int, float]:
         """Precompile (and autotune) every bucket; returns seconds spent
@@ -659,6 +693,13 @@ class InferenceServer:
         live queue depth, the current serving mode, and throughput over
         the busy window (first dispatch → last scatter)."""
         extra = {"tenant": self.tenant} if self.tenant is not None else {}
+        if self.pipeline_devices is not None:
+            extra["placement"] = {"kind": "pipeline",
+                                  "devices": [str(d) for d in
+                                              self.pipeline_devices]}
+        elif self.placement is not None:
+            extra["placement"] = {"kind": "data",
+                                  "shards": self.data_parallel}
         return self._metrics.snapshot(
             dropped=self.scheduler.dropped,
             queue_depth=self.queue_depth,

@@ -544,3 +544,105 @@ class TestDifferentialFuzz:
             np.asarray(ex(x)), ref,
             err_msg=f"chain split {[c.node_ids for c in split]} diverges "
                     f"on spec {spec}")
+
+    # ---- forced-mesh placement sweeps (DESIGN.md §13) --------------------
+    # Placement is a backend choice like any other: the same random specs
+    # the backend-pair fuzz runs must agree when sharded over a mesh axis
+    # or cut into pipeline stages.  Multi-device needs
+    # --xla_force_host_platform_device_count, which must be set before
+    # jax imports and must never leak into this process — so each sweep
+    # runs in one subprocess covering several seeds.  Bar: packed int32
+    # tails bit-exact, float heads 1e-4.
+
+    _PLACEMENT_SWEEP = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
+os.environ["REPRO_AUTOTUNE_CACHE"] = "0"
+import sys
+sys.path.insert(0, {src!r})
+sys.path.insert(0, {tests!r})
+try:
+    import hypothesis  # noqa: F401  (stub keeps the import below legal)
+except ImportError:
+    import _hypothesis_stub
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+import jax, jax.numpy as jnp
+import numpy as np
+from test_graph_runtime import _random_spec, _randomize_bn
+from repro.core import bnn_model
+from repro.core.bnn_model import BConv, BDense, FloatConv, FloatDense
+from repro.serving import PhoneBitEngine
+
+N = {n_dev}
+assert len(jax.devices()) == N, jax.devices()
+for seed in {seeds}:
+    rng = np.random.default_rng(seed)
+    spec, hw0 = _random_spec(rng)
+    # Two variants per spec: the original float head (1e-4 bar) and a
+    # packed-tail derivative (bit-exact bar) — drop a FloatDense tail,
+    # swap a FloatConv head for a BDense.
+    last = spec[-1]
+    if isinstance(last, FloatDense):
+        spec_p = spec[:-1]
+    else:
+        hw_c = last.c_in
+        hw_sp = hw0
+        for l in spec:
+            if type(l).__name__ == "Pool":
+                hw_sp //= l.stride
+        spec_p = spec[:-1] + [BDense(hw_sp * hw_sp * hw_c, 32)]
+    for sp, exact in ((spec, False), (spec_p, True)):
+        params = _randomize_bn(
+            bnn_model.init_params(jax.random.key(seed % (2**31)), sp),
+            seed=seed % 7919)
+        engine = PhoneBitEngine.from_trained(params, sp, (hw0, hw0))
+        bs = 2 * N
+        x = jnp.asarray(rng.integers(0, 256, (bs, hw0, hw0, 3)),
+                        jnp.uint8)
+        ref = np.asarray(engine.compile(bs)(x))
+        # data-parallel: batch dim sharded over the forced mesh
+        got_dp = np.asarray(engine.compile(bs, data_parallel=N)(x))
+        # pipeline-parallel: schedule cut into per-device stages
+        got_pp = np.asarray(engine.compile(
+            bs, pipeline=jax.devices())(x))
+        # zero-padded bucket traffic (ragged batch padded up)
+        pad = np.zeros_like(x)
+        pad[: bs // 2] = np.asarray(x[: bs // 2])
+        ref_pad = np.asarray(engine.compile(bs)(jnp.asarray(pad)))
+        dp_pad = np.asarray(engine.compile(bs, data_parallel=N)(
+            jnp.asarray(pad)))
+        pp_pad = np.asarray(engine.compile(bs, pipeline=jax.devices())(
+            jnp.asarray(pad)))
+        for name, got, want in (("dp", got_dp, ref),
+                                ("pp", got_pp, ref),
+                                ("dp-pad", dp_pad, ref_pad),
+                                ("pp-pad", pp_pad, ref_pad)):
+            if exact:
+                np.testing.assert_array_equal(
+                    got, want, err_msg=f"{{name}} seed={{seed}} {{sp}}")
+            else:
+                np.testing.assert_allclose(
+                    got, want, atol=1e-4,
+                    err_msg=f"{{name}} seed={{seed}} {{sp}}")
+    print("seed", seed, "ok")
+print("placement-fuzz-ok")
+"""
+
+    @pytest.mark.parametrize("n_dev", [2, 4])
+    def test_placement_parity_sweep_forced_mesh(self, n_dev):
+        import pathlib
+        import subprocess
+        import sys as _sys
+
+        tests = pathlib.Path(__file__).resolve().parent
+        rng = np.random.default_rng(1000 + n_dev)
+        seeds = [int(s) for s in rng.integers(0, 10**9, 3)]
+        script = self._PLACEMENT_SWEEP.format(
+            n_dev=n_dev, src=str(tests.parent / "src"),
+            tests=str(tests), seeds=seeds)
+        r = subprocess.run([_sys.executable, "-c", script],
+                           capture_output=True, text=True, timeout=560)
+        assert r.returncode == 0, \
+            f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+        assert "placement-fuzz-ok" in r.stdout

@@ -659,3 +659,135 @@ class TestEnduranceSmoke:
         storm = report["scenarios"][1]
         assert storm["faults_injected"] > 0
         assert len(storm["demotions"]) >= 1
+
+
+# --------------------------------------------------------------------------
+# Distributed fault matrix: replica-scoped faults (DESIGN.md §13.3)
+# --------------------------------------------------------------------------
+
+class TestDistributedFaults:
+    """Device faults injected on ONE replica of a :class:`ReplicaGroup`
+    must stay replica-scoped: only that replica's ladder demotes and
+    quarantines, every non-faulted request stays bit-exact, routing
+    steers around the sick replica, and it re-probes/promotes on the
+    normal PR 7 ladder schedule.  Replica lanes carry ``tenant=<name>``,
+    so fault plans target one replica with ``match={"tenant": "r1"}``."""
+
+    def _group(self, tiny_engine, **kw):
+        from repro.distributed import ReplicaGroup
+
+        # One rung above the floor so there is somewhere to demote to.
+        eng = PhoneBitEngine(spec=tiny_engine.spec,
+                             packed=tiny_engine.packed,
+                             input_hw=tiny_engine.input_hw,
+                             matmul_mode="xla_pm1")
+        clock = FakeClock()
+        kw.setdefault("retry", RetryPolicy(max_attempts=4,
+                                           backoff_base_s=0.001,
+                                           jitter=0.0))
+        kw.setdefault("buckets", (1, 2, 4))
+        kw.setdefault("max_batch", 4)
+        kw.setdefault("max_wait_s", 0.0)
+        dev = jax.devices()[0]
+        grp = ReplicaGroup(eng, [dev, dev], clock=clock,
+                           sleep=clock.sleep, **kw)
+        return grp, clock
+
+    @pytest.mark.parametrize("site,kind", [
+        ("server.dispatch", "device_fault"),
+        ("server.dispatch", "device_oom"),
+        ("server.device", "device_fault"),
+        ("server.device", "device_oom"),
+    ])
+    def test_fault_on_one_replica_quarantines_only_it(self, tiny_engine,
+                                                      site, kind):
+        grp, clock = self._group(tiny_engine, demote_after=1,
+                                 probe_after_s=1000.0)
+        grp.compile_buckets()
+        match = {"tenant": "r1"}
+        extra = {}
+        if site == "server.dispatch":
+            # dispatch carries mode ctx: fault only the configured rung,
+            # the demoted floor serves (persistent-fault recovery path)
+            match["mode"] = "xla_pm1"
+        else:
+            # device readback has no mode ctx: cap the fault instead
+            # (transient-fault recovery path)
+            extra["times"] = 2
+        faults.install(FaultPlan([FaultSpec(site, kind, match=match,
+                                            **extra)]))
+        try:
+            imgs = _images(4)
+            rs = [grp.submit(p, replica=("r1" if i % 2 else "r0"))
+                  for i, p in enumerate(imgs)]
+            grp.drain()
+        finally:
+            faults.uninstall()
+        assert all(r.outcome == "served" for r in rs)
+        r0, r1 = grp.replicas["r0"], grp.replicas["r1"]
+        # blast radius: exactly one ladder moved
+        assert r1.server.health.mode == "xla"          # demoted
+        assert r1.server.metrics()["degraded"] >= 1
+        assert not r1.healthy
+        assert r0.server.health.mode == "xla_pm1"      # untouched
+        assert r0.server.metrics()["degraded"] == 0
+        assert r0.server.metrics()["retries"] == 0
+        assert r0.healthy
+        # the router now steers new work to the healthy replica
+        assert grp._route().name == "r0"
+        assert grp.metrics()["routing"]["r1"]["healthy"] is False
+        # every result — faulted replica included (all modes bit-exact,
+        # retries never corrupt data) — matches the engine oracle
+        ref = np.asarray(r0.server.engine.compile(4)(
+            np.stack([np.asarray(p) for p in imgs])))
+        for i, r in enumerate(rs):
+            np.testing.assert_array_equal(np.asarray(r.result), ref[i])
+
+    def test_sick_replica_reprobes_and_promotes(self, tiny_engine):
+        grp, clock = self._group(tiny_engine, demote_after=1,
+                                 probe_after_s=10.0)
+        grp.compile_buckets()
+        faults.install(FaultPlan([
+            FaultSpec("server.dispatch", "device_fault", times=1,
+                      match={"tenant": "r1", "mode": "xla_pm1"})]))
+        try:
+            rs = [grp.submit(p, replica="r1") for p in _images(2)]
+            grp.drain()
+            r1 = grp.replicas["r1"]
+            assert r1.server.health.mode == "xla" and not r1.healthy
+            clock.t += 60.0                      # quarantine expires
+            r2 = grp.submit(_images(1)[0], replica="r1")
+            grp.drain()
+        finally:
+            faults.uninstall()
+        assert all(r.outcome == "served" for r in rs + [r2])
+        r1 = grp.replicas["r1"]
+        assert r1.server.health.mode == "xla_pm1"    # probe promoted
+        assert r1.healthy
+        assert grp.metrics()["routing"]["r1"]["healthy"] is True
+        promos = [f for f in r1.server.flight.dump()
+                  if f.get("kind") == "promotion"]
+        assert promos and promos[-1]["to_mode"] == "xla_pm1"
+        # r0 never saw any of it
+        assert grp.replicas["r0"].server.health.mode == "xla_pm1"
+
+    def test_unpinned_traffic_avoids_quarantined_replica(self, tiny_engine):
+        grp, clock = self._group(tiny_engine, demote_after=1,
+                                 probe_after_s=1000.0)
+        grp.compile_buckets()
+        faults.install(FaultPlan([
+            FaultSpec("server.dispatch", "device_fault",
+                      match={"tenant": "r1", "mode": "xla_pm1"})]))
+        try:
+            warm = [grp.submit(p, replica="r1") for p in _images(2)]
+            grp.drain()                          # r1 demotes
+            assert not grp.replicas["r1"].healthy
+            rs = [grp.submit(p) for p in _images(4)]     # router's choice
+            grp.drain()
+        finally:
+            faults.uninstall()
+        assert all(r.outcome == "served" for r in warm + rs)
+        m = grp.metrics()
+        # all post-demotion traffic landed on the healthy replica
+        assert m["replicas"]["r0"]["served"] == 4
+        assert m["replicas"]["r0"]["retries"] == 0
