@@ -21,10 +21,21 @@ slow leaks and drift show up, under two scenarios:
   **bit-exact** vs the engine's ``cross_check`` oracle: retries and
   backend demotions may change *when* a request is served, never *what*
   it returns.
+* ``kill_recover`` — the crash-safety story (DESIGN.md §14.3): a child
+  process boots from an AOT artifact, journals a request stream
+  through a :class:`~repro.serving.recovery.RequestJournal`, serves
+  part of it, then SIGKILLs itself mid-stream.  A second fresh process
+  boots from the same artifact + journal, replays every
+  journaled-but-unresolved request, and the row reports the recovered
+  fraction, the recovery wall time, and that the restarted process
+  served with **zero retraces** (artifact boot) — the kill-9 proof the
+  journal exists for.
 
 Writes ``BENCH_endurance.json`` (provenance-stamped like every BENCH
 artifact).  ``--smoke`` is the CI-sized run; the full run rides
-``python -m benchmarks.run``.
+``python -m benchmarks.run``.  ``--phase kill|recover --dir D`` are the
+subprocess halves of ``kill_recover`` (driven by the parent run, not by
+hand).
 
     PYTHONPATH=src python -m benchmarks.endurance_bench [--smoke]
 """
@@ -50,7 +61,8 @@ def rss_bytes() -> int | None:
         return None
 
 
-def _make_server(watchdog_s: float | None = 10.0):
+def _make_server(watchdog_s: float | None = 10.0, artifact: str | None = None,
+                 journal=None):
     from repro.core import bnn_model
     from repro.serving import InferenceServer, PhoneBitEngine, RetryPolicy
 
@@ -68,7 +80,8 @@ def _make_server(watchdog_s: float | None = 10.0):
         engine, max_batch=4, max_wait_s=0.0, buckets=(1, 2, 4),
         retry=RetryPolicy(max_attempts=3, backoff_base_s=0.002,
                           backoff_cap_s=0.05),
-        max_queue=512, watchdog_s=watchdog_s)
+        max_queue=512, watchdog_s=watchdog_s,
+        artifact=artifact, journal=journal)
     return engine, server
 
 
@@ -237,7 +250,11 @@ def _storm_plan():
     from repro.serving.faults import LATENCY_SPIKE, FaultPlan, FaultSpec
 
     return FaultPlan([
-        FaultSpec("server.device", "device_fault", times=2),
+        # Pinned to one bucket: health ladders are per-bucket now
+        # (DESIGN.md §14.3), so the guaranteed demotion needs both
+        # guaranteed faults to land on the SAME ladder.
+        FaultSpec("server.device", "device_fault", times=2,
+                  match={"bucket": 4}),
         FaultSpec("server.device", "device_fault", rate=0.05, after=2),
         FaultSpec("executor.call", "device_oom", rate=0.03),
         FaultSpec("engine.compile", "compile_error", times=1, after=1),
@@ -245,6 +262,115 @@ def _storm_plan():
         FaultSpec("server.device", LATENCY_SPIKE, rate=0.05,
                   duration_s=0.002),
     ], seed=7)
+
+
+def _phase_kill(d: str) -> None:
+    """Child half of ``kill_recover``: boot from the artifact, journal
+    a request stream, serve a prefix of it, then SIGKILL ourselves with
+    requests still unresolved — no atexit, no flush, no goodbye."""
+    import signal
+
+    from repro.serving.recovery import RequestJournal
+
+    _engine, server = _make_server(
+        artifact=os.path.join(d, "artifact"),
+        journal=RequestJournal(os.path.join(d, "journal.jsonl")))
+    rng = np.random.default_rng(7)
+    for _ in range(24):
+        server.submit(rng.integers(0, 256, (16, 16, 3), dtype=np.uint8))
+    for _ in range(6):          # resolve a prefix of the stream
+        server.step(force=True)
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def _phase_recover(d: str) -> None:
+    """Restart half of ``kill_recover``: a fresh process boots from the
+    same artifact + journal, replays every journaled-but-unresolved
+    request, and reports what it recovered (JSON on stdout)."""
+    import json
+
+    from repro.serving.recovery import RequestJournal, replay_journal
+
+    t0 = time.monotonic()
+    jpath = os.path.join(d, "journal.jsonl")
+    pre = RequestJournal.scan(jpath)
+    engine, server = _make_server(
+        artifact=os.path.join(d, "artifact"),
+        journal=RequestJournal(jpath))
+    reqs = replay_journal(server, jpath)
+    server.drain()
+    recovery_s = time.monotonic() - t0
+    post = RequestJournal.scan(jpath)
+    print(json.dumps({
+        "journaled_unresolved": len(pre.unresolved),
+        "torn_tail": pre.torn_tail,
+        "replayed": len(reqs),
+        "recovered": sum(1 for r in reqs if r.outcome == "served"),
+        "outcomes": _outcome_counts(reqs),
+        "unresolved_after": len(post.unresolved),
+        "trace_count": engine.trace_count,
+        "recovery_s": recovery_s,
+    }))
+
+
+def _kill_recover_scenario(smoke: bool) -> dict:
+    """Drive the two subprocess phases and assemble the row.  A spawn
+    environment that cannot run subprocesses yields a skipped row, not
+    a crash (the CI job asserts the row is NOT skipped)."""
+    import json
+    import subprocess
+    import sys
+    import tempfile
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    d = tempfile.mkdtemp(prefix="endurance_killrec_")
+    engine, _server = _make_server()
+    engine.export_artifact(os.path.join(d, "artifact"), buckets=(1, 2, 4))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root,
+         *filter(None, [env.get("PYTHONPATH")])])
+    env["REPRO_AUTOTUNE_CACHE"] = "0"
+
+    def phase(name: str, timeout: float):
+        return subprocess.run(
+            [sys.executable, "-m", "benchmarks.endurance_bench",
+             "--phase", name, "--dir", d],
+            capture_output=True, text=True, timeout=timeout, env=env,
+            cwd=root)
+
+    row: dict = {"scenario": "kill_recover", "requests": 24}
+    try:
+        p_kill = phase("kill", 420)
+    except Exception as e:              # noqa: BLE001 — report, don't crash
+        row["ok"] = skipped(f"kill phase spawn failed: {e}")
+        return row
+    killed = p_kill.returncode == -9
+    row["killed"] = killed
+    if not killed:
+        row["ok"] = False
+        row["error"] = (f"kill phase exited {p_kill.returncode}: "
+                        f"{p_kill.stderr[-500:]}")
+        return row
+    try:
+        p_rec = phase("recover", 420)
+        rec = json.loads(p_rec.stdout.strip().splitlines()[-1])
+    except Exception as e:              # noqa: BLE001
+        row["ok"] = False
+        row["error"] = f"recover phase failed: {e}"
+        return row
+    row.update(rec)
+    # The §14.3 contract: every journaled-unresolved request is
+    # replayed and terminally resolved, the restarted process serves
+    # with zero retraces (artifact boot), and nothing stays open.
+    row["recovered_fraction"] = (
+        rec["recovered"] / rec["journaled_unresolved"]
+        if rec["journaled_unresolved"] else 1.0)
+    row["ok"] = (rec["replayed"] == rec["journaled_unresolved"]
+                 and rec["recovered"] == rec["journaled_unresolved"]
+                 and rec["unresolved_after"] == 0
+                 and rec["trace_count"] == 0)
+    return row
 
 
 def run(smoke: bool = False, out: str = "BENCH_endurance.json") -> dict:
@@ -256,27 +382,34 @@ def run(smoke: bool = False, out: str = "BENCH_endurance.json") -> dict:
         _run_scenario("fault_storm", requests=n, rate_hz=rate,
                       warmup=16, slo_ms=500.0, rss_budget_mb=64.0,
                       plan=_storm_plan()),
+        _kill_recover_scenario(smoke),
     ]
     steady = scenarios[0]
     storm = scenarios[1]
+    killrec = scenarios[2]
+    loop = scenarios[:2]                # the open-loop rows
     summary = {
         "unhandled_exceptions": sum(s["unhandled_exceptions"]
-                                    for s in scenarios),
-        "all_terminal": all(s["all_terminal"] for s in scenarios),
+                                    for s in loop),
+        "all_terminal": all(s["all_terminal"] for s in loop),
         "steady_flat_trace": steady["trace_count"]["flat"],
         "steady_flat_rss": steady["rss"]["flat"],
         "storm_availability": storm["availability"],
         "storm_availability_floor": 0.95,
         "storm_demotions": len(storm["demotions"]),
-        "bitexact_ok": all(s["bitexact"]["ok"] for s in scenarios),
+        "bitexact_ok": all(s["bitexact"]["ok"] for s in loop),
+        "kill_recover_ok": killrec["ok"],
+        "kill_recovered_fraction": killrec.get("recovered_fraction"),
+        "kill_recovery_s": killrec.get("recovery_s"),
         "ok": (
-            sum(s["unhandled_exceptions"] for s in scenarios) == 0
-            and all(s["all_terminal"] for s in scenarios)
+            sum(s["unhandled_exceptions"] for s in loop) == 0
+            and all(s["all_terminal"] for s in loop)
             and steady["trace_count"]["flat"]
             and steady["rss"]["flat"]
             and (storm["availability"]
                  if isinstance(storm["availability"], float) else 0) >= 0.95
-            and all(s["bitexact"]["ok"] for s in scenarios)
+            and all(s["bitexact"]["ok"] for s in loop)
+            and killrec["ok"] is True
         ),
     }
     report = {
@@ -301,9 +434,24 @@ def run(smoke: bool = False, out: str = "BENCH_endurance.json") -> dict:
                    if isinstance(s["rss"]["growth_bytes"], int) else ""),
         "demotions": len(s["demotions"]),
         "bitexact": s["bitexact"]["ok"],
-    } for s in scenarios], "§Endurance: sustained load + fault storm")
+    } for s in loop], "§Endurance: sustained load + fault storm")
+    emit([{
+        "scenario": killrec["scenario"], "req": killrec.get("requests"),
+        "killed": killrec.get("killed", ""),
+        "journaled": killrec.get("journaled_unresolved", ""),
+        "recovered": killrec.get("recovered", ""),
+        "fraction": (f"{killrec['recovered_fraction']:.2f}"
+                     if isinstance(killrec.get("recovered_fraction"),
+                                   float) else ""),
+        "traces": killrec.get("trace_count", ""),
+        "recovery_s": (f"{killrec['recovery_s']:.1f}"
+                       if isinstance(killrec.get("recovery_s"), float)
+                       else ""),
+        "ok": killrec["ok"],
+    }], "§Endurance: kill -9 → artifact + journal restart")
     print(f"wrote {out} (ok={summary['ok']}, storm availability="
-          f"{summary['storm_availability']})")
+          f"{summary['storm_availability']}, kill_recover="
+          f"{summary['kill_recover_ok']})")
     return report
 
 
@@ -311,7 +459,16 @@ def main(argv=None):
     ap = argparse.ArgumentParser(prog="benchmarks.endurance_bench")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run; still writes BENCH_endurance.json")
+    ap.add_argument("--phase", choices=("kill", "recover"),
+                    help="subprocess halves of kill_recover (internal)")
+    ap.add_argument("--dir", dest="dir_",
+                    help="shared artifact+journal dir for --phase")
     args = ap.parse_args(argv)
+    if args.phase:
+        if not args.dir_:
+            ap.error("--phase requires --dir")
+        (_phase_kill if args.phase == "kill" else _phase_recover)(args.dir_)
+        return
     run(smoke=args.smoke)
 
 

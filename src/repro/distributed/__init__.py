@@ -12,18 +12,21 @@ pipeline      ``Pipelined`` serving placement — the graph cut into
 replicas      ``ReplicaGroup`` — N device-pinned ``InferenceServer``
               replicas (each optionally a pipeline) behind one front
               end, with per-replica health ladders and straggler-aware
-              routing
+              routing; ``LMReplicaGroup`` — LM decode lanes with
+              checkpoint-backed sequence migration (DESIGN.md §14.4)
 straggler     step-time outlier detection (wired into replica routing)
 """
 
 from repro.distributed import pipeline, replicas, sharding, straggler
 from repro.distributed.pipeline import Pipelined
-from repro.distributed.replicas import Replica, ReplicaGroup
+from repro.distributed.replicas import (LMLane, LMReplicaGroup, Replica,
+                                        ReplicaGroup)
 from repro.distributed.sharding import DataParallel, Rules, rules_for_mesh
 from repro.distributed.straggler import StragglerMonitor
 
 __all__ = [
     "pipeline", "replicas", "sharding", "straggler",
     "Pipelined", "DataParallel", "Replica", "ReplicaGroup",
+    "LMLane", "LMReplicaGroup",
     "Rules", "rules_for_mesh", "StragglerMonitor",
 ]

@@ -249,3 +249,181 @@ class ReplicaGroup:
             } for name, rep in self.replicas.items()},
             "queue_depth": self.queue_depth,
         }
+
+
+# ---------------------------------------------------------------------------
+# LM decode lanes with cross-lane sequence migration (DESIGN.md §14.4)
+# ---------------------------------------------------------------------------
+
+class LMLane:
+    """One LM decode lane: its server plus quarantine state.  Unlike
+    the BNN replica, whose ladder quarantines *backends*, a lane
+    quarantines the whole decode loop: a lane that exhausted its
+    in-lane restore budget hands its flight away and sits out a
+    doubling probe interval before routing sends it new work."""
+
+    __slots__ = ("name", "server", "quarantined_until", "probe_interval",
+                 "quarantines", "rr")
+
+    def __init__(self, name: str, server, probe_after_s: float):
+        self.name = name
+        self.server = server
+        self.quarantined_until: float | None = None
+        self.probe_interval = probe_after_s
+        self.quarantines = 0
+        self.rr = 0
+
+    def quarantined(self, now: float) -> bool:
+        return (self.quarantined_until is not None
+                and now < self.quarantined_until)
+
+
+class LMReplicaGroup:
+    """N continuous-batching LM lanes behind one front end, with
+    checkpoint-backed sequence migration (DESIGN.md §14.4).
+
+    Each lane is a full :class:`~repro.serving.lm_server.LMServer`
+    (``tenant=<name>``, so fault plans target one lane by matching
+    ``{"tenant": "lm1"}`` at ``lm.step``).  The group installs itself
+    as every lane's ``evacuate`` hook: when a lane's decode faults
+    outlast its restore budget, its in-flight sequences — prompt plus
+    every already-emitted token, which the checkpoint/restore machinery
+    kept intact host-side — are *adopted* by a healthy lane via replay
+    prefill.  Migration is prefix-preserving, not bit-exact (RoPE
+    positions and cache history differ across lanes — §14.4); the
+    emitted prefix is kept verbatim and only future tokens come from
+    the new lane.  The evacuated lane is quarantined with a doubling
+    probe interval and rejoins routing when it expires.
+
+    Keyword arguments become defaults for every lane's ``LMServer``.
+    """
+
+    def __init__(self, cfg, rules, params, *, n_slots: int, max_seq: int,
+                 n_lanes: int = 2, names: Sequence[str] | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 probe_after_s: float = 30.0, probe_backoff: float = 2.0,
+                 **lane_kw):
+        from repro.serving.lm_server import LMServer
+
+        names = tuple(names if names is not None
+                      else (f"lm{i}" for i in range(n_lanes)))
+        self.clock = clock
+        self.probe_backoff = probe_backoff
+        self.migrations = 0     # sequences adopted across lanes
+        self._rr = 0
+        kw = dict(lane_kw)
+        kw.setdefault("clock", clock)
+        kw.setdefault("checkpoint_every", 4)
+        self.lanes: dict[str, LMLane] = {}
+        for name in names:
+            server = LMServer(cfg=cfg, rules=rules, params=params,
+                              n_slots=n_slots, max_seq=max_seq,
+                              tenant=name, **kw)
+            lane = LMLane(name, server, probe_after_s)
+            server.evacuate = (
+                lambda items, _lane=lane: self._adopt(_lane, items))
+            self.lanes[name] = lane
+
+    # ---- migration --------------------------------------------------------
+    def _adopt(self, origin: LMLane, items: list) -> bool:
+        """Evacuation hook for one lane: find a healthy lane with room
+        for the whole flight, replay-prefill every sequence there, and
+        quarantine the origin.  All-or-nothing (partial adoption would
+        split one consistent flight across inconsistent outcomes)."""
+        now = self.clock()
+        candidates = sorted(
+            (ln for ln in self.lanes.values()
+             if ln is not origin and not ln.quarantined(now)),
+            key=lambda ln: (ln.server.queue_depth, ln.rr))
+        target = next(
+            (ln for ln in candidates
+             if len(ln.server.manager._free) >= len(items)), None)
+        if target is None:
+            return False
+        for r, seq in items:
+            target.server.adopt_sequence(r, seq.prompt, seq.tokens,
+                                         seq.max_new)
+        origin.quarantined_until = now + origin.probe_interval
+        origin.probe_interval *= self.probe_backoff
+        origin.quarantines += 1
+        self.migrations += len(items)
+        _trace.instant("replica.migrate", "serve", n=len(items),
+                       src=origin.name, dst=target.name)
+        target.server.flight.record(kind="migration", outcome="adopted",
+                                    seqs=len(items), src=origin.name,
+                                    done_s=now)
+        return True
+
+    # ---- routing ----------------------------------------------------------
+    def _route(self, now: float) -> LMLane:
+        lanes = list(self.lanes.values())
+        pool = [ln for ln in lanes if not ln.quarantined(now)] or lanes
+        self._rr += 1
+        chosen = min(pool, key=lambda ln: (ln.server.queue_depth, ln.rr))
+        chosen.rr = self._rr
+        return chosen
+
+    # ---- request lifecycle ------------------------------------------------
+    def submit(self, prompt: list[int], max_new: int = 16,
+               lane: str | None = None, **kw) -> Request:
+        now = self.clock()
+        ln = self.lanes[lane] if lane is not None else self._route(now)
+        r = ln.server.submit(prompt, max_new=max_new, **kw)
+        _trace.instant("replica.route", "serve", req=r.id, lane=ln.name)
+        return r
+
+    def poll(self, request: Request) -> bool:
+        return request.done
+
+    # ---- serving loop -----------------------------------------------------
+    def serve_tick(self, now: float | None = None) -> list[Request]:
+        done: list[Request] = []
+        for ln in self.lanes.values():
+            done += ln.server.serve_tick(now)
+        return done
+
+    def _busy(self) -> bool:
+        return any(ln.server.queue_depth for ln in self.lanes.values())
+
+    def drain(self, now: float | None = None,
+              max_steps: int | None = None) -> list[Request]:
+        """Serve until every lane is idle; bounded like
+        ``LMServer.drain`` (wedged lanes terminally error)."""
+        if max_steps is None:
+            budget = max((ln.server.retry.max_attempts
+                          if ln.server.retry else 1)
+                         for ln in self.lanes.values())
+            outstanding = sum(ln.server.queue_depth
+                              for ln in self.lanes.values()) + 1
+            max_seq = max(ln.server.max_seq for ln in self.lanes.values())
+            max_steps = outstanding * (max_seq + budget) * 2 + 16
+        done: list[Request] = []
+        steps = 0
+        while self._busy():
+            if steps >= max_steps:
+                for ln in self.lanes.values():
+                    done += ln.server.drain(now=now, max_steps=0)
+                break
+            steps += 1
+            done += self.serve_tick(now)
+        return done
+
+    # ---- observability ----------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        return sum(ln.server.queue_depth for ln in self.lanes.values())
+
+    def metrics(self) -> dict:
+        now = self.clock()
+        return {
+            "lanes": {name: ln.server.metrics()
+                      for name, ln in self.lanes.items()},
+            "routing": {name: {
+                "quarantined": ln.quarantined(now),
+                "quarantines": ln.quarantines,
+                "restores": ln.server.restores,
+                "evacuations": ln.server.evacuations,
+            } for name, ln in self.lanes.items()},
+            "migrations": self.migrations,
+            "queue_depth": self.queue_depth,
+        }

@@ -20,6 +20,10 @@ Both modes front their engine with the shared server protocol
 * ``--workloads a,b,c`` — multi-tenant serving: each entry
   (``name[:weight]``) becomes a weighted-fair lane behind one
   :class:`~repro.serving.multiplex.MultiTenantServer`.
+* ``--journal PATH`` — durable request journal (DESIGN.md §14.3):
+  accepted submits are WAL-journaled before they enqueue, and a boot
+  over an existing journal replays whatever a crashed predecessor left
+  unresolved.
 
     PYTHONPATH=src python -m repro.launch.serve --mode bnn \
         --network yolov2-tiny --requests 32
@@ -99,6 +103,11 @@ def serve_bnn(args) -> dict:
     mesh = None
     if args.shard and len(jax.devices()) > 1:
         mesh = make_host_mesh(data=len(jax.devices()), model=1)
+    journal = None
+    if args.journal:
+        from repro.serving.recovery import RequestJournal, replay_journal
+
+        journal = RequestJournal(args.journal)
     server = InferenceServer(
         engine, max_batch=args.batch, max_wait_s=0.0,
         buckets=buckets_for(args.batch),
@@ -106,7 +115,15 @@ def serve_bnn(args) -> dict:
         preprocess=workload.preprocess_hook if workload else None,
         max_queue=args.max_queue or None,
         watchdog_s=args.watchdog_s,
-        artifact=args.artifact)
+        artifact=args.artifact,
+        journal=journal)
+    if journal is not None:
+        # Crash recovery (DESIGN.md §14.3): requests journaled by a
+        # previous process but never resolved are resubmitted first.
+        replayed = replay_journal(server, args.journal)
+        if replayed:
+            print(f"[bnn] journal {args.journal}: replaying "
+                  f"{len(replayed)} unresolved request(s)")
     if args.artifact:
         rep = server.artifact_report
         print(f"[bnn] artifact {args.artifact}: loaded buckets "
@@ -280,6 +297,11 @@ def main(argv=None):
                     help="boot the server from an exported artifact: "
                          "executables deserialize instead of tracing "
                          "(zero serve-time compiles)")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="durable request journal (JSONL WAL, DESIGN.md "
+                         "§14.3): accepted submits hit disk before they "
+                         "enqueue; on boot, unresolved requests from a "
+                         "crashed process are replayed — bnn mode only")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record serving-stage spans and write a "
                          "Chrome/Perfetto trace-event JSON here "

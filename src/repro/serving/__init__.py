@@ -21,6 +21,9 @@ multiplex   MultiTenantServer — several workloads behind one front end:
 kv_cache    paged-lite KV cache manager for LM decode serving
 lm_server   continuous-batching LM decode loop speaking the same
             submit/poll/drain/metrics protocol as InferenceServer
+recovery    crash-safe serving (DESIGN.md §14): consistent-cut KV
+            checkpoint/restore for the LM decode loop and the durable
+            JSONL request journal both servers can write through
 """
 
 from repro.serving import faults
@@ -35,6 +38,7 @@ from repro.serving.engine import PhoneBitEngine
 from repro.serving.faults import (
     DEGRADE_LADDER,
     BackendHealth,
+    BucketHealth,
     FaultError,
     FaultPlan,
     FaultSpec,
@@ -43,6 +47,11 @@ from repro.serving.faults import (
 )
 from repro.serving.kv_cache import KVCacheManager
 from repro.serving.multiplex import MultiTenantServer, TenantLane
+from repro.serving.recovery import (
+    KVCheckpointer,
+    RequestJournal,
+    replay_journal,
+)
 from repro.serving.scheduler import (
     OUTCOMES,
     BatchScheduler,
@@ -54,7 +63,8 @@ from repro.serving.server import InferenceServer, Server
 __all__ = ["PhoneBitEngine", "BatchScheduler", "Request", "KVCacheManager",
            "InferenceServer", "Server", "buckets_for", "faults",
            "FaultPlan", "FaultSpec", "FaultError", "RetryPolicy",
-           "BackendHealth", "WatchdogTimeout", "DEGRADE_LADDER",
-           "OUTCOMES", "ARTIFACT_SCHEMA", "ArtifactError",
-           "export_artifact", "load_artifact", "read_meta",
-           "MultiTenantServer", "TenantLane"]
+           "BackendHealth", "BucketHealth", "WatchdogTimeout",
+           "DEGRADE_LADDER", "OUTCOMES", "ARTIFACT_SCHEMA",
+           "ArtifactError", "export_artifact", "load_artifact",
+           "read_meta", "MultiTenantServer", "TenantLane",
+           "KVCheckpointer", "RequestJournal", "replay_journal"]

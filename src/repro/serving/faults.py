@@ -108,9 +108,13 @@ FAULT_KINDS: dict[str, type[FaultError]] = {
 
 #: The instrumented sites (DESIGN.md §11.1).  ``maybe_fault`` accepts
 #: any site string, but plans targeting unknown sites never fire — the
-#: constructor rejects them to catch typos.
+#: constructor rejects them to catch typos.  ``kv.snapshot`` /
+#: ``kv.restore`` instrument the crash-safe recovery path itself
+#: (DESIGN.md §14.1): a snapshot fault skips (or invalidates) a
+#: checkpoint, a restore fault burns one bounded resume attempt.
 SITES = ("server.preprocess", "server.dispatch", "server.device",
-         "engine.compile", "executor.call", "lm.step")
+         "engine.compile", "executor.call", "lm.step",
+         "kv.snapshot", "kv.restore")
 
 
 # ---------------------------------------------------------------------------
@@ -402,4 +406,93 @@ class BackendHealth:
             "demotions": len(self.demotions),
             "quarantined": {m: max(0.0, until - now)
                             for m, (until, _) in self._quarantine.items()},
+        }
+
+
+class BucketHealth:
+    """Per-``(bucket, mode)`` degradation ladders (DESIGN.md §14.3).
+
+    PR 7's :class:`BackendHealth` tracked one ladder for the whole
+    server, so a single pathological bucket shape (one batch size whose
+    tile config trips the fast backend) demoted *every* bucket to the
+    safe path.  This registry scopes the whole ladder protocol —
+    consecutive-failure demotion, quarantine, re-probe, promotion — to
+    the offending bucket: each compiled batch bucket gets its own
+    :class:`BackendHealth`, created lazily at first dispatch, while the
+    other buckets keep serving their fast backend untouched.
+
+    The aggregate views (``mode`` = the most-demoted bucket's current
+    mode, ``demotions`` = the chronological union with each entry
+    stamped with its ``bucket``) keep the PR 7 introspection surface —
+    ``server.health.mode`` / ``server.health.demotions`` — meaningful
+    for callers that want one number.
+    """
+
+    def __init__(self, mode: str, *, demote_after: int = 2,
+                 probe_after_s: float = 30.0, probe_backoff: float = 2.0):
+        self.base_mode = mode
+        self._kw = dict(demote_after=demote_after,
+                        probe_after_s=probe_after_s,
+                        probe_backoff=probe_backoff)
+        self.ladders: dict[int, BackendHealth] = {}
+
+    def ladder(self, bucket: int) -> BackendHealth:
+        """The (lazily created) ladder for one batch bucket."""
+        lad = self.ladders.get(bucket)
+        if lad is None:
+            lad = self.ladders[bucket] = BackendHealth(self.base_mode,
+                                                       **self._kw)
+        return lad
+
+    # ---- the BackendHealth protocol, bucket-scoped ------------------------
+    def mode_for(self, bucket: int) -> str:
+        lad = self.ladders.get(bucket)
+        return lad.mode if lad is not None else self.base_mode
+
+    def record_failure(self, bucket: int, now: float) -> str | None:
+        lad = self.ladder(bucket)
+        demoted = lad.record_failure(now)
+        if demoted is not None:
+            lad.demotions[-1]["bucket"] = bucket
+        return demoted
+
+    def record_success(self, bucket: int) -> None:
+        lad = self.ladders.get(bucket)
+        if lad is not None:
+            lad.record_success()
+
+    def probe_due(self, bucket: int, now: float) -> str | None:
+        lad = self.ladders.get(bucket)
+        return lad.probe_due(now) if lad is not None else None
+
+    def promote(self, bucket: int, mode: str) -> None:
+        self.ladder(bucket).promote(mode)
+
+    def probe_failed(self, bucket: int, mode: str, now: float) -> None:
+        self.ladder(bucket).probe_failed(mode, now)
+
+    # ---- aggregate views --------------------------------------------------
+    @property
+    def mode(self) -> str:
+        """The most-demoted bucket's current mode (the server's
+        worst-case serving rung); ``base_mode`` when nothing demoted."""
+        worst = self.base_mode
+        for lad in self.ladders.values():
+            if ladder_rank(lad.mode) > ladder_rank(worst):
+                worst = lad.mode
+        return worst
+
+    @property
+    def demotions(self) -> list[dict]:
+        """Chronological union of every bucket's demotion log, each
+        entry carrying its ``bucket``."""
+        rows = [d for lad in self.ladders.values() for d in lad.demotions]
+        return sorted(rows, key=lambda d: d["t"])
+
+    def snapshot(self, now: float) -> dict:
+        return {
+            "mode": self.mode,
+            "demotions": len(self.demotions),
+            "buckets": {b: lad.snapshot(now)
+                        for b, lad in sorted(self.ladders.items())},
         }

@@ -26,6 +26,10 @@ class Sequence:
     max_new: int
     generated: int = 0
     tokens: list = dataclasses.field(default_factory=list)
+    # Retained so a checkpointed sequence can be replay-prefilled on a
+    # different lane (cross-replica migration, DESIGN.md §14.4).  The
+    # in-lane restore path never needs it — KV pages carry the prefix.
+    prompt: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -42,11 +46,32 @@ class KVCacheManager:
     def can_admit(self) -> bool:
         return bool(self._free)
 
-    def admit(self, prompt_len: int, max_new: int) -> Sequence:
+    def admit(self, prompt_len: int, max_new: int,
+              prompt: list | None = None) -> Sequence:
         assert self._free, "no free KV slots"
         assert prompt_len + max_new <= self.max_seq, "sequence too long"
         slot = self._free.pop()
-        seq = Sequence(self._next_id, slot, prompt_len, max_new)
+        seq = Sequence(self._next_id, slot, prompt_len, max_new,
+                       prompt=list(prompt) if prompt is not None else [])
+        self._next_id += 1
+        self.active[seq.seq_id] = seq
+        return seq
+
+    def adopt(self, length: int, max_new: int, generated: int,
+              tokens: list, prompt: list | None = None) -> Sequence:
+        """Admit a *restored* sequence — one that already generated
+        tokens on this or another lane — into a fresh slot (crash
+        recovery / migration, DESIGN.md §14).  The caller is
+        responsible for rebuilding the slot's KV pages (page write-back
+        for in-lane restore, replay prefill for migration)."""
+        assert self._free, "no free KV slots"
+        assert length + (max_new - generated) <= self.max_seq, \
+            "sequence too long"
+        assert 0 < generated <= max_new and len(tokens) == generated
+        slot = self._free.pop()
+        seq = Sequence(self._next_id, slot, length, max_new,
+                       generated=generated, tokens=list(tokens),
+                       prompt=list(prompt) if prompt is not None else [])
         self._next_id += 1
         self.active[seq.seq_id] = seq
         return seq

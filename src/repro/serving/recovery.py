@@ -1,0 +1,301 @@
+"""Crash-safe serving primitives (DESIGN.md §14).
+
+Three independent mechanisms, composed by the servers:
+
+**KV checkpointing** (:class:`KVCheckpointer`) — consistent-cut
+device→host snapshots of the LM decode state.  A checkpoint captures
+*every* active sequence at one global position ``P``: per-slot KV cache
+pages, the ``Sequence`` bookkeeping, and the token register (the last
+generated token whose K/V has *not* yet been written — the next decode
+tick writes it).  Because ``LMServer`` re-checkpoints after every
+admission batch, the window between checkpoints contains only pure
+decode ticks, so every surviving sequence has exactly
+``m = pos_now − P`` uncheckpointed tokens and lockstep force-fed replay
+of those ``m`` ticks reproduces the cache — and hence every subsequent
+token — bit-exactly (§14.2 has the argument).  Snapshots are host-async
+(``copy_to_host_async``): taking one enqueues D2H copies and returns;
+the decode loop never blocks on them.
+
+**Durable request journal** (:class:`RequestJournal`) — an append-only
+JSONL write-ahead log of submit/resolve records.  Accepted submissions
+are journaled *before* they are enqueued (WAL order), terminal
+resolutions are journaled as they happen, and each append is fsynced —
+so after a hard crash (kill -9), :func:`replay_journal` can scan the
+log, find every submit without a matching resolve, and resubmit it to a
+fresh server booted from a PR 8 artifact.  The scan tolerates a torn
+tail (a half-written last line is exactly what a kill mid-append
+leaves).  Request ids continue monotonically across reopens.
+
+**Payload codecs** — journal payloads must round-trip through JSON:
+BNN image batches encode as base64(dtype, shape, bytes); LM prompts as
+plain token lists.  Deadlines are deliberately *not* replayed — they
+are wall-clock promises from a process that no longer exists.
+"""
+
+from __future__ import annotations
+
+import base64
+import dataclasses
+import json
+import os
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+from repro.serving import faults as _faults
+
+__all__ = ["SequenceCheckpoint", "CheckpointSet", "KVCheckpointer",
+           "RequestJournal", "JournalState", "replay_journal",
+           "encode_payload", "decode_payload"]
+
+
+# ---------------------------------------------------------------------------
+# KV checkpointing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SequenceCheckpoint:
+    """One sequence's share of a consistent cut: its bookkeeping plus
+    its slot's full KV pages (device arrays with D2H copies enqueued;
+    :meth:`materialize` blocks only when the pages are actually
+    needed — at restore, typically many ticks later)."""
+
+    seq_id: int
+    slot: int
+    length: int
+    max_new: int
+    generated: int
+    tokens: list
+    prompt: list
+    register: int           # last generated token, K/V not yet written
+    k_pages: Any            # (L, KV, S, hd) slice for this slot
+    v_pages: Any
+
+    def materialize(self) -> tuple[np.ndarray, np.ndarray]:
+        return np.asarray(self.k_pages), np.asarray(self.v_pages)
+
+
+@dataclasses.dataclass
+class CheckpointSet:
+    """A consistent cut: every active sequence snapshotted at one
+    global position.  Restoring *any* subset of these sequences (the
+    ones still active at fault time) into a fresh cache is valid
+    because attention reads only the owning slot's pages."""
+
+    pos: int
+    seqs: dict[int, SequenceCheckpoint]
+    reason: str             # "cadence" | "admission" | "restore"
+
+
+class KVCheckpointer:
+    """Takes consistent-cut snapshots of an LM decode state.
+
+    Holds at most one :class:`CheckpointSet` (the latest); the replay
+    bound is the distance back to it.  ``kv.snapshot`` is a fault site:
+    an injected snapshot fault raises out of :meth:`take` and the
+    caller applies the policy from §14.2 — a *cadence* snapshot fault
+    keeps the previous set (still consistent, the replay bound just
+    grows), an *admission* snapshot fault invalidates it (the old cut
+    predates the prefill and is no longer pure-decode-reachable).
+    """
+
+    def __init__(self):
+        self.set: CheckpointSet | None = None
+        self.taken = 0          # successful snapshots
+        self.failed = 0         # faulted snapshot attempts
+
+    def take(self, cache: dict, manager, tokens, pos: int,
+             reason: str = "cadence") -> CheckpointSet:
+        """Snapshot every active sequence at global position ``pos``.
+        Raises (without touching the held set) if the ``kv.snapshot``
+        fault site fires; the caller decides keep-vs-invalidate."""
+        if _faults._PLAN is not None:
+            try:
+                _faults.maybe_fault("kv.snapshot", pos=pos,
+                                    active=len(manager.active),
+                                    reason=reason)
+            except Exception:
+                self.failed += 1
+                raise
+        reg = np.asarray(tokens).reshape(-1)
+        seqs: dict[int, SequenceCheckpoint] = {}
+        for seq_id, seq in manager.active.items():
+            k = cache["k"][:, seq.slot]
+            v = cache["v"][:, seq.slot]
+            for page in (k, v):     # host-async: enqueue D2H, don't block
+                copy = getattr(page, "copy_to_host_async", None)
+                if copy is not None:
+                    copy()
+            seqs[seq_id] = SequenceCheckpoint(
+                seq_id=seq_id, slot=seq.slot, length=seq.length,
+                max_new=seq.max_new, generated=seq.generated,
+                tokens=list(seq.tokens), prompt=list(seq.prompt),
+                register=int(reg[seq.slot]), k_pages=k, v_pages=v)
+        self.set = CheckpointSet(pos=int(pos), seqs=seqs, reason=reason)
+        self.taken += 1
+        return self.set
+
+    def invalidate(self) -> None:
+        self.set = None
+
+    def snapshot(self) -> dict:
+        return {
+            "taken": self.taken,
+            "failed": self.failed,
+            "pos": self.set.pos if self.set is not None else None,
+            "seqs": len(self.set.seqs) if self.set is not None else 0,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Payload codecs
+# ---------------------------------------------------------------------------
+
+def encode_payload(kind: str, payload: Any) -> dict:
+    """JSON-safe encoding of a request payload.  ``bnn`` payloads are
+    numpy image batches; ``lm`` payloads are ``(prompt, max_new)``."""
+    if kind == "lm":
+        prompt, max_new = payload
+        return {"prompt": [int(t) for t in prompt], "max_new": int(max_new)}
+    if kind == "bnn":
+        arr = np.asarray(payload)
+        return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                "data": base64.b64encode(arr.tobytes()).decode("ascii")}
+    raise ValueError(f"unknown journal payload kind: {kind!r}")
+
+
+def decode_payload(kind: str, enc: dict) -> Any:
+    if kind == "lm":
+        return list(enc["prompt"]), int(enc["max_new"])
+    if kind == "bnn":
+        raw = base64.b64decode(enc["data"])
+        return np.frombuffer(raw, dtype=np.dtype(enc["dtype"])) \
+            .reshape(enc["shape"]).copy()
+    raise ValueError(f"unknown journal payload kind: {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Durable request journal
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class JournalState:
+    """Result of scanning a journal file."""
+
+    records: list
+    unresolved: dict[int, dict]     # jid → submit record
+    max_jid: int
+    torn_tail: bool = False
+
+
+class RequestJournal:
+    """Append-only JSONL write-ahead log of request lifecycles.
+
+    Records::
+
+        {"op": "submit",  "jid": N, "kind": "bnn"|"lm", "payload": {...}}
+        {"op": "resolve", "jid": N, "outcome": "served"|...}
+
+    Every append is flushed and fsynced before returning — ``submit``
+    must hit the disk before the request enters the scheduler, so a
+    crash at any instant leaves either (a) no trace (caller never got a
+    Request back) or (b) a journaled submit that :func:`replay_journal`
+    will resubmit.  Reopening an existing journal continues ``jid``
+    monotonically past the highest on disk.
+    """
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        state = self.scan(self.path)
+        self._next_jid = state.max_jid + 1
+        self._f = open(self.path, "a", encoding="utf-8")
+
+    # ---- appends ----------------------------------------------------------
+    def _append(self, rec: dict) -> None:
+        self._f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+    def submit(self, kind: str, payload: Any) -> int:
+        """Journal one accepted submission; returns its ``jid``."""
+        jid = self._next_jid
+        self._next_jid += 1
+        self._append({"op": "submit", "jid": jid, "kind": kind,
+                      "payload": encode_payload(kind, payload)})
+        return jid
+
+    def resolve(self, jid: int, outcome: str,
+                error: str | None = None) -> None:
+        rec = {"op": "resolve", "jid": jid, "outcome": outcome}
+        if error is not None:
+            rec["error"] = str(error)
+        self._append(rec)
+
+    def close(self) -> None:
+        self._f.close()
+
+    # ---- recovery scan ----------------------------------------------------
+    @staticmethod
+    def scan(path: str | os.PathLike) -> JournalState:
+        """Parse a journal, tolerating a torn tail: a kill -9 mid-append
+        leaves at most one half-written final line, which is dropped.
+        Corruption *before* the tail stops the scan there too — every
+        record beyond a torn line is unordered with respect to it."""
+        path = Path(path)
+        records: list[dict] = []
+        torn = False
+        if path.exists():
+            with open(path, encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        records.append(json.loads(line))
+                    except json.JSONDecodeError:
+                        torn = True
+                        break
+        unresolved: dict[int, dict] = {}
+        max_jid = -1
+        for rec in records:
+            jid = int(rec.get("jid", -1))
+            max_jid = max(max_jid, jid)
+            if rec.get("op") == "submit":
+                unresolved[jid] = rec
+            elif rec.get("op") == "resolve":
+                unresolved.pop(jid, None)
+        return JournalState(records=records, unresolved=unresolved,
+                            max_jid=max_jid, torn_tail=torn)
+
+
+def replay_journal(server, journal: RequestJournal | str | os.PathLike,
+                   kind: str | None = None) -> list:
+    """Resubmit every journaled-but-unresolved request to ``server``.
+
+    ``server`` is an :class:`~repro.serving.server.InferenceServer`
+    (``bnn`` records) or :class:`~repro.serving.lm_server.LMServer`
+    (``lm`` records); records of the other kind are skipped (one
+    journal may serve a mixed deployment).  Resubmission passes the
+    original ``jid`` so the server attaches the journaled identity
+    instead of journaling a duplicate submit — the eventual resolution
+    closes the *original* record.  Deadlines are not replayed.
+    """
+    path = journal.path if isinstance(journal, RequestJournal) else journal
+    state = RequestJournal.scan(path)
+    if kind is None:
+        kind = "lm" if hasattr(server, "manager") else "bnn"
+    replayed = []
+    for jid in sorted(state.unresolved):
+        rec = state.unresolved[jid]
+        if rec.get("kind") != kind:
+            continue
+        payload = decode_payload(kind, rec["payload"])
+        if kind == "lm":
+            prompt, max_new = payload
+            r = server.submit(prompt, max_new=max_new, jid=jid)
+        else:
+            r = server.submit(payload, jid=jid)
+        replayed.append(r)
+    return replayed

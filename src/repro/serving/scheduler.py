@@ -49,6 +49,8 @@ class Request:
     error: str | None = None          # terminal failure reason
     attempts: int = 0                 # dispatch tries so far
     not_before: float | None = None   # retry backoff: ineligible until
+    # ---- crash safety (DESIGN.md §14) -----------------------------------
+    jid: int | None = None            # durable journal id, if journaled
 
     def expired(self, now: float) -> bool:
         return (self.deadline_s is not None

@@ -61,7 +61,8 @@ from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _trace
 from repro.obs.metrics import ServingMetrics, percentile  # noqa: F401
 from repro.serving import faults as _faults
-from repro.serving.faults import BackendHealth, RetryPolicy, WatchdogTimeout
+from repro.serving.faults import (BackendHealth, BucketHealth,  # noqa: F401
+                                  RetryPolicy, WatchdogTimeout)
 from repro.serving.scheduler import BatchScheduler, Request
 
 
@@ -194,9 +195,15 @@ class InferenceServer:
                  watchdog_s: float | None = None,
                  sleep: Callable[[float], None] | None = None,
                  tenant: str | None = None,
-                 artifact: str | None = None):
+                 artifact: str | None = None,
+                 journal=None):
         self.engine = engine
         self.tenant = tenant
+        # Durable request journal (DESIGN.md §14.3): accepted submits are
+        # WAL-journaled before they enter the scheduler; terminal
+        # resolutions close them.  ``recovery.replay_journal`` resubmits
+        # unresolved records after a crash.
+        self.journal = journal
         self.preprocess = preprocess
         # Placement generalizes mesh=: duck-typed on .kind so the server
         # never imports repro.distributed (which imports this module).
@@ -237,7 +244,10 @@ class InferenceServer:
         self.watchdog_s = watchdog_s
         self._sleep = sleep if sleep is not None \
             else (lambda s: time.sleep(min(s, 0.05)))
-        self.health = BackendHealth(
+        # Per-bucket degradation ladders (DESIGN.md §14.3): one
+        # pathological bucket shape demotes only its own ladder;
+        # ``health.mode`` is the worst bucket's rung (the PR 7 surface).
+        self.health = BucketHealth(
             engine.matmul_mode, demote_after=demote_after,
             probe_after_s=probe_after_s) if degrade else None
         self._pending: _InFlight | None = None
@@ -325,11 +335,18 @@ class InferenceServer:
                         f"input {tuple(want)}")
         return None
 
+    def _journal_resolve(self, r: Request) -> None:
+        if self.journal is not None and r.jid is not None:
+            self.journal.resolve(r.jid, r.outcome, error=r.error)
+
     def _reject(self, payload: Any, reason: str, now: float,
-                deadline_s: float | None) -> Request:
+                deadline_s: float | None,
+                jid: int | None = None) -> Request:
         r = Request(payload, deadline_s=deadline_s)
+        r.jid = jid
         r.arrival_s = now
         r.resolve("rejected", error=reason)
+        self._journal_resolve(r)
         self._metrics.record_rejected()
         self.flight.record(id=r.id, outcome="rejected", error=reason,
                            arrival_s=now, done_s=now, latency_s=0.0)
@@ -338,20 +355,29 @@ class InferenceServer:
 
     # ---- request lifecycle ------------------------------------------------
     def submit(self, payload: Any, deadline_s: float | None = None,
-               now: float | None = None) -> Request:
+               now: float | None = None, jid: int | None = None) -> Request:
+        """``jid`` is the journal-replay path (DESIGN.md §14.3): the
+        record is already on disk, so the server attaches the identity
+        instead of journaling a duplicate submit."""
         # Arrival is stamped from the server's clock so latency samples
         # stay in one clock domain when a fake clock is injected.
         now = self.clock() if now is None else now
         if self.validate:
             err = self._payload_error(payload)
             if err is not None:
-                return self._reject(payload, err, now, deadline_s)
+                return self._reject(payload, err, now, deadline_s, jid=jid)
         if self.max_queue is not None \
                 and len(self.scheduler) >= self.max_queue:
             return self._reject(
                 payload, f"queue full ({len(self.scheduler)} >= "
-                         f"max_queue={self.max_queue})", now, deadline_s)
+                         f"max_queue={self.max_queue})", now, deadline_s,
+                jid=jid)
+        if self.journal is not None and jid is None:
+            # WAL order: the submit record hits disk before the request
+            # enters the scheduler — a crash in between replays it.
+            jid = self.journal.submit("bnn", payload)
         r = self.scheduler.submit(payload, deadline_s=deadline_s, now=now)
+        r.jid = jid
         _trace.instant("serve.submit", "serve", req=r.id)
         return r
 
@@ -373,6 +399,7 @@ class InferenceServer:
             requeue.append(r)
             return
         r.resolve("error", error=f"{type(exc).__name__}: {exc}")
+        self._journal_resolve(r)
         self._metrics.record_error()
         self._errored.append(r)
         self.flight.record(
@@ -381,27 +408,28 @@ class InferenceServer:
             latency_s=now - r.arrival_s)
         _trace.instant("serve.error", "serve", req=r.id)
 
-    def _note_demotion(self, now: float) -> None:
-        d = self.health.demotions[-1]
+    def _note_demotion(self, now: float, bucket: int) -> None:
+        d = self.health.ladder(bucket).demotions[-1]
         self._metrics.record_degraded()
         _obs_metrics.get_registry().event(
             "demotion", server="bnn", **d)
         self.flight.record(kind="demotion", outcome="demoted",
                            from_mode=d["from_mode"], to_mode=d["to_mode"],
-                           done_s=now)
-        _trace.instant("serve.demote", "serve",
+                           bucket=bucket, done_s=now)
+        _trace.instant("serve.demote", "serve", bucket=bucket,
                        from_mode=d["from_mode"], to_mode=d["to_mode"])
 
     def _on_batch_failure(self, batch: list[Request], exc: Exception,
                           now: float, mode: str | None,
-                          probing: bool) -> None:
-        """A whole dispatched/scattered batch failed: update backend
-        health (possibly demoting), then retry-or-fail each request."""
+                          probing: bool, bucket: int) -> None:
+        """A whole dispatched/scattered batch failed: update the
+        bucket's backend-health ladder (possibly demoting it — other
+        buckets are untouched), then retry-or-fail each request."""
         if self.health is not None:
             if probing:
-                self.health.probe_failed(mode, now)
-            elif self.health.record_failure(now) is not None:
-                self._note_demotion(now)
+                self.health.probe_failed(bucket, mode, now)
+            elif self.health.record_failure(bucket, now) is not None:
+                self._note_demotion(now, bucket)
         requeue: list[Request] = []
         for r in batch:
             self._retry_or_fail(r, exc, now, requeue)
@@ -469,18 +497,24 @@ class InferenceServer:
 
     def _try_dispatch(self, batch: list[Request], payloads: list[Any],
                       now: float) -> _InFlight | None:
-        """Dispatch with the full failure protocol: mode selection
-        (degradation ladder + quarantine re-probe), batch-level retry on
-        failure, per-row failure resolution."""
+        """Dispatch with the full failure protocol: per-bucket mode
+        selection (this bucket's degradation ladder + quarantine
+        re-probe), batch-level retry on failure, per-row failure
+        resolution."""
+        bucket = len(payloads)
         mode, probing = None, False
         if self.health is not None:
-            probe = self.health.probe_due(now)
+            # materialize this bucket's ladder at first dispatch so the
+            # per-bucket surface (metrics, snapshot) covers every bucket
+            # that actually served, not only the ones that failed
+            self.health.ladder(bucket)
+            probe = self.health.probe_due(bucket, now)
             mode, probing = ((probe, True) if probe is not None
-                             else (self.health.mode, False))
+                             else (self.health.mode_for(bucket), False))
         try:
             flight, failures = self._dispatch(batch, payloads, mode=mode)
         except Exception as e:          # noqa: BLE001 — never kill the loop
-            self._on_batch_failure(batch, e, now, mode, probing)
+            self._on_batch_failure(batch, e, now, mode, probing, bucket)
             return None
         requeue: list[Request] = []
         for r, exc in failures:
@@ -534,6 +568,7 @@ class InferenceServer:
                          n_real=len(flight.batch)):
             for r, i in zip(flight.batch, flight.row_idx):
                 r.resolve("served", host[i])
+                self._journal_resolve(r)
         self._metrics.record([now - r.arrival_s for r in flight.batch])
         for r in flight.batch:
             self.flight.record(
@@ -552,25 +587,29 @@ class InferenceServer:
         except Exception as e:          # noqa: BLE001 — never kill the loop
             now = self.clock() if now is None else now
             self._on_batch_failure(flight.batch, e, now, flight.mode,
-                                   probing=flight.probing)
+                                   probing=flight.probing,
+                                   bucket=flight.bucket)
             return []
         if self.health is not None:
             if flight.probing:
                 # The quarantined faster mode survived its probe end to
-                # end: promote back up the ladder.
-                self.health.promote(flight.mode)
-                _trace.instant("serve.promote", "serve", mode=flight.mode)
+                # end: promote this bucket's ladder back up.
+                self.health.promote(flight.bucket, flight.mode)
+                _trace.instant("serve.promote", "serve", mode=flight.mode,
+                               bucket=flight.bucket)
                 self.flight.record(kind="promotion", outcome="promoted",
                                    to_mode=flight.mode,
+                                   bucket=flight.bucket,
                                    done_s=self.clock() if now is None
                                    else now)
             else:
-                self.health.record_success()
+                self.health.record_success(flight.bucket)
         return done
 
     def _record_shed(self, shed: list[Request], now: float) -> None:
         self._metrics.record_dropped(len(shed))
         for r in shed:
+            self._journal_resolve(r)
             self.flight.record(id=r.id, outcome="shed",
                                arrival_s=r.arrival_s,
                                deadline_s=r.deadline_s, done_s=now,
@@ -634,6 +673,7 @@ class InferenceServer:
             if r.done:
                 continue
             r.resolve("error", error="drain wedged: step budget exhausted")
+            self._journal_resolve(r)
             self._metrics.record_error()
             self.flight.record(id=r.id, outcome="error", error=r.error,
                                arrival_s=r.arrival_s, done_s=now,
@@ -693,6 +733,13 @@ class InferenceServer:
         live queue depth, the current serving mode, and throughput over
         the busy window (first dispatch → last scatter)."""
         extra = {"tenant": self.tenant} if self.tenant is not None else {}
+        if self.health is not None and self.health.ladders:
+            # Per-bucket ladder state (DESIGN.md §14.3): which buckets
+            # are demoted/quarantined, independent of the worst-case
+            # ``mode`` reported below.
+            extra["bucket_health"] = {
+                b: lad.snapshot(self.clock())
+                for b, lad in sorted(self.health.ladders.items())}
         if self.pipeline_devices is not None:
             extra["placement"] = {"kind": "pipeline",
                                   "devices": [str(d) for d in

@@ -11,6 +11,7 @@ from repro.distributed.sharding import rules_for_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer
 from repro.serving import BatchScheduler
+from repro.serving.kv_cache import KVCacheManager
 
 
 class TestBinaryAlgebra:
@@ -113,6 +114,101 @@ class TestServingInvariants:
     def test_straggler_constant_never_flags(self, dt, n):
         mon = StragglerMonitor(min_samples=5)
         assert not any(mon.observe(i, dt) for i in range(n))
+
+
+class TestKVSlotLifecycle:
+    """Slot-lifecycle invariants of the paged-lite KVCacheManager under
+    random admit/step/release interleavings (the state crash recovery
+    snapshots and rebuilds, DESIGN.md §14.2): slots are conserved and
+    disjoint, utilization stays in [0, 1], and no slot is ever
+    double-freed."""
+
+    @given(st.integers(1, 6), st.integers(4, 24),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_random_interleaving_invariants(self, n_slots, max_seq, seed):
+        rng = np.random.default_rng(seed)
+        mgr = KVCacheManager(n_slots, max_seq)
+        eos = 3
+        for _ in range(60):
+            assert 0.0 <= mgr.utilization <= 1.0
+            slots = mgr.active_slots()
+            assert len(slots) == len(set(slots))            # disjoint
+            assert len(set(mgr._free)) == len(mgr._free)    # no dup free
+            assert sorted(slots + mgr._free) == list(range(n_slots))
+            op = int(rng.integers(0, 3))
+            if op == 0 and mgr.can_admit():
+                plen = int(rng.integers(1, max_seq))
+                mgr.admit(plen, int(rng.integers(1, max_seq - plen + 1)))
+            elif op == 1 and mgr.active:
+                sid = int(rng.choice(list(mgr.active)))
+                mgr.record_token(sid, int(rng.integers(0, 16)), eos)
+            elif op == 2 and mgr.active:
+                sid = int(rng.choice(list(mgr.active)))
+                mgr.release(sid)
+                with np.testing.assert_raises(KeyError):
+                    mgr.release(sid)                        # no double free
+        for sid in list(mgr.active):
+            mgr.release(sid)
+        assert mgr.utilization == 0.0
+        assert sorted(mgr._free) == list(range(n_slots))
+
+    @given(st.sampled_from(["eos", "max_new", "max_seq"]),
+           st.integers(1, 6), st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_each_termination_releases_exactly_once(self, how, max_new,
+                                                    seed):
+        """EOS, max_new exhaustion, and the max_seq guard each finish a
+        sequence through exactly one release — even when two conditions
+        trigger on the same token."""
+        rng = np.random.default_rng(seed)
+        eos, max_seq = 3, 32
+        if how == "max_seq":
+            # saturate the window so length hits max_seq on the last
+            # generated token (simultaneous with max_new — still one
+            # release)
+            plen = max_seq - max_new
+        else:
+            plen = int(rng.integers(1, max_seq - max_new + 1))
+        mgr = KVCacheManager(1, max_seq)
+        seq = mgr.admit(plen, max_new)
+        done = False
+        for i in range(max_new):
+            last = i == max_new - 1
+            if how == "eos" and last:
+                tok = eos
+            else:
+                tok = int(rng.integers(4, 16))   # never eos by accident
+            done = mgr.record_token(seq.seq_id, tok, eos)
+            if how == "eos" and last:
+                break
+        assert done
+        assert seq.seq_id not in mgr.active
+        assert mgr._free == [0] and mgr.utilization == 0.0
+        if how == "max_seq":
+            assert seq.length == max_seq
+        with np.testing.assert_raises(KeyError):
+            mgr.release(seq.seq_id)
+
+    @given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 8))
+    @settings(max_examples=20, deadline=None)
+    def test_adopt_respects_window_and_disjointness(self, plen, gen,
+                                                    extra):
+        """Adopted (restored/migrated) sequences obey the same window
+        arithmetic: length + remaining ≤ max_seq, fresh slot, fresh id."""
+        max_seq = 32
+        mgr = KVCacheManager(2, max_seq)
+        a = mgr.admit(plen, gen + extra)
+        tokens = list(range(gen))
+        b = mgr.adopt(plen + gen, gen + extra, gen, tokens,
+                      prompt=list(range(plen)))
+        assert b.seq_id != a.seq_id and b.slot != a.slot
+        assert b.tokens == tokens and b.generated == gen
+        # the adopted sequence finishes after exactly `extra` tokens
+        done = False
+        for _ in range(extra):
+            done = mgr.record_token(b.seq_id, 5, None)
+        assert done and b.seq_id not in mgr.active
 
 
 class TestRulesInvariants:

@@ -1,0 +1,667 @@
+"""Crash-safety tests (DESIGN.md §14).
+
+The three §14 mechanisms, each proven at its contract:
+
+* **KV checkpoint/restore** — a decode fault that exhausts the retry
+  budget restores from the last consistent cut and replays the ≤N
+  uncheckpointed tokens **bit-exactly** (the faulted run's token stream
+  equals the unfaulted baseline's, for N ∈ {1, 4}); the
+  ``kv.snapshot`` / ``kv.restore`` fault sites exercise the snapshot
+  policy (cadence faults keep the old cut, admission faults invalidate
+  it, restore faults burn an attempt).
+* **Durable request journal** — WAL order, fsynced appends, torn-tail
+  tolerance, jid continuation across reopens, and the end-to-end kill
+  -9 pin: a subprocess serving from an AOT artifact + journal is
+  SIGKILLed mid-stream, and a fresh process replays every
+  journaled-but-unresolved request with **zero** serve-time retraces.
+* **Per-bucket backend health** — a fault pinned to one batch bucket
+  demotes only that bucket's ladder; other buckets keep their fast
+  backend, and the demoted bucket re-probes/promotes on its own
+  (§11 ladder semantics, now bucket-scoped).
+
+Plus the §14.4 migration path: an LMReplicaGroup lane whose restore
+budget is exhausted hands its in-flight sequences to a healthy lane,
+prefix-preserved.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import bnn_model
+from repro.core.bnn_model import BConv, FloatDense, Pool
+from repro.serving import InferenceServer, PhoneBitEngine, faults
+from repro.serving.faults import (BucketHealth, FaultPlan, FaultSpec,
+                                  RetryPolicy)
+from repro.serving.recovery import (RequestJournal, decode_payload,
+                                    encode_payload, replay_journal)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    spec = [BConv(3, 32, kernel=3, stride=1, pad=1, first=True),
+            Pool(2, 2), FloatDense(8 * 8 * 32, 10)]
+    params = bnn_model.init_params(jax.random.key(0), spec)
+    return PhoneBitEngine.from_trained(params, spec, (16, 16))
+
+
+def _images(n, rng=None):
+    rng = rng or np.random.default_rng(0)
+    return [rng.integers(0, 256, (16, 16, 3), dtype=np.uint8)
+            for _ in range(n)]
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def sleep(self, s: float) -> None:
+        self.t += max(s, 0.0)
+
+
+def _server(engine, clock=None, **kw):
+    clock = clock or FakeClock()
+    kw.setdefault("buckets", (1, 2, 4))
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_s", 0.0)
+    return InferenceServer(engine, clock=clock, sleep=clock.sleep, **kw), \
+        clock
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_plan():
+    yield
+    faults.uninstall()
+
+
+# --------------------------------------------------------------------------
+# Request journal: format, WAL order, torn tails
+# --------------------------------------------------------------------------
+
+class TestRequestJournal:
+    def test_submit_resolve_scan(self, tmp_path):
+        j = RequestJournal(tmp_path / "j.jsonl")
+        a = j.submit("lm", ([1, 2, 3], 4))
+        b = j.submit("lm", ([5], 2))
+        j.resolve(a, "served")
+        j.close()
+        state = RequestJournal.scan(tmp_path / "j.jsonl")
+        assert not state.torn_tail
+        assert list(state.unresolved) == [b]
+        assert state.unresolved[b]["payload"]["prompt"] == [5]
+        assert state.max_jid == b
+
+    def test_jid_continues_across_reopen(self, tmp_path):
+        j1 = RequestJournal(tmp_path / "j.jsonl")
+        last = [j1.submit("lm", ([1], 1)) for _ in range(3)][-1]
+        j1.close()
+        j2 = RequestJournal(tmp_path / "j.jsonl")
+        assert j2.submit("lm", ([2], 1)) == last + 1
+        j2.close()
+
+    def test_torn_tail_tolerated(self, tmp_path):
+        j = RequestJournal(tmp_path / "j.jsonl")
+        a = j.submit("lm", ([1, 2], 4))
+        j.submit("lm", ([3], 2))
+        j.close()
+        # a kill -9 mid-append leaves a half-written last line
+        with open(tmp_path / "j.jsonl", "a") as f:
+            f.write('{"op": "resolve", "jid')
+        state = RequestJournal.scan(tmp_path / "j.jsonl")
+        assert state.torn_tail
+        assert len(state.unresolved) == 2      # both submits survive
+        assert a in state.unresolved
+
+    def test_payload_roundtrip(self):
+        prompt, max_new = decode_payload(
+            "lm", encode_payload("lm", ([7, 8, 9], 5)))
+        assert prompt == [7, 8, 9] and max_new == 5
+        img = _images(1)[0]
+        back = decode_payload("bnn", encode_payload("bnn", img))
+        np.testing.assert_array_equal(back, img)
+        assert back.dtype == img.dtype
+        with pytest.raises(ValueError):
+            encode_payload("nope", None)
+
+    def test_fresh_journal_on_missing_file(self, tmp_path):
+        state = RequestJournal.scan(tmp_path / "absent.jsonl")
+        assert state.records == [] and state.max_jid == -1
+
+
+class TestJournalServing:
+    def test_wal_closes_every_record(self, tiny_engine, tmp_path):
+        j = RequestJournal(tmp_path / "j.jsonl")
+        server, _ = _server(tiny_engine, journal=j)
+        rs = [server.submit(p) for p in _images(3)]
+        server.drain()
+        j.close()
+        assert all(r.outcome == "served" for r in rs)
+        state = RequestJournal.scan(tmp_path / "j.jsonl")
+        assert not state.unresolved
+        assert sum(1 for r in state.records if r["op"] == "submit") == 3
+
+    def test_rejected_submit_not_journaled(self, tiny_engine, tmp_path):
+        j = RequestJournal(tmp_path / "j.jsonl")
+        server, _ = _server(tiny_engine, journal=j)
+        r = server.submit(np.zeros((4, 4, 3), np.uint8))     # wrong shape
+        j.close()
+        assert r.outcome == "rejected"
+        # rejects never entered the system — nothing to replay
+        assert RequestJournal.scan(tmp_path / "j.jsonl").records == []
+
+    def test_replay_resubmits_unresolved(self, tiny_engine, tmp_path):
+        img = _images(1)[0]
+        j = RequestJournal(tmp_path / "j.jsonl")
+        j.submit("bnn", img)                   # journaled, never served
+        j.close()
+        server, _ = _server(tiny_engine,
+                            journal=RequestJournal(tmp_path / "j.jsonl"))
+        rs = replay_journal(server, tmp_path / "j.jsonl")
+        server.drain()
+        server.journal.close()
+        assert len(rs) == 1 and rs[0].outcome == "served"
+        np.testing.assert_array_equal(np.asarray(rs[0].payload), img)
+        # the replayed serve closed the ORIGINAL record (same jid),
+        # and did not journal a duplicate submit
+        state = RequestJournal.scan(tmp_path / "j.jsonl")
+        assert not state.unresolved
+        assert sum(1 for r in state.records if r["op"] == "submit") == 1
+
+    def test_replay_skips_other_kind(self, tiny_engine, tmp_path):
+        j = RequestJournal(tmp_path / "j.jsonl")
+        j.submit("lm", ([1, 2], 4))            # an LM record in a BNN lane
+        j.submit("bnn", _images(1)[0])
+        j.close()
+        server, _ = _server(tiny_engine)
+        rs = replay_journal(server, tmp_path / "j.jsonl")
+        server.drain()
+        assert len(rs) == 1 and rs[0].outcome == "served"
+
+
+# --------------------------------------------------------------------------
+# Per-bucket backend health (§14.3)
+# --------------------------------------------------------------------------
+
+class TestBucketHealthUnit:
+    def test_demotion_is_bucket_scoped(self):
+        h = BucketHealth("xla_pm1", demote_after=2)
+        assert h.record_failure(4, now=0.0) is None
+        assert h.record_failure(4, now=1.0) == "xla"
+        assert h.mode_for(4) == "xla"
+        assert h.mode_for(2) == "xla_pm1"      # untouched ladder
+        assert h.mode == "xla"                 # aggregate = worst rung
+        assert h.demotions == [{"t": 1.0, "from_mode": "xla_pm1",
+                                "to_mode": "xla", "bucket": 4}]
+
+    def test_success_on_one_bucket_keeps_others_streaks(self):
+        h = BucketHealth("xla_pm1", demote_after=2)
+        h.record_failure(4, now=0.0)
+        h.record_success(2)                    # different ladder
+        assert h.record_failure(4, now=1.0) == "xla"
+
+    def test_probe_and_promote_per_bucket(self):
+        h = BucketHealth("xla_pm1", demote_after=1, probe_after_s=10.0)
+        h.record_failure(4, now=0.0)
+        assert h.probe_due(2, now=100.0) is None   # healthy: no probe
+        assert h.probe_due(4, now=5.0) is None     # still quarantined
+        assert h.probe_due(4, now=10.0) == "xla_pm1"
+        h.promote(4, "xla_pm1")
+        assert h.mode_for(4) == "xla_pm1" and h.mode == "xla_pm1"
+
+    def test_snapshot_shape(self):
+        h = BucketHealth("xla_pm1", demote_after=1)
+        h.record_failure(4, now=0.0)
+        h.ladder(2)                    # materialized at first dispatch
+        h.record_success(2)
+        snap = h.snapshot(now=1.0)
+        assert snap["mode"] == "xla" and snap["demotions"] == 1
+        assert sorted(snap["buckets"]) == [2, 4]
+        assert snap["buckets"][4]["mode"] == "xla"
+        assert snap["buckets"][2]["mode"] == "xla_pm1"
+
+
+class TestPerBucketIsolation:
+    """The acceptance scenario: a fault pinned to ONE batch bucket
+    demotes only that bucket's ladder; other buckets keep serving the
+    fast backend, and the demoted bucket re-probes and promotes on its
+    own quarantine clock (§11 ladder semantics, bucket-scoped)."""
+
+    def _stormy(self, tiny_engine, **kw):
+        eng = PhoneBitEngine(spec=tiny_engine.spec,
+                             packed=tiny_engine.packed,
+                             input_hw=tiny_engine.input_hw,
+                             matmul_mode="xla_pm1")
+        kw.setdefault("retry", RetryPolicy(max_attempts=4,
+                                           backoff_base_s=0.001,
+                                           jitter=0.0))
+        return _server(eng, **kw)
+
+    def test_one_bucket_demotes_others_untouched(self, tiny_engine):
+        server, clock = self._stormy(tiny_engine, demote_after=1,
+                                     probe_after_s=10.0)
+        server.compile_buckets()
+        faults.install(FaultPlan([
+            FaultSpec("server.dispatch", "device_fault", times=1,
+                      match={"mode": "xla_pm1", "bucket": 2})]))
+        try:
+            r2 = [server.submit(p) for p in _images(2)]   # → bucket 2
+            server.drain()
+            assert server.health.mode_for(2) == "xla"     # demoted
+            assert server.health.mode == "xla"            # worst rung
+            # other buckets still serve the fast backend, no probe
+            r1 = server.submit(_images(1)[0])             # → bucket 1
+            r4 = [server.submit(p) for p in _images(4)]   # → bucket 4
+            server.drain()
+        finally:
+            faults.uninstall()
+        assert all(r.outcome == "served" for r in r2 + [r1] + r4)
+        assert server.health.mode_for(1) == "xla_pm1"
+        assert server.health.mode_for(4) == "xla_pm1"
+        demos = server.health.demotions
+        assert len(demos) == 1 and demos[0]["bucket"] == 2
+        flights = [f for f in server.flight.dump()
+                   if f.get("kind") == "demotion"]
+        assert flights and flights[0]["bucket"] == 2
+        bh = server.metrics()["bucket_health"]
+        assert bh[2]["mode"] == "xla" and bh[1]["mode"] == "xla_pm1"
+
+    def test_demoted_bucket_reprobes_and_promotes(self, tiny_engine):
+        server, clock = self._stormy(tiny_engine, demote_after=1,
+                                     probe_after_s=10.0)
+        server.compile_buckets()
+        faults.install(FaultPlan([
+            FaultSpec("server.dispatch", "device_fault", times=1,
+                      match={"mode": "xla_pm1", "bucket": 2})]))
+        try:
+            rs = [server.submit(p) for p in _images(2)]
+            server.drain()
+            assert server.health.mode_for(2) == "xla"
+            clock.t += 60.0                    # quarantine expires
+            # bucket-1 traffic must NOT probe the 2-bucket's ladder
+            r1 = server.submit(_images(1)[0])
+            server.drain()
+            assert server.health.mode_for(2) == "xla"
+            # 2-bucket traffic probes and promotes its own ladder
+            rp = [server.submit(p) for p in _images(2)]
+            server.drain()
+        finally:
+            faults.uninstall()
+        assert all(r.outcome == "served" for r in rs + [r1] + rp)
+        assert server.health.mode_for(2) == "xla_pm1"
+        promos = [f for f in server.flight.dump()
+                  if f.get("kind") == "promotion"]
+        assert promos and promos[-1]["bucket"] == 2
+
+
+# --------------------------------------------------------------------------
+# KV checkpoint / restore (§14.2) — LM decode loop
+# --------------------------------------------------------------------------
+
+class TestCheckpointRestore:
+    @pytest.fixture(scope="class")
+    def lm(self):
+        from repro.distributed.sharding import rules_for_mesh
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import transformer
+        from repro.serving.lm_server import LMServer
+
+        cfg = transformer.LMConfig(name="t", n_layers=1, d_model=32,
+                                   n_heads=2, n_kv_heads=2, d_head=16,
+                                   d_ff=64, vocab=64, tie_embeddings=True)
+        mesh = make_host_mesh(data=1, model=1)
+        rules = rules_for_mesh(mesh)
+        with mesh:
+            params = transformer.init_params(jax.random.key(0), cfg, ep=1)
+            yield dict(cfg=cfg, rules=rules, params=params, mesh=mesh,
+                       LMServer=LMServer)
+
+    def _mk(self, lm, **kw):
+        kw.setdefault("n_slots", 2)
+        kw.setdefault("max_seq", 32)
+        return lm["LMServer"](cfg=lm["cfg"], rules=lm["rules"],
+                              params=lm["params"], **kw)
+
+    @pytest.mark.parametrize("every", [1, 4])
+    def test_restore_is_bitexact(self, lm, every):
+        """The §14.2 acceptance pin: a decode fault that exhausts the
+        retry budget mid-generation restores from the last cut, replays
+        the ≤N uncheckpointed tokens, and the final token stream equals
+        the unfaulted baseline's bit for bit."""
+        with lm["mesh"]:
+            base = self._mk(lm)
+            rb = base.submit([1, 2, 3], max_new=8)
+            base.drain()
+            assert rb.outcome == "served"
+
+            s = self._mk(lm, checkpoint_every=every)
+            r = s.submit([1, 2, 3], max_new=8)
+            faults.install(FaultPlan([
+                FaultSpec("lm.step", "device_fault", times=4, after=2)]))
+            try:
+                s.drain()
+            finally:
+                faults.uninstall()
+            assert r.outcome == "served"
+            assert r.result == rb.result           # bit-exact
+            rec = s.metrics()["recovery"]
+            assert rec["restores"] >= 1
+            assert rec["checkpoint_every"] == every
+            restored = [f for f in s.flight.dump()
+                        if f.get("kind") == "restore"
+                        and f.get("outcome") == "restored"]
+            assert restored
+            assert all(f["replayed"] <= every for f in restored)
+
+    def test_multi_sequence_restore_bitexact(self, lm):
+        """Both in-flight sequences survive one restore (slot remap is
+        safe: attention reads only the owning slot's pages)."""
+        with lm["mesh"]:
+            base = self._mk(lm)
+            b1 = base.submit([1, 2, 3], max_new=6)
+            b2 = base.submit([4, 5], max_new=6)
+            base.drain()
+
+            s = self._mk(lm, checkpoint_every=2)
+            r1 = s.submit([1, 2, 3], max_new=6)
+            r2 = s.submit([4, 5], max_new=6)
+            faults.install(FaultPlan([
+                FaultSpec("lm.step", "device_fault", times=3, after=1)]))
+            try:
+                s.drain()
+            finally:
+                faults.uninstall()
+            assert (r1.outcome, r2.outcome) == ("served", "served")
+            assert r1.result == b1.result and r2.result == b2.result
+            assert s.restores >= 1
+
+    def test_cadence_snapshot_fault_keeps_previous_cut(self, lm):
+        with lm["mesh"]:
+            s = self._mk(lm, checkpoint_every=1)
+            s.submit([1, 2, 3], max_new=6)
+            s.serve_tick()                     # admission cut + 1 tick
+            good = s.checkpointer.set
+            assert good is not None
+            faults.install(FaultPlan([
+                FaultSpec("kv.snapshot", "device_fault", times=1,
+                          match={"reason": "cadence"})]))
+            try:
+                s.serve_tick()                 # cadence snapshot faults
+            finally:
+                faults.uninstall()
+            # policy: the previous cut survives — replay bound grows
+            assert s.checkpointer.set is good
+            assert s.checkpointer.failed == 1
+            s.drain()
+
+    def test_admission_snapshot_fault_invalidates(self, lm):
+        with lm["mesh"]:
+            s = self._mk(lm, checkpoint_every=4)
+            faults.install(FaultPlan([
+                FaultSpec("kv.snapshot", "device_fault", times=1,
+                          match={"reason": "admission"})]))
+            try:
+                r = s.submit([1, 2, 3], max_new=6)
+                s.serve_tick()                 # admission snapshot faults
+            finally:
+                faults.uninstall()
+            # policy: the old cut predates the prefill — no cut held
+            assert s.checkpointer.set is None
+            assert s.checkpointer.failed == 1
+            s.drain()
+            assert r.outcome == "served"       # serving is unaffected
+
+    def test_restore_fault_burns_attempt_then_succeeds(self, lm):
+        with lm["mesh"]:
+            s = self._mk(lm, checkpoint_every=2, max_restore_attempts=2)
+            r = s.submit([1, 2, 3], max_new=8)
+            faults.install(FaultPlan([
+                FaultSpec("lm.step", "device_fault", times=3, after=1),
+                FaultSpec("kv.restore", "device_fault", times=1)]))
+            try:
+                s.drain()
+            finally:
+                faults.uninstall()
+            assert r.outcome == "served"
+            assert s.restores == 1
+            fails = [f for f in s.flight.dump()
+                     if f.get("outcome") == "restore_failed"]
+            assert len(fails) == 1 and fails[0]["attempt"] == 1
+
+    def test_recovery_disabled_errors_inflight(self, lm):
+        """checkpoint_every=None is the pre-§14 contract: the in-flight
+        batch resolves ``error`` (taxonomy parity with the BNN server:
+        terminal outcome + flight record with the token count)."""
+        with lm["mesh"]:
+            s = self._mk(lm)
+            r = s.submit([1, 2, 3], max_new=8)
+            faults.install(FaultPlan([
+                FaultSpec("lm.step", "device_fault", times=8, after=1)]))
+            try:
+                s.drain()
+            finally:
+                faults.uninstall()
+            assert r.outcome == "error" and r.done
+            errs = [f for f in s.flight.dump()
+                    if f.get("outcome") == "error"]
+            assert errs and "n_tokens" in errs[-1]
+
+    def test_restore_attempts_exhausted_errors(self, lm):
+        with lm["mesh"]:
+            s = self._mk(lm, checkpoint_every=2, max_restore_attempts=1)
+            r = s.submit([1, 2, 3], max_new=8)
+            # every restore faults too: the single attempt burns, then
+            # the in-flight sequence errors (bounded, never loops)
+            faults.install(FaultPlan([
+                FaultSpec("lm.step", "device_fault", times=32, after=1),
+                FaultSpec("kv.restore", "device_fault", times=32)]))
+            try:
+                s.drain()
+            finally:
+                faults.uninstall()
+            assert r.outcome == "error" and s.restores == 0
+
+
+# --------------------------------------------------------------------------
+# Cross-lane migration (§14.4)
+# --------------------------------------------------------------------------
+
+class TestMigration:
+    @pytest.fixture(scope="class")
+    def lm(self):
+        from repro.distributed.sharding import rules_for_mesh
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import transformer
+
+        cfg = transformer.LMConfig(name="t", n_layers=1, d_model=32,
+                                   n_heads=2, n_kv_heads=2, d_head=16,
+                                   d_ff=64, vocab=64, tie_embeddings=True)
+        mesh = make_host_mesh(data=1, model=1)
+        rules = rules_for_mesh(mesh)
+        with mesh:
+            params = transformer.init_params(jax.random.key(0), cfg, ep=1)
+            yield dict(cfg=cfg, rules=rules, params=params, mesh=mesh)
+
+    def test_quarantined_lane_evacuates_to_healthy_lane(self, lm):
+        from repro.distributed.replicas import LMReplicaGroup
+
+        with lm["mesh"]:
+            grp = LMReplicaGroup(lm["cfg"], lm["rules"], lm["params"],
+                                 n_slots=2, max_seq=32, n_lanes=2,
+                                 checkpoint_every=2,
+                                 max_restore_attempts=1,
+                                 probe_after_s=30.0)
+            r = grp.submit([1, 2, 3], max_new=8, lane="lm0")
+            # lm0's decode faults forever: in-lane restore replays into
+            # the same fault, so the restore budget exhausts and the
+            # sequence must migrate to lm1
+            faults.install(FaultPlan([
+                FaultSpec("lm.step", "device_fault", times=1000,
+                          match={"tenant": "lm0"})]))
+            try:
+                grp.drain()
+            finally:
+                faults.uninstall()
+            assert r.outcome == "served"
+            assert len(r.result) == 8
+            assert grp.migrations == 1
+            lm0 = grp.lanes["lm0"]
+            assert lm0.quarantines == 1
+            assert lm0.quarantined(grp.clock())
+            adopted = [f for f in grp.lanes["lm1"].server.flight.dump()
+                       if f.get("kind") == "migration"]
+            assert adopted and adopted[0]["src"] == "lm0"
+            m = grp.metrics()
+            assert m["migrations"] == 1
+            assert m["routing"]["lm0"]["quarantined"] is True
+
+    def test_migration_preserves_emitted_prefix(self, lm):
+        """§14.4: migration is prefix-preserving — tokens the origin
+        lane already emitted reach the caller verbatim; only future
+        tokens come from the adopting lane."""
+        from repro.distributed.replicas import LMReplicaGroup
+
+        with lm["mesh"]:
+            grp = LMReplicaGroup(lm["cfg"], lm["rules"], lm["params"],
+                                 n_slots=2, max_seq=32, n_lanes=2,
+                                 checkpoint_every=1,
+                                 max_restore_attempts=1)
+            r = grp.submit([1, 2, 3], max_new=8, lane="lm0")
+            s0 = grp.lanes["lm0"].server
+            # run clean ticks on lm0 so a known prefix exists
+            for _ in range(3):
+                grp.serve_tick()
+            prefix = list(next(iter(s0.manager.active.values())).tokens)
+            assert prefix
+            faults.install(FaultPlan([
+                FaultSpec("lm.step", "device_fault", times=1000,
+                          match={"tenant": "lm0"})]))
+            try:
+                grp.drain()
+            finally:
+                faults.uninstall()
+            assert r.outcome == "served"
+            assert r.result[:len(prefix)] == prefix
+
+    def test_routing_steers_around_quarantined_lane(self, lm):
+        from repro.distributed.replicas import LMReplicaGroup
+
+        with lm["mesh"]:
+            grp = LMReplicaGroup(lm["cfg"], lm["rules"], lm["params"],
+                                 n_slots=2, max_seq=32, n_lanes=2,
+                                 checkpoint_every=2,
+                                 max_restore_attempts=1)
+            r = grp.submit([1, 2, 3], max_new=4, lane="lm0")
+            faults.install(FaultPlan([
+                FaultSpec("lm.step", "device_fault", times=1000,
+                          match={"tenant": "lm0"})]))
+            try:
+                grp.drain()
+            finally:
+                faults.uninstall()
+            assert r.outcome == "served" and grp.migrations == 1
+            # unpinned submits now route to the healthy lane only
+            r2 = grp.submit([4, 5], max_new=4)
+            assert grp.lanes["lm1"].server.queue_depth == 1
+            assert grp.lanes["lm0"].server.queue_depth == 0
+            grp.drain()
+            assert r2.outcome == "served"
+
+
+# --------------------------------------------------------------------------
+# kill -9 → artifact + journal restart, end to end in fresh processes
+# --------------------------------------------------------------------------
+
+KILL_SPEC = """
+SPEC = [BConv(3, 16, kernel=3, stride=1, pad=1, first=True),
+        Pool(2, 2), FloatDense(8 * 8 * 16, 10)]
+params = bnn_model.init_params(jax.random.key(0), SPEC)
+eng = PhoneBitEngine.from_trained(params, SPEC, (16, 16))
+"""
+
+
+def test_kill9_journal_replay_recovers_all(tmp_path):
+    """The §14.3 pin: a serving process is SIGKILLed mid-stream; a
+    fresh process boots from the same AOT artifact + journal, replays
+    every journaled-but-unresolved request, resolves all of them, and
+    never traces (zero serve-time retraces)."""
+    from repro.serving import export_artifact
+
+    spec = [BConv(3, 16, kernel=3, stride=1, pad=1, first=True),
+            Pool(2, 2), FloatDense(8 * 8 * 16, 10)]
+    params = bnn_model.init_params(jax.random.key(0), spec)
+    eng = PhoneBitEngine.from_trained(params, spec, (16, 16))
+    export_artifact(eng, tmp_path / "art", buckets=(1, 2))
+
+    prelude = textwrap.dedent("""
+        import os, sys
+        os.environ["REPRO_AUTOTUNE_CACHE"] = "0"
+        sys.path.insert(0, {src!r})
+        import jax, numpy as np
+        from repro.core import bnn_model
+        from repro.core.bnn_model import BConv, FloatDense, Pool
+        from repro.serving import InferenceServer, PhoneBitEngine
+        from repro.serving.recovery import RequestJournal, replay_journal
+    """).format(src=str(REPO / "src")) + textwrap.dedent(KILL_SPEC)
+
+    kill = prelude + textwrap.dedent("""
+        import signal
+        server = InferenceServer(
+            eng, artifact={art!r}, buckets=(1, 2), max_batch=2,
+            max_wait_s=0.0, journal=RequestJournal({jpath!r}))
+        rng = np.random.default_rng(3)
+        for _ in range(8):
+            server.submit(rng.integers(0, 256, (16, 16, 3),
+                                       dtype=np.uint8))
+        for _ in range(3):             # resolve a prefix, not the tail
+            server.step(force=True)
+        os.kill(os.getpid(), signal.SIGKILL)
+    """).format(art=str(tmp_path / "art"), jpath=str(tmp_path / "j.jsonl"))
+    p1 = subprocess.run([sys.executable, "-c", kill], capture_output=True,
+                        text=True, timeout=420, env=dict(os.environ))
+    assert p1.returncode == -9, \
+        f"STDOUT:\n{p1.stdout}\nSTDERR:\n{p1.stderr}"
+
+    pre = RequestJournal.scan(tmp_path / "j.jsonl")
+    assert pre.unresolved, "kill phase resolved everything — nothing to prove"
+
+    recover = prelude + textwrap.dedent("""
+        import json
+        jpath = {jpath!r}
+        pre = RequestJournal.scan(jpath)
+        server = InferenceServer(
+            eng, artifact={art!r}, buckets=(1, 2), max_batch=2,
+            max_wait_s=0.0, journal=RequestJournal(jpath))
+        rs = replay_journal(server, jpath)
+        server.drain()
+        post = RequestJournal.scan(jpath)
+        print(json.dumps({{
+            "journaled_unresolved": len(pre.unresolved),
+            "replayed": len(rs),
+            "recovered": sum(1 for r in rs if r.outcome == "served"),
+            "unresolved_after": len(post.unresolved),
+            "trace_count": eng.trace_count,
+        }}))
+    """).format(art=str(tmp_path / "art"), jpath=str(tmp_path / "j.jsonl"))
+    p2 = subprocess.run([sys.executable, "-c", recover],
+                        capture_output=True, text=True, timeout=420,
+                        env=dict(os.environ))
+    assert p2.returncode == 0, \
+        f"STDOUT:\n{p2.stdout}\nSTDERR:\n{p2.stderr}"
+    rec = json.loads(p2.stdout.strip().splitlines()[-1])
+    assert rec["journaled_unresolved"] == len(pre.unresolved) > 0
+    assert rec["replayed"] == rec["journaled_unresolved"]
+    assert rec["recovered"] == rec["journaled_unresolved"]
+    assert rec["unresolved_after"] == 0
+    assert rec["trace_count"] == 0         # artifact boot, zero retraces

@@ -444,11 +444,13 @@ class TestDegradation:
             server.drain()
             assert server.health.mode == "xla"       # demoted
             clock.t += 60.0                          # quarantine expires
-            r2 = server.submit(_images(1)[0])
+            # Health is per-bucket (§14.3): the demotion hit the
+            # 2-bucket, so the probe needs 2-bucket traffic.
+            r2 = [server.submit(p) for p in _images(2)]
             server.drain()
         finally:
             faults.uninstall()
-        assert r2.outcome == "served"
+        assert all(r.outcome == "served" for r in r2)
         assert server.health.mode == "xla_pm1"       # probe promoted
         promos = [f for f in server.flight.dump()
                   if f.get("kind") == "promotion"]
@@ -655,10 +657,17 @@ class TestEnduranceSmoke:
         assert s["bitexact_ok"] is True
         assert s["ok"] is True
         names = [sc["scenario"] for sc in report["scenarios"]]
-        assert names == ["steady", "fault_storm"]
+        assert names == ["steady", "fault_storm", "kill_recover"]
         storm = report["scenarios"][1]
         assert storm["faults_injected"] > 0
         assert len(storm["demotions"]) >= 1
+        killrec = report["scenarios"][2]
+        assert killrec["ok"] is True
+        assert killrec["killed"] is True
+        assert killrec["journaled_unresolved"] > 0
+        assert killrec["recovered_fraction"] == 1.0
+        assert killrec["unresolved_after"] == 0
+        assert killrec["trace_count"] == 0
 
 
 # --------------------------------------------------------------------------
@@ -756,11 +765,13 @@ class TestDistributedFaults:
             r1 = grp.replicas["r1"]
             assert r1.server.health.mode == "xla" and not r1.healthy
             clock.t += 60.0                      # quarantine expires
-            r2 = grp.submit(_images(1)[0], replica="r1")
+            # Health is per-bucket (§14.3): the demotion hit the
+            # 2-bucket, so the probe needs 2-bucket traffic.
+            r2 = [grp.submit(p, replica="r1") for p in _images(2)]
             grp.drain()
         finally:
             faults.uninstall()
-        assert all(r.outcome == "served" for r in rs + [r2])
+        assert all(r.outcome == "served" for r in rs + r2)
         r1 = grp.replicas["r1"]
         assert r1.server.health.mode == "xla_pm1"    # probe promoted
         assert r1.healthy
